@@ -1,0 +1,81 @@
+"""Kernel microbenchmarks: XLA reference-path wall times on the host.
+
+interpret=True Pallas timing is emulation (meaningless for TPU), so the
+wall numbers here time the XLA paths these kernels replace, sized to the
+paper's decode workload; the TPU-relevant throughput claims come from the
+dry-run roofline instead. Derived column = bytes touched / time (GB/s proxy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import quantization as qz
+from repro.core.histogram_topk import histogram_topk
+from repro.core.maxpool import maxpool1d_reuse
+from repro.kernels.flash_decode.ref import sparse_flash_decode_ref
+from repro.kernels.score_est.ref import score_estimate_ref
+
+
+def run(n: int = 32768, bh: int = 8, r: int = 64, k: int = 1024) -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = ["kernel_bench,name,us_per_call,derived"]
+
+    kf = jnp.asarray(rng.normal(size=(bh, n, r)), jnp.float32)
+    k2 = qz.quantize_key_features(kf)
+    words = qz.pack2bit(k2.codes)
+    qf = jnp.asarray(rng.normal(size=(bh, 4, r)), jnp.float32)
+    q3 = qz.quantize_query_features(qf)
+    f = jax.jit(score_estimate_ref)
+    us = time_call(f, q3.codes, q3.scale, words, k2.scale, k2.zero)
+    bytes_read = words.size * 4 + k2.scale.size * 8
+    rows.append(f"kernel_bench,score_est,{us:.1f},{bytes_read/us/1e3:.2f}GB/s")
+
+    bins = jnp.asarray(rng.integers(1, 256, size=(bh, n)), jnp.uint8)
+    f = jax.jit(lambda b: histogram_topk(b, k, k_cap=int(k * 1.25) // 128 * 128))
+    us = time_call(f, bins)
+    rows.append(f"kernel_bench,hist_topk,{us:.1f},{bins.size/us/1e3:.2f}Gelem/s")
+
+    f = jax.jit(lambda b: maxpool1d_reuse(b, 7))
+    us = time_call(f, bins)
+    rows.append(f"kernel_bench,maxpool_w7,{us:.1f},{bins.size/us/1e3:.2f}Gelem/s")
+
+    c = int(k * 1.25) // 128 * 128
+    kc = jnp.asarray(rng.integers(-127, 128, size=(bh, c, 128)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-127, 128, size=(bh, c, 128)), jnp.int8)
+    ks = jnp.asarray(rng.random((bh, c)), jnp.float32)
+    vs = jnp.asarray(rng.random((bh, c)), jnp.float32)
+    mask = jnp.ones((bh, c), bool)
+    qd = jnp.asarray(rng.normal(size=(bh, 4, 128)), jnp.float32)
+    f = jax.jit(sparse_flash_decode_ref)
+    us = time_call(f, qd, kc, ks, vc, vs, mask)
+    rows.append(f"kernel_bench,flash_decode,{us:.1f},{(kc.size+vc.size)/us/1e3:.2f}GB/s")
+
+    # end-to-end salca decode step vs dense decode (XLA, host CPU)
+    from repro.core import SalcaParams, prefill_cache, salca_decode_attention
+    from repro.core.attention import dense_decode_from_cache
+    B, T, H, KV, HD = 1, n, 8, 8, 128
+    kk = jnp.asarray(rng.normal(size=(B, T, KV, HD)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(B, T, KV, HD)), jnp.float32)
+    params = SalcaParams.for_seq(T, retention=0.05)
+    cache = prefill_cache(kk, vv, max_seq=T, params=params)
+    q = jnp.asarray(rng.normal(size=(B, H, HD)), jnp.float32)
+    f_salca = jax.jit(lambda q, c: salca_decode_attention(q, c, params))
+    f_dense = jax.jit(dense_decode_from_cache)
+    us_s = time_call(f_salca, q, cache)
+    us_d = time_call(f_dense, q, cache)
+    rows.append(f"kernel_bench,salca_decode_e2e,{us_s:.1f},{us_d/us_s:.2f}x_vs_dense")
+    rows.append(f"kernel_bench,dense_decode_e2e,{us_d:.1f},1.00x")
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

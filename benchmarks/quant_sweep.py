@@ -1,0 +1,83 @@
+"""Paper Table 7 proxy: minimum-quantization-width design-space exploration.
+
+Sweeps Key schemes {1-bit sign, 2/3-bit sym/asym, MSB-2/3} at full-precision
+Query, then Query widths {1..4-bit sym} at 2-bit-asym Key, measuring ranking
+fidelity = overlap of the top-10% selection against the full-precision
+selection (the paper's criterion). Expected (and asserted in tests):
+k_2_asy ≈ baseline ≫ k_2_sym, k_1; q_3 ≈ q_4 ≫ q_2, q_1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import synthetic_attention_case, true_scores
+from repro.core import quantization as qz
+from repro.core.heavy_channels import extract_channels, heavy_channel_indices
+
+
+def _overlap_topfrac(s_ref, s_test, frac=0.10):
+    n = s_ref.shape[-1]
+    kk = max(1, int(n * frac))
+    ov = []
+    ref = np.asarray(s_ref)
+    test = np.asarray(s_test)
+    flat_r = ref.reshape(-1, n)
+    flat_t = test.reshape(-1, n)
+    for r, t in zip(flat_r, flat_t):
+        a = set(np.argsort(r)[::-1][:kk].tolist())
+        b = set(np.argsort(t)[::-1][:kk].tolist())
+        ov.append(len(a & b) / kk)
+    return float(np.mean(ov))
+
+
+def run(seed: int = 0, T: int = 2048, s_f: float = 0.5) -> list[str]:
+    q, k, v, _ = synthetic_attention_case(seed, T=T)
+    B, H, HD = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    r = int(HD * s_f)
+    kt = k.transpose(0, 2, 1, 3)                      # (B,KV,T,HD)
+    idx = heavy_channel_indices(kt, r)
+    kf = extract_channels(kt, idx)                    # (B,KV,T,r)
+    qg = q.reshape(B, KV, G, HD)
+    qf = extract_channels(qg, idx)                    # (B,KV,G,r)
+    baseline = jnp.einsum("bkgr,bktr->bkt", qf, kf)   # fp heavy-channel scores
+    out = ["table7_quant,scheme,top10_overlap"]
+    out.append(f"table7_quant,baseline_fp,{_overlap_topfrac(baseline, baseline):.3f}")
+
+    # ---- Key schemes at FP query ------------------------------------------
+    def key_scheme(name, kq):
+        s = jnp.einsum("bkgr,bktr->bkt", qf, kq)
+        out.append(f"table7_quant,{name},{_overlap_topfrac(baseline, s):.3f}")
+
+    key_scheme("k_1", qz.quantize_sign(kf))
+    key_scheme("k_2_asy", qz.asym_dequantize(qz.asym_quantize(kf, 2)))
+    key_scheme("k_2_sym", qz.sym_dequantize(qz.sym_quantize(kf, 2)))
+    key_scheme("k_3_asy", qz.asym_dequantize(qz.asym_quantize(kf, 3)))
+    key_scheme("k_3_sym", qz.sym_dequantize(qz.sym_quantize(kf, 3)))
+    key_scheme("k_msb2", qz.quantize_msb(kf, 2))
+    key_scheme("k_msb3", qz.quantize_msb(kf, 3))
+
+    # ---- Query widths at 2-bit-asym Key -----------------------------------
+    k2 = qz.asym_dequantize(qz.asym_quantize(kf, 2))
+    for bits in (1, 2, 3, 4):
+        qq = qz.sym_dequantize(qz.sym_quantize(qf, max(bits, 2))) \
+            if bits > 1 else qz.quantize_sign(qf)
+        if bits == 1:
+            qq = qz.quantize_sign(qf)
+        else:
+            qq = qz.sym_dequantize(qz.sym_quantize(qf, bits))
+        s = jnp.einsum("bkgr,bktr->bkt", qq, k2)
+        out.append(f"table7_quant,q_{bits}_sym,{_overlap_topfrac(baseline, s):.3f}")
+    return out
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""§Roofline table assembly from the dry-run JSON store."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(granularity: str = "layer", mesh: str = "single") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(
+            RESULTS, f"*__{mesh}__{granularity}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> list[str]:
+    rows = ["roofline,arch,shape,mesh,compute_s,memory_s,collective_s,"
+            "bottleneck,useful_ratio,roofline_fraction"]
+    cells = load_cells()
+    for c in cells:
+        if c.get("status") != "ok" or "roofline" not in c:
+            rows.append(f"roofline,{c.get('arch')},{c.get('shape')},"
+                        f"{c.get('mesh')},ERROR,,,,,")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"roofline,{c['arch']},{c['shape']},{c['mesh']},"
+            f"{r['compute_s']:.3e},{r['memory_s']:.3e},{r['collective_s']:.3e},"
+            f"{r['bottleneck']},{r['useful_ratio']:.3f},{r['roofline_fraction']:.4f}")
+    if len(cells) == 0:
+        rows.append("roofline,NO_RESULTS,run launch.dryrun --granularity layer first,,,,,,,")
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,...`` CSV rows per benchmark. The dry-run roofline table reads
+the JSON store produced by ``repro.launch.dryrun`` (run separately — it
+forces 512 host devices and must own its process).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (accelerator_table6, conflict_table1, kernel_bench,
+                            quant_sweep, roofline_table, selection_accuracy,
+                            throughput_model)
+    suites = [
+        ("table1_conflict", conflict_table1),
+        ("table34_selection", selection_accuracy),
+        ("table7_quant", quant_sweep),
+        ("table6_accelerators", accelerator_table6),
+        ("fig9_throughput", throughput_model),
+        ("kernel_bench", kernel_bench),
+        ("roofline", roofline_table),
+    ]
+    failed = 0
+    for name, mod in suites:
+        t0 = time.time()
+        print(f"# === {name} ({mod.__name__}) ===", flush=True)
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: Salca sparse decode attention in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a concentrated-attention workload, prefills the dual-compressed
+cache, runs one Salca decode step, and shows what the paper's pipeline did:
+how many tokens the O(n) histogram filter kept, the selection's recall of
+the truly relevant tokens, and the output error vs dense attention.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SalcaParams, cache_bytes, dense_decode_attention,
+                        prefill_cache, salca_decode_attention)
+
+rng = np.random.default_rng(0)
+B, T, H, KV, HD = 1, 4096, 8, 4, 128
+G = H // KV
+
+# --- a long context where ~3% of tokens actually matter -------------------
+q = jnp.asarray(rng.normal(size=(B, H, HD)), jnp.float32)
+k = rng.normal(size=(B, T, KV, HD)).astype(np.float32)
+qg = np.asarray(q).reshape(B, KV, G, HD).mean(2)
+relevant = {}
+for h in range(KV):
+    idx = rng.choice(T, size=128, replace=False)
+    relevant[h] = set(idx.tolist())
+    k[0, idx, h] += 3.0 * qg[0, h] / np.linalg.norm(qg[0, h]) * np.sqrt(HD)
+k = jnp.asarray(k * (1 + 4 * (rng.random(HD) < 0.25)), jnp.float32)  # heavy channels
+v = jnp.asarray(rng.normal(size=(B, T, KV, HD)), jnp.float32)
+
+# --- prefill: identify heavy channels, quantize (2-bit features, int8 KV) --
+# Relevant tokens here are ISOLATED spikes, so we bypass max-pooling — the
+# paper does the same for models with strong Top-K behaviour (ChatGLM3);
+# pooling helps when relevance comes in locally-coherent runs.
+params = SalcaParams.for_seq(T, retention=0.05, use_pool=False)
+cache = prefill_cache(k, v, max_seq=T, params=params)
+nbytes = cache_bytes(cache)
+print(f"cache: kv_region={nbytes['kv_region']/2**20:.1f}MiB "
+      f"feature_region={nbytes['feature_region']/2**20:.1f}MiB "
+      f"(features are {nbytes['feature_region']/nbytes['kv_region']:.1%} of KV)")
+print(f"selection target k={params.k} of n={T} "
+      f"(retention {params.k/T:.1%}), capacity {params.k_cap}")
+
+# --- one decode step --------------------------------------------------------
+out, sel = jax.jit(lambda q, c: salca_decode_attention(
+    q, c, params, return_selection=True))(q, cache)
+dense = dense_decode_attention(q, k, v)
+
+kept = np.asarray(sel.count)[0]
+print(f"histogram thresholds (per kv head): {np.asarray(sel.threshold)[0].tolist()}")
+print(f"tokens kept per kv head: {kept.tolist()}")
+for h in range(KV):
+    chosen = set(np.asarray(sel.indices[0, h])[np.asarray(sel.mask[0, h])].tolist())
+    rec = len(chosen & relevant[h]) / len(relevant[h])
+    print(f"  kv head {h}: recall of relevant tokens = {rec:.1%}")
+rel = float(jnp.linalg.norm(out - dense) / jnp.linalg.norm(dense))
+print(f"output rel. error vs dense fp attention: {rel:.4f}")
+print(f"bytes touched per step ≈ features({nbytes['feature_region']/2**20:.1f}MiB) "
+      f"+ gathered KV({(kept.sum() * 2 * HD)/2**20:.2f}MiB) "
+      f"vs dense {nbytes['kv_region']/2**20:.1f}MiB")

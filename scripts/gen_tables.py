@@ -1,0 +1,96 @@
+"""Generate EXPERIMENTS.md markdown tables from the dry-run JSON store.
+
+    PYTHONPATH=src python scripts/gen_tables.py [results/dryrun]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RES = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+
+
+def load(pattern):
+    out = []
+    for p in sorted(glob.glob(os.path.join(RES, pattern))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt(x, n=3):
+    return f"{x:.{n}e}"
+
+
+def dryrun_table(mesh, variant="opt"):
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    cells = [c for c in load(f"*__{mesh}__step{suffix}.json")]
+    print(f"\n### §Dry-run — {mesh} mesh (step granularity, shipped/{variant} code)\n")
+    print("| arch | shape | status | compile_s | args GB/chip | temp GB/chip "
+          "| collectives | wire MB/chip |")
+    print("|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c["status"] != "ok":
+            print(f"| {c['arch']} | {c['shape']} | **{c['status']}** | | | | | |")
+            continue
+        m = c["memory"]
+        ncoll = sum(v["count"] for v in c["collectives"].values())
+        print(f"| {c['arch']} | {c['shape']} | ok | {c['compile_s']} | "
+              f"{m['argument_bytes']/1e9:.2f} | {m['temp_bytes']/1e9:.2f} | "
+              f"{ncoll} | {c['wire_bytes_per_chip']/1e6:.1f} |")
+
+
+def roofline_table(variant):
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    cells = [c for c in load(f"*__single__layer{suffix}.json")]
+    print(f"\n### §Roofline — {variant} (layer granularity, single pod, 256 chips)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+          "| MODEL/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c.get("status") != "ok" or "roofline" not in c:
+            print(f"| {c.get('arch')} | {c.get('shape')} | ERROR | | | | | |")
+            continue
+        r = c["roofline"]
+        print(f"| {c['arch']} | {c['shape']} | {fmt(r['compute_s'])} | "
+              f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+              f"{r['bottleneck']} | {r['useful_ratio']:.3f} | "
+              f"{r['roofline_fraction']:.4f} |")
+
+
+def perf_compare(cells_of_interest):
+    print("\n### §Perf — baseline vs optimized (three hillclimb cells)\n")
+    print("| cell | variant | compute_s | memory_s | collective_s | bound_s | Δ bound |")
+    print("|---|---|---|---|---|---|---|")
+    for arch, shape in cells_of_interest:
+        base = opt = None
+        for c in load(f"{arch}__{shape}__single__layer.json"):
+            base = c
+        for c in load(f"{arch}__{shape}__single__layer__opt.json"):
+            opt = c
+        rows = []
+        for tag, c in (("baseline", base), ("opt", opt)):
+            if c is None or c.get("status") != "ok":
+                continue
+            r = c["roofline"]
+            bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            rows.append((tag, r, bound))
+        for tag, r, bound in rows:
+            delta = ""
+            if tag == "opt" and len(rows) == 2:
+                delta = f"{rows[0][2] / bound:.1f}×"
+            print(f"| {arch} × {shape} | {tag} | {fmt(r['compute_s'])} | "
+                  f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+                  f"{fmt(bound)} | {delta} |")
+
+
+if __name__ == "__main__":
+    dryrun_table("single")
+    dryrun_table("multi")
+    roofline_table("baseline")
+    roofline_table("opt")
+    perf_compare([("qwen3-8b", "decode_32k"), ("arctic-480b", "decode_32k"),
+                  ("granite-moe-3b-a800m", "train_4k")])

@@ -1,0 +1,3 @@
+"""repro: Salca (sparsity-aware long-context attention decoding) on TPU in JAX."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,7 @@
+"""Compiled-artifact analysis: HLO collective parsing + roofline terms."""
+
+from repro.analysis.hlo import parse_collectives, HloCollectives
+from repro.analysis.roofline import RooflineTerms, make_terms, model_flops
+
+__all__ = ["parse_collectives", "HloCollectives", "RooflineTerms",
+           "make_terms", "model_flops"]

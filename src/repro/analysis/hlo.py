@@ -1,0 +1,113 @@
+"""HLO text analysis: collective traffic extraction.
+
+The compiled module (post-SPMD-partitioning) is a per-device program, so
+tensor shapes in it are already per-chip. For each collective we record the
+result bytes and an *effective wire-bytes* estimate per chip using standard
+ring-algorithm factors over the participating group size g:
+
+    all-reduce      2·(g−1)/g · bytes     (reduce-scatter + all-gather)
+    all-gather      (g−1)/g · out_bytes
+    reduce-scatter  (g−1)/g · in_bytes ≈ g·out · (g−1)/g
+    all-to-all      (g−1)/g · bytes
+    collective-permute  1 · bytes
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<lhs>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(")
+_TYPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(?P<ng>\d+),(?P<gs>\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _type_bytes(text: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group("gs")), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),   # in_bytes = g × out_bytes
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+@dataclass
+class CollectiveStats:
+    count: int = 0
+    result_bytes: int = 0
+    wire_bytes: float = 0.0
+
+
+@dataclass
+class HloCollectives:
+    per_op: dict = field(default_factory=lambda: defaultdict(CollectiveStats))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(s.wire_bytes for s in self.per_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(s.count for s in self.per_op.values())
+
+    def summary(self) -> dict:
+        return {op: {"count": s.count, "result_bytes": s.result_bytes,
+                     "wire_bytes": round(s.wire_bytes)}
+                for op, s in sorted(self.per_op.items())}
+
+
+def parse_collectives(hlo_text: str) -> HloCollectives:
+    out = HloCollectives()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        nbytes = _type_bytes(m.group("lhs"))
+        if op == "collective-permute":
+            g = 2  # point-to-point: wire bytes = tensor bytes
+        else:
+            g = _group_size(line)
+            if g <= 1:
+                continue  # degenerate single-participant group: no traffic
+        st = out.per_op[op]
+        st.count += 1
+        st.result_bytes += nbytes
+        st.wire_bytes += _WIRE_FACTOR[op](g) * nbytes
+    return out

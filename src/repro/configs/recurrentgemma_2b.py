@@ -1,0 +1,16 @@
+"""recurrentgemma-2b [hybrid]: 26L d2560 10H (MQA kv=1) ff7680 vocab=256000 —
+RG-LRU + local attn, 1:2 attn:recurrent. [arXiv:2402.19427; hf]
+
+Pattern "RRL": two RG-LRU blocks then one local-attention block (window
+2048). Salca unnecessary: recurrent layers have O(1) state, attention is
+window-bounded (DESIGN.md §Arch-applicability). 10 heads ∤ 16 → CP."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid", source="arXiv:2402.19427; hf",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab_size=256000, act="gelu", tie_embeddings=True,
+    layer_pattern="RRL", local_window=2048, rnn_width=2560, conv_width=4,
+    attn_strategy="cp", salca=False,
+)

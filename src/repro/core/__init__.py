@@ -1,0 +1,46 @@
+"""Salca core: dual-compression sparse attention decoding (the paper's contribution).
+
+Public API:
+    SalcaParams, SalcaCache, prefill_cache, append_token,
+    salca_decode_attention, sp_salca_decode, dense oracles,
+    performance model and conflict simulator.
+"""
+
+from repro.core.selection import SalcaParams, salca_select, select_sparse_pattern
+from repro.core.cache import SalcaCache, empty_cache, prefill_cache, append_token, cache_bytes
+from repro.core.attention import (
+    salca_decode_attention,
+    dense_decode_attention,
+    dense_decode_from_cache,
+    exact_sparse_attention,
+    gather_selected,
+)
+from repro.core.sp_decode import (
+    sp_salca_decode,
+    sp_dense_decode,
+    sp_append_token,
+    local_lengths,
+)
+from repro.core.histogram_topk import (
+    Selection,
+    histogram256,
+    locate_threshold,
+    compact_indices,
+    histogram_topk,
+    exact_topk_indices,
+)
+from repro.core.maxpool import maxpool1d_reuse, maxpool1d_direct
+from repro.core import quantization
+from repro.core import heavy_channels
+from repro.core import performance_model
+from repro.core import conflict_sim
+
+__all__ = [
+    "SalcaParams", "SalcaCache", "empty_cache", "prefill_cache", "append_token",
+    "cache_bytes", "salca_select", "select_sparse_pattern",
+    "salca_decode_attention", "dense_decode_attention", "dense_decode_from_cache",
+    "exact_sparse_attention", "gather_selected", "sp_salca_decode",
+    "Selection", "histogram256", "locate_threshold", "compact_indices",
+    "histogram_topk", "exact_topk_indices", "maxpool1d_reuse", "maxpool1d_direct",
+    "quantization", "heavy_channels", "performance_model", "conflict_sim",
+]

@@ -1,0 +1,126 @@
+"""Exact sparse attention over the selected tokens (paper Algorithm 1, phase 4).
+
+Fetch (gather) the INT8 K/V rows named by the selection, compute scaled
+dot-product scores with running-max tracking, online softmax, and the
+weighted Value sum. The Pallas `flash_decode` kernel implements the same
+computation blocked over the capacity dim; this module is the XLA reference
+path (used in the distributed steps) plus the dense oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import SalcaCache
+from repro.core.histogram_topk import Selection
+from repro.core.selection import SalcaParams, salca_select
+
+NEG_INF = -1e30
+
+
+def gather_selected(cache: SalcaCache, sel: Selection):
+    """Gather selected K/V rows per (batch, kv-head).
+
+    sel.indices: (B, KV, C). Returns int8 k/v codes (B, KV, C, HD) and
+    scales (B, KV, C).
+    """
+    idx = sel.indices  # (B, KV, C)
+
+    def take_codes(codes):  # (B,S,KV,HD) -> (B,KV,C,HD)
+        c = codes.transpose(0, 2, 1, 3)                       # (B,KV,S,HD)
+        return jnp.take_along_axis(c, idx[..., None], axis=2)
+
+    def take_scale(scale):  # (B,S,KV) -> (B,KV,C)
+        s = scale.transpose(0, 2, 1)
+        return jnp.take_along_axis(s, idx, axis=2)
+
+    return (take_codes(cache.k_codes), take_scale(cache.k_scale),
+            take_codes(cache.v_codes), take_scale(cache.v_scale))
+
+
+def exact_sparse_attention(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                           v_codes: jax.Array, v_scale: jax.Array,
+                           mask: jax.Array) -> jax.Array:
+    """Attention of q over gathered INT8 K/V.
+
+    q: (B, H, HD); k/v codes: (B, KV, C, HD) int8 with (B, KV, C) scales;
+    mask: (B, KV, C) bool. Returns (B, H, HD) f32.
+
+    Score uses the int8 codes directly on the contraction (MXU int path on
+    TPU) and applies the per-token scale afterwards — exactly what the
+    paper's QK-mul stage does with its dequant-after-accumulate datapath.
+    """
+    b, h, hd = q.shape
+    kv = k_codes.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s_int = jnp.einsum("bkgd,bkcd->bkgc", qg, k_codes.astype(jnp.float32))
+    s = s_int * k_scale[:, :, None, :] / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+    # Safe softmax with global-max tracking (paper's qk_max mechanism).
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)  # guard all-masked rows
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, :, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    v = v_codes.astype(jnp.float32) * v_scale[..., None]      # (B,KV,C,HD)
+    o = jnp.einsum("bkgc,bkcd->bkgd", p, v) / jnp.maximum(l, 1e-20)
+    return o.reshape(b, h, hd)
+
+
+def salca_decode_attention(q: jax.Array, cache: SalcaCache, params: SalcaParams,
+                           return_selection: bool = False):
+    """Full Salca decode attention for one step.
+
+    q: (B, H, HD) current query (post-RoPE). Returns (B, H, HD) f32 output
+    (and optionally the Selection for introspection).
+    """
+    b, h, hd = q.shape
+    kv = cache.num_kv_heads
+    groups = h // kv
+    r = cache.heavy_idx.shape[-1]
+    # Query heavy-channel features, using each group's kv-head channel set.
+    idx = jnp.broadcast_to(cache.heavy_idx[:, :, None, :], (b, kv, groups, r))
+    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
+    q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r)
+    sel = salca_select(q_feat, cache.feat_words, cache.feat_scale,
+                       cache.feat_zero, groups, params,
+                       valid_mask=cache.valid_mask())
+    kc, ks, vc, vs = gather_selected(cache, sel)
+    out = exact_sparse_attention(q, kc, ks, vc, vs, sel.mask)
+    if return_selection:
+        return out, sel
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense oracles (for accuracy benchmarks and tests)
+# ---------------------------------------------------------------------------
+
+def dense_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           valid_mask: jax.Array | None = None) -> jax.Array:
+    """Full-precision dense decode attention oracle.
+
+    q: (B, H, HD); k, v: (B, S, KV, HD); valid_mask: (B, S).
+    """
+    b, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    kk = k.transpose(0, 2, 1, 3).astype(jnp.float32)          # (B,KV,S,HD)
+    vv = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, kk) / jnp.sqrt(hd)
+    if valid_mask is not None:
+        s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, vv)
+    return o.reshape(b, h, hd)
+
+
+def dense_decode_from_cache(q: jax.Array, cache: SalcaCache) -> jax.Array:
+    """Dense attention over the INT8 cache (isolates selection error from
+    quantization error when compared against `salca_decode_attention`)."""
+    k = cache.k_codes.astype(jnp.float32) * cache.k_scale[..., None]
+    v = cache.v_codes.astype(jnp.float32) * cache.v_scale[..., None]
+    return dense_decode_attention(q, k, v, cache.valid_mask())

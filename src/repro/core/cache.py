@@ -1,0 +1,143 @@
+"""Salca KV cache: INT8 K/V + packed 2-bit heavy-channel feature stream.
+
+Mirrors the paper's HBM layout logically:
+
+* Region "core features": contiguous per-token packed 2-bit heavy-channel
+  codes (16/int32 word) + the two FP quantization factors per key — the
+  sequentially-streamed store that the pre-computing stage reads.
+* Region "K/V": INT8 K and V with per-token scales — the randomly gathered
+  store read by exact attention.
+
+The cache is a NamedTuple (= pytree), so it flows through jit/scan/shard_map
+and can be sharded: batch on "data", kv-heads on "model" (TP archs) or
+sequence on "model"/"data" (CP archs, long_500k).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+from repro.core import heavy_channels as hc
+from repro.core.selection import SalcaParams
+
+
+class SalcaCache(NamedTuple):
+    k_codes: jax.Array     # (B, S, KV, HD) int8 — symmetric INT8 keys
+    k_scale: jax.Array     # (B, S, KV) f32
+    v_codes: jax.Array     # (B, S, KV, HD) int8
+    v_scale: jax.Array     # (B, S, KV) f32
+    feat_words: jax.Array  # (B, S, KV, R//16) uint32 — packed 2-bit features
+    feat_scale: jax.Array  # (B, S, KV) f32 — asymmetric scale a
+    feat_zero: jax.Array   # (B, S, KV) f32 — asymmetric zero z
+    heavy_idx: jax.Array   # (B, KV, R) int32 — frozen heavy-channel set
+    length: jax.Array      # (B,) int32 — tokens currently stored
+
+    @property
+    def max_seq(self) -> int:
+        return self.k_codes.shape[1]
+
+    @property
+    def num_kv_heads(self) -> int:
+        return self.k_codes.shape[2]
+
+    @property
+    def head_dim(self) -> int:
+        return self.k_codes.shape[3]
+
+    def valid_mask(self) -> jax.Array:
+        """(B, S) bool — True where a real token is stored."""
+        pos = jnp.arange(self.max_seq, dtype=jnp.int32)
+        return pos[None, :] < self.length[:, None]
+
+
+def empty_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+                r: int, dtype=jnp.int8) -> SalcaCache:
+    del dtype
+    zeros = lambda shape, dt: jnp.zeros(shape, dt)
+    return SalcaCache(
+        k_codes=zeros((batch, max_seq, kv_heads, head_dim), jnp.int8),
+        k_scale=zeros((batch, max_seq, kv_heads), jnp.float32),
+        v_codes=zeros((batch, max_seq, kv_heads, head_dim), jnp.int8),
+        v_scale=zeros((batch, max_seq, kv_heads), jnp.float32),
+        feat_words=zeros((batch, max_seq, kv_heads, r // qz.CODES_PER_WORD), jnp.uint32),
+        feat_scale=zeros((batch, max_seq, kv_heads), jnp.float32),
+        feat_zero=zeros((batch, max_seq, kv_heads), jnp.float32),
+        heavy_idx=zeros((batch, kv_heads, r), jnp.int32),
+        length=zeros((batch,), jnp.int32),
+    )
+
+
+def _encode_tokens(k: jax.Array, v: jax.Array, heavy_idx: jax.Array):
+    """Quantize a block of K/V tokens into cache fields.
+
+    k, v: (B, T, KV, HD); heavy_idx: (B, KV, R). Returns the per-token cache
+    field values for those T positions.
+    """
+    k8 = qz.quantize_kv_int8(k)
+    v8 = qz.quantize_kv_int8(v)
+    # Extract heavy channels: (B, T, KV, R)
+    r = heavy_idx.shape[-1]
+    idx = jnp.broadcast_to(heavy_idx[:, None], k.shape[:3] + (r,))
+    k_feat = jnp.take_along_axis(k.astype(jnp.float32), idx, axis=-1)
+    f2 = qz.quantize_key_features(k_feat)
+    words = qz.pack2bit(f2.codes)
+    return k8, v8, words, f2.scale, f2.zero
+
+
+def prefill_cache(k: jax.Array, v: jax.Array, max_seq: int,
+                  params: SalcaParams) -> SalcaCache:
+    """Build a cache from prefill K/V.
+
+    k, v: (B, T, KV, HD) full-precision prefill keys/values. Heavy channels
+    are identified here (once per input, per kv head — paper §3.1) and then
+    frozen for the whole decode.
+    """
+    b, t, kv, hd = k.shape
+    r = params.r(hd)
+    # Per-kv-head salience over tokens: reduce |K| along T.
+    heavy_idx = hc.heavy_channel_indices(
+        k.transpose(0, 2, 1, 3).reshape(b, kv, t, hd), r)       # (B, KV, R)
+    k8, v8, words, fs, fz = _encode_tokens(k, v, heavy_idx)
+    pad = max_seq - t
+    assert pad >= 0, f"prefill length {t} exceeds cache capacity {max_seq}"
+    pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+    pad3 = ((0, 0), (0, pad), (0, 0))
+    return SalcaCache(
+        k_codes=jnp.pad(k8.codes, pad4), k_scale=jnp.pad(k8.scale, pad3),
+        v_codes=jnp.pad(v8.codes, pad4), v_scale=jnp.pad(v8.scale, pad3),
+        feat_words=jnp.pad(words, pad4), feat_scale=jnp.pad(fs, pad3),
+        feat_zero=jnp.pad(fz, pad3),
+        heavy_idx=heavy_idx,
+        length=jnp.full((b,), t, jnp.int32),
+    )
+
+
+def append_token(cache: SalcaCache, k: jax.Array, v: jax.Array) -> SalcaCache:
+    """Append one decoded token's K/V (B, KV, HD) at each sequence's cursor."""
+    b = k.shape[0]
+    k8, v8, words, fs, fz = _encode_tokens(k[:, None], v[:, None], cache.heavy_idx)
+
+    def upd(buf, val):  # dynamic per-batch-row scatter at cursor `length`
+        bidx = jnp.arange(b)
+        return buf.at[bidx, cache.length].set(val[:, 0], mode="drop")
+
+    return cache._replace(
+        k_codes=upd(cache.k_codes, k8.codes), k_scale=upd(cache.k_scale, k8.scale),
+        v_codes=upd(cache.v_codes, v8.codes), v_scale=upd(cache.v_scale, v8.scale),
+        feat_words=upd(cache.feat_words, words),
+        feat_scale=upd(cache.feat_scale, fs), feat_zero=upd(cache.feat_zero, fz),
+        length=jnp.minimum(cache.length + 1, cache.max_seq),
+    )
+
+
+def cache_bytes(cache: SalcaCache) -> dict[str, int]:
+    """Physical bytes by region (for the performance model / roofline)."""
+    def nbytes(x):
+        return int(x.size) * x.dtype.itemsize
+    kv = nbytes(cache.k_codes) + nbytes(cache.v_codes) + nbytes(cache.k_scale) + nbytes(cache.v_scale)
+    feats = nbytes(cache.feat_words) + nbytes(cache.feat_scale) + nbytes(cache.feat_zero)
+    return {"kv_region": kv, "feature_region": feats, "total": kv + feats}

@@ -1,0 +1,62 @@
+"""Heavy-channel identification (paper §3.1).
+
+Keys exhibit pronounced channel-wise magnitude structure; channels with the
+largest aggregate magnitude dominate the q·k dot product. The paper
+identifies them **once per input at prefill** by reducing |K| along the
+token dimension and keeping the top-r channels (r = s_f · d), then stores
+those channels contiguously ("core features") for streaming reads.
+
+GQA adaptation (DESIGN.md §5): heavy channels are identified **per KV
+head**; the query heads of a group read their own channels at the same
+indices.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def channel_salience(keys: jax.Array, valid_mask: jax.Array | None = None) -> jax.Array:
+    """``S_j = Σ_i |key[i, j]|`` along the token axis.
+
+    keys: (..., N, d)  → salience (..., d), f32.
+    """
+    a = jnp.abs(keys.astype(jnp.float32))
+    if valid_mask is not None:
+        a = a * valid_mask[..., None].astype(jnp.float32)
+    return jnp.sum(a, axis=-2)
+
+
+def heavy_channel_indices(keys: jax.Array, r: int,
+                          valid_mask: jax.Array | None = None) -> jax.Array:
+    """Top-r channel index set ``I_heavy = argTopk(S, r)`` (ascending-sorted).
+
+    keys: (..., N, d) → indices (..., r), int32. The exact top-k here is a
+    one-time prefill cost (the paper does the same); sorting the index set
+    keeps downstream gathers monotone, which XLA lowers to efficient slices.
+    """
+    sal = channel_salience(keys, valid_mask)
+    _, idx = jax.lax.top_k(sal, r)
+    return jnp.sort(idx, axis=-1).astype(jnp.int32)
+
+
+def extract_channels(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather feature channels: x (..., N, d), idx (..., r) → (..., N, r).
+
+    ``idx`` broadcasts over the token axis (channels are per-head, frozen
+    across tokens — the property that makes contiguous feature storage
+    possible in the paper's HBM layout).
+    """
+    idxb = jnp.broadcast_to(idx[..., None, :], x.shape[:-1] + (idx.shape[-1],))
+    return jnp.take_along_axis(x, idxb, axis=-1)
+
+
+def static_channel_indices(calib_keys: jax.Array, r: int) -> jax.Array:
+    """Loki-style *offline* channel selection from a calibration batch.
+
+    Used only as a comparison baseline (benchmarks, paper Table 4): channels
+    are chosen from calibration data and then frozen for all future inputs.
+    calib_keys: (..., N, d) → (..., r) int32.
+    """
+    return heavy_channel_indices(calib_keys, r)

@@ -1,0 +1,71 @@
+"""Stride-1 max-pooling with the paper's multi-level reuse recurrence (§3.2/§4.2.1).
+
+    mp(3, n) = max(in[n-1], in[n], in[n+1])
+    mp(r, n) = max(mp(r-2, n-1), mp(r-2, n+1))      r > 3, r odd
+
+Pooling lets high-relevance positions "spread" to their neighbours so that
+the Top-K selection keeps contextually-coherent runs of tokens (SnapKV-style
+locality) instead of isolated spikes. The paper applies it *after* INT8
+score quantization so the comparison tree runs on int8 — we keep the same
+ordering. Boundaries use "same" padding with the edge excluded (pad value 0
+= the minimum bin, matching a hardware shift-register that clamps).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _shift(x: jax.Array, offset: int, axis: int, fill) -> jax.Array:
+    """Shift ``x`` by ``offset`` along ``axis`` filling vacated slots."""
+    if offset == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    if offset > 0:
+        pad[axis] = (offset, 0)
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(0, x.shape[axis])
+    else:
+        pad[axis] = (0, -offset)
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(-offset, x.shape[axis] - offset)
+    return jnp.pad(x, pad, constant_values=fill)[tuple(sl)]
+
+
+def maxpool1d_reuse(x: jax.Array, window: int, axis: int = -1) -> jax.Array:
+    """Stride-1 windowed max via the multi-level reuse recurrence.
+
+    ``window`` must be odd and ≥ 1. Works on any integer or float dtype;
+    out-of-range neighbours contribute the dtype's minimum (never win).
+    """
+    if window == 1:
+        return x
+    assert window % 2 == 1 and window >= 3, f"window must be odd ≥3, got {window}"
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        fill = jnp.iinfo(x.dtype).min
+    else:
+        fill = -jnp.inf
+    # Level 1: mp(3, ·)
+    out = jnp.maximum(jnp.maximum(_shift(x, 1, axis, fill), x), _shift(x, -1, axis, fill))
+    # Levels 2..: mp(r, n) = max(mp(r-2, n-1), mp(r-2, n+1))
+    for _ in range((window - 3) // 2):
+        out = jnp.maximum(_shift(out, 1, axis, fill), _shift(out, -1, axis, fill))
+    return out
+
+
+def maxpool1d_direct(x: jax.Array, window: int, axis: int = -1) -> jax.Array:
+    """Naive direct windowed max (oracle for the reuse form and the kernel)."""
+    if window == 1:
+        return x
+    assert window % 2 == 1
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        fill = jnp.iinfo(x.dtype).min
+    else:
+        fill = -jnp.inf
+    h = window // 2
+    out = x
+    for off in range(-h, h + 1):
+        if off:
+            out = jnp.maximum(out, _shift(x, off, axis, fill))
+    return out

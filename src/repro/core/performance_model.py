@@ -1,0 +1,171 @@
+"""The paper's §4.4 performance model, plus a TPU-bandwidth variant.
+
+The ASIC model balances HBM pseudo-channel (PC) allocation and compute
+parallelism between the *pre-computing* (relevance estimation) stream and
+the *attention* (sparse K/V gather) stream:
+
+* per-key pre-computing cost:  ``2·d·s_f + 32`` bits (2-bit features + two
+  FP16 factors);
+* per-key attention cost:      ``16·d`` bits (INT8 K and V);
+* bandwidth constraint: ``(pre_bits·m_pre + att_bits·m_att)·f_cmp ≤
+  bw·chn·f_hbm``;
+* pipeline balance: minimum supported retention rate
+  ``r_q = (β_att·m_att) / (β_pre·m_pre·α)``.
+
+`solve()` reproduces the paper's operating point (m_pre=25 at m_att=2;
+after parallelism rounding p_pre=16 ⇒ m_pre=17, min retention ≈ 5.8%,
+h_pre=11) — asserted in tests.
+
+The TPU variant answers the roofline question directly: bytes that must
+cross HBM per decoded token per layer, dense vs 4-bit-filter vs Salca.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """ASIC-side constants (defaults = the paper's design)."""
+
+    d: int = 128                 # head dimension
+    chn: int = 32                # HBM pseudo-channel count (one HBM2)
+    bw_bits: int = 128           # bits per PC per HBM cycle (512 GB/s / 32 PCs @1GHz)
+    f_cmp: float = 500e6         # compute clock
+    f_hbm: float = 1e9           # HBM clock
+    alpha: float = 1.17          # channel-conflict latency multiplier (range 128)
+    beta_pre: float = 0.95       # HBM transfer efficiency, sequential stream
+    beta_att: float = 0.55       # HBM transfer efficiency, gathered stream
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    m_pre: int                   # memory-access parallelism, pre-computing
+    m_att: int                   # memory-access parallelism, attention
+    p_pre: int                   # compute parallelism, pre-computing
+    p_att: int                   # compute parallelism, attention
+    h_pre: int                   # HBM PCs allocated to pre-computing
+    h_att: int                   # HBM PCs allocated to attention
+    min_retention: float         # minimum r_q the pipeline sustains
+    u_pre: float                 # hardware utilization, pre-computing
+    u_att: float
+
+
+def pre_bits_per_key(d: int, s_f: float) -> float:
+    """2-bit features over the heavy channels + two FP16 factors."""
+    return 2.0 * d * s_f + 32.0
+
+
+def att_bits_per_key(d: int) -> float:
+    """INT8 K + INT8 V per selected token."""
+    return 16.0 * d
+
+
+def bandwidth_bits_per_cycle(hw: HardwareSpec) -> float:
+    """HBM bits deliverable per *compute* cycle."""
+    return hw.bw_bits * hw.chn * hw.f_hbm / hw.f_cmp
+
+
+def pc_allocation(hw: HardwareSpec, s_f: float, m_pre: int, m_att: int) -> tuple[int, int]:
+    h_pre = math.ceil(pre_bits_per_key(hw.d, s_f) * m_pre * hw.f_cmp
+                      / (hw.beta_pre * hw.bw_bits * hw.f_hbm))
+    h_att = math.ceil(att_bits_per_key(hw.d) * m_att * hw.f_cmp
+                      / (hw.beta_att * hw.bw_bits * hw.f_hbm))
+    return h_pre, h_att
+
+
+def min_retention(hw: HardwareSpec, m_pre: int, m_att: int) -> float:
+    """Pipeline-balance bound: below this retention, pre-computing is the
+    critical path and extra attention bandwidth is wasted."""
+    return (hw.beta_att * m_att) / (hw.beta_pre * m_pre * hw.alpha)
+
+
+def decode_cycles(hw: HardwareSpec, n: int, r_q: float, m_pre: int, m_att: int) -> float:
+    """Per-head decode latency (compute cycles): max of the two streams."""
+    t_pre = n / (hw.beta_pre * m_pre)
+    t_att = n * r_q * hw.alpha / (hw.beta_att * m_att)
+    return max(t_pre, t_att)
+
+
+def solve(hw: HardwareSpec, s_f: float, target_retention: float) -> DesignPoint:
+    """Pareto search over (m_pre, m_att) under the bandwidth constraint,
+    then parallelism rounding (§4.4's two-step procedure)."""
+    bw = bandwidth_bits_per_cycle(hw)
+    pre_b, att_b = pre_bits_per_key(hw.d, s_f), att_bits_per_key(hw.d)
+    best = None
+    for m_att in range(1, hw.chn + 1):
+        rem = bw - att_b * m_att
+        if rem <= 0:
+            break
+        m_pre = int(rem // pre_b)
+        if m_pre < 1:
+            continue
+        if min_retention(hw, m_pre, m_att) > target_retention:
+            continue  # cannot sustain the target sparsity
+        t = decode_cycles(hw, n=1, r_q=target_retention, m_pre=m_pre, m_att=m_att)
+        if best is None or t < best[0]:
+            best = (t, m_pre, m_att)
+    if best is None:  # fall back to the most filter-heavy feasible point
+        m_att = 1
+        m_pre = max(1, int((bw - att_b) // pre_b))
+        best = (decode_cycles(hw, 1, target_retention, m_pre, m_att), m_pre, m_att)
+    _, m_pre, m_att = best
+    # Parallelism rounding per the paper: match compute to *effective* data
+    # supply, then floor to hardware-regular powers of two (§4.4 sets
+    # p_att=1 "given m_att·β_att = 1.1 ≪ 2", i.e. floor, not ceil).
+    p_pre = 1 << int(math.log2(max(m_pre * hw.beta_pre, 1.0)))
+    p_att = 1 << int(math.log2(max(m_att * hw.beta_att, 1.0)))
+    m_pre_f = math.ceil(p_pre / hw.beta_pre)
+    m_att_f = math.ceil(p_att / hw.beta_att)
+    h_pre, h_att = pc_allocation(hw, s_f, p_pre, p_att)
+    # PC-budget feasibility: shrink the hungrier side until it fits.
+    while h_pre + h_att > hw.chn and (p_pre > 1 or p_att > 1):
+        if h_att > h_pre and p_att > 1:
+            p_att //= 2
+        elif p_pre > 1:
+            p_pre //= 2
+        else:
+            p_att //= 2
+        m_pre_f = math.ceil(p_pre / hw.beta_pre)
+        m_att_f = math.ceil(p_att / hw.beta_att)
+        h_pre, h_att = pc_allocation(hw, s_f, p_pre, p_att)
+    return DesignPoint(
+        m_pre=m_pre_f, m_att=m_att_f, p_pre=p_pre, p_att=p_att,
+        h_pre=h_pre, h_att=h_att,
+        min_retention=min_retention(hw, m_pre_f, m_att_f),
+        u_pre=(m_pre_f * hw.beta_pre) / math.ceil(m_pre_f * hw.beta_pre),
+        u_att=(m_att_f * hw.beta_att) / math.ceil(m_att_f * hw.beta_att),
+    )
+
+
+# ---------------------------------------------------------------------------
+# TPU-bandwidth variant: HBM bytes per decoded token per attention layer
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DecodeBytes:
+    feature_stream: float   # sequential pre-computing reads
+    kv_gather: float        # gathered exact-attention reads
+    total: float
+
+
+def salca_bytes_per_token(n: int, d: int, kv_heads: int, s_f: float,
+                          retention: float) -> DecodeBytes:
+    """Bytes/step/layer with Salca dual compression (per the paper's layout)."""
+    feat = kv_heads * n * pre_bits_per_key(d, s_f) / 8.0
+    kv = kv_heads * (n * retention) * (att_bits_per_key(d) / 8.0 + 8.0)  # + 2 f32 scales
+    return DecodeBytes(feat, kv, feat + kv)
+
+
+def filter4bit_bytes_per_token(n: int, d: int, kv_heads: int, retention: float) -> DecodeBytes:
+    """Energon/Sanger-style 4-bit full-feature filter + INT8 attention."""
+    feat = kv_heads * n * (4.0 * d + 32.0) / 8.0
+    kv = kv_heads * (n * retention) * (att_bits_per_key(d) / 8.0 + 8.0)
+    return DecodeBytes(feat, kv, feat + kv)
+
+
+def dense_bytes_per_token(n: int, d: int, kv_heads: int, dtype_bytes: float = 2.0) -> DecodeBytes:
+    kv = kv_heads * n * 2.0 * d * dtype_bytes
+    return DecodeBytes(0.0, kv, kv)

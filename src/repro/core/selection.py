@@ -1,0 +1,132 @@
+"""End-to-end Salca sparse-pattern selection (paper Algorithm 1, phases 1-3).
+
+Pipeline (per decode step, per kv-head):
+
+    q ──extract heavy channels──► q_feat ──3-bit sym quant──► q̂
+    K features (2-bit packed, from cache) ──────────────────► k̂
+    Ŝ = dequant(q̂ · k̂ᵀ)            (phase 1, lightweight relevance)
+    Ŝ_g = Σ_{q-heads in group} Ŝ    (GQA adaptation: one pattern per kv head)
+    bins = uint8-quantize(Ŝ_g)      (phase 2)
+    pooled = maxpool1d(bins, w)     (stride-1, multi-level reuse)
+    T = histogram-threshold(pooled, k)   (phase 3, O(n))
+    indices = compact(pooled ≥ T, k_cap)
+
+Everything is fixed-shape and jit-safe; `k_cap` bounds the index buffer the
+way the paper's Index RAM does.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+from repro.core import histogram_topk as ht
+from repro.core.maxpool import maxpool1d_reuse
+
+
+@dataclass(frozen=True)
+class SalcaParams:
+    """Static configuration of the Salca mechanism (one per model config)."""
+
+    feature_sparsity: float = 0.5      # s_f: fraction of head_dim kept as heavy channels
+    k: int = 1024                      # target sparse token count (per kv head)
+    k_cap: int = 1536                  # index buffer capacity (≥ k; slack for ties+pool)
+    pool_window: int = 7               # stride-1 maxpool window (1 = bypass)
+    use_pool: bool = True              # paper bypasses pooling for strong-TopK models
+    sink_tokens: int = 0               # optional always-keep prefix (beyond-paper)
+    recent_tokens: int = 0             # optional always-keep suffix (beyond-paper)
+
+    def r(self, head_dim: int) -> int:
+        """Number of heavy channels; multiple of 16 so 2-bit packing is exact."""
+        r = int(self.feature_sparsity * head_dim)
+        return max(16, (r // 16) * 16)
+
+    @staticmethod
+    def for_seq(n: int, retention: float = 0.05, **kw) -> "SalcaParams":
+        """Build params targeting a retention rate on sequences of length n."""
+        k = max(128, int(n * retention))
+        k_cap = ((int(k * 1.25) + 127) // 128) * 128
+        return SalcaParams(k=min(k, n), k_cap=min(k_cap, n), **kw)
+
+
+def estimate_relevance(q_feat: jax.Array, feat_words: jax.Array,
+                       feat_scale: jax.Array, feat_zero: jax.Array,
+                       groups: int) -> jax.Array:
+    """Phase 1: dual-compressed relevance scores, summed per kv-head group.
+
+    q_feat:     (B, H, r) f32/bf16 — query heavy-channel features
+    feat_words: (B, N, KV, r//16) uint32 — packed 2-bit key features
+    feat_scale/feat_zero: (B, N, KV) f32
+    Returns (B, KV, N) f32 group-summed scores.
+    """
+    from repro.flags import PERF
+    b, h, r = q_feat.shape
+    kv = feat_words.shape[2]
+    assert h == kv * groups
+    if PERF.group_sum_query and groups > 1:
+        # §Perf it-8: Σ_g (q_g·k) == (Σ_g q_g)·k exactly, so sum the group's
+        # queries in fp BEFORE quantization — one 3-bit dot per kv head.
+        q_feat = jnp.sum(q_feat.reshape(b, kv, groups, r), axis=2)
+        groups = 1
+        h = kv
+    q3 = qz.quantize_query_features(q_feat)                    # codes (B,H,r)
+    k_codes = qz.unpack2bit(feat_words, r)                     # (B,N,KV,r) int8
+    # Group the query heads with their kv head: (B, KV, G, r)
+    qc = q3.codes.reshape(b, kv, groups, r)
+    qs = q3.scale.reshape(b, kv, groups)
+    # int8 operands, s32 accumulation (§Perf it-5): keeps the widest streamed
+    # tensor at 1 byte/code — a 4× HBM-bytes cut vs materializing int32 codes
+    # (on TPU this is also the native MXU int8 path).
+    int_dot = jnp.einsum("bkgr,bnkr->bkgn", qc, k_codes,
+                         preferred_element_type=jnp.int32)     # (B,KV,G,N)
+    qsum = jnp.sum(qc, axis=-1, dtype=jnp.int32)               # (B,KV,G)
+    # §Perf it-6: the dequantized scores only feed an 8-bit binning, so the
+    # elementwise chain runs in bf16 (halves every (B,KV,N) temp's bytes);
+    # baseline keeps f32.
+    from repro.flags import PERF
+    acc_dt = jnp.bfloat16 if PERF.bf16_collectives else jnp.float32
+    a = feat_scale.astype(acc_dt).transpose(0, 2, 1)[:, :, None, :]
+    z = feat_zero.astype(acc_dt).transpose(0, 2, 1)[:, :, None, :]
+    scores = qs.astype(acc_dt)[..., None] * (
+        a * int_dot.astype(acc_dt) + z * qsum[..., None].astype(acc_dt))
+    return jnp.sum(scores, axis=2, dtype=jnp.float32)          # (B,KV,N)
+
+
+def select_sparse_pattern(scores: jax.Array, params: SalcaParams,
+                          valid_mask: jax.Array | None = None) -> ht.Selection:
+    """Phases 2-3: INT8 binning → maxpool → histogram threshold → compaction.
+
+    scores: (B, KV, N) f32; valid_mask: (B, 1|KV, N) bool (True = real token).
+    """
+    n = scores.shape[-1]
+    bins = qz.quantize_scores_uint8(scores, valid_mask)
+    if params.use_pool and params.pool_window > 1:
+        pooled = maxpool1d_reuse(bins, params.pool_window)
+        if valid_mask is not None:  # pooling must not resurrect masked slots
+            pooled = jnp.where(valid_mask, pooled, jnp.uint8(0))
+    else:
+        pooled = bins
+    if params.sink_tokens or params.recent_tokens:
+        pos = jnp.arange(n)
+        forced = jnp.zeros((n,), bool)
+        if params.sink_tokens:
+            forced |= pos < params.sink_tokens
+        if params.recent_tokens and valid_mask is not None:
+            length = jnp.sum(valid_mask.astype(jnp.int32), axis=-1, keepdims=True)
+            forced = forced | (pos >= (length - params.recent_tokens))
+        pooled = jnp.where(forced & (valid_mask if valid_mask is not None else True),
+                           jnp.uint8(255), pooled)
+    return ht.histogram_topk(pooled, params.k, params.k_cap)
+
+
+def salca_select(q_feat: jax.Array, feat_words: jax.Array, feat_scale: jax.Array,
+                 feat_zero: jax.Array, groups: int, params: SalcaParams,
+                 valid_mask: jax.Array | None = None) -> ht.Selection:
+    """Full selection pipeline: returns per-(batch, kv-head) Selection."""
+    scores = estimate_relevance(q_feat, feat_words, feat_scale, feat_zero, groups)
+    if valid_mask is not None and valid_mask.ndim == 2:  # (B, N) -> (B, 1, N)
+        valid_mask = valid_mask[:, None, :]
+    return select_sparse_pattern(scores, params, valid_mask)

@@ -1,0 +1,201 @@
+"""Sequence-parallel (sharded-KV) Salca decode. Beyond-paper contribution.
+
+For `long_500k` (batch=1) and CP archs, the KV cache is sharded along the
+*sequence* dimension across mesh axes. The paper's O(n) selection
+distributes perfectly — unlike exact Top-K, which would need a distributed
+sort:
+
+1. each shard computes local relevance scores;
+2. score→INT8 binning needs a *global* affine map: one (min, max) pair per
+   (batch, kv-head) is combined with `pmin`/`pmax` (tiny);
+3. the 256-bin histograms are **additive**: one 256-int `psum` yields the
+   exact global histogram, hence the same threshold everywhere;
+4. maxpool windows crossing shard boundaries are fixed with a halo exchange
+   (`ppermute` of `window//2` edge columns) — the TPU analogue of the
+   paper's shift-register continuity;
+5. each shard gathers its local selection and computes a partial attention
+   (m, l, acc); partials merge with the online-softmax identity under
+   `pmax`/`psum`.
+
+Total collective traffic per layer per step: O(256 + head_dim) floats per
+(batch, kv-head) — independent of sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+from repro.core import histogram_topk as ht
+from repro.core.cache import SalcaCache, _encode_tokens
+from repro.core.maxpool import maxpool1d_reuse
+from repro.core.selection import SalcaParams, estimate_relevance
+from repro.core.attention import gather_selected, NEG_INF
+
+_EPS = 1e-6
+
+
+def _halo_exchange(x: jax.Array, halo: int, axis_name) -> jax.Array:
+    """Concatenate `halo` columns from both sequence-neighbour shards.
+
+    x: (..., n_local). Returns (..., n_local + 2*halo) with edge fill 0
+    (the minimum INT8 bin) at the global boundaries.
+    """
+    n_shards = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    left_edge = x[..., -halo:]    # what our LEFT neighbour needs on its right
+    right_edge = x[..., :halo]
+    perm_fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+    perm_bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+    from_left = jax.lax.ppermute(left_edge, axis_name, perm_fwd)
+    from_right = jax.lax.ppermute(right_edge, axis_name, perm_bwd)
+    zeros = jnp.zeros_like(from_left)
+    from_left = jnp.where(idx == 0, zeros, from_left)
+    from_right = jnp.where(idx == n_shards - 1, zeros, from_right)
+    return jnp.concatenate([from_left, x, from_right], axis=-1)
+
+
+def local_lengths(global_len: jax.Array, n_local: int, axis_name) -> jax.Array:
+    """Per-shard valid lengths of a sequence-sharded cache.
+
+    global_len: (B,) int32 cursor; shard i owns [i·n_local, (i+1)·n_local).
+    """
+    off = jax.lax.axis_index(axis_name) * n_local
+    return jnp.clip(global_len - off, 0, n_local)
+
+
+def sp_append_token(cache: SalcaCache, k: jax.Array, v: jax.Array,
+                    global_len: jax.Array, axis_name) -> SalcaCache:
+    """Append one token's K/V into a sequence-sharded cache.
+
+    The write cursor lands in exactly one shard; other shards' scatters fall
+    out of range and are dropped. `cache.length` holds *local* lengths and
+    is updated consistently. k, v: (B, KV, HD)."""
+    b = k.shape[0]
+    n_local = cache.max_seq
+    off = jax.lax.axis_index(axis_name) * n_local
+    idx = global_len - off                                     # may be OOB
+    in_range = (idx >= 0) & (idx < n_local)
+    safe_idx = jnp.where(in_range, idx, n_local)               # force drop
+    k8, v8, words, fs, fz = _encode_tokens(k[:, None], v[:, None], cache.heavy_idx)
+
+    def upd(buf, val):
+        bidx = jnp.arange(b)
+        return buf.at[bidx, safe_idx].set(val[:, 0], mode="drop")
+
+    return cache._replace(
+        k_codes=upd(cache.k_codes, k8.codes), k_scale=upd(cache.k_scale, k8.scale),
+        v_codes=upd(cache.v_codes, v8.codes), v_scale=upd(cache.v_scale, v8.scale),
+        feat_words=upd(cache.feat_words, words),
+        feat_scale=upd(cache.feat_scale, fs), feat_zero=upd(cache.feat_zero, fz),
+        length=jnp.clip(global_len + 1 - off, 0, n_local).astype(jnp.int32),
+    )
+
+
+def sp_dense_decode(q: jax.Array, cache: SalcaCache, axis_name,
+                    window: int = 0, global_len: jax.Array | None = None) -> jax.Array:
+    """Dense (no selection) decode over a sequence-sharded INT8 cache.
+
+    Used by sliding-window layers (gemma3 local, recurrentgemma attention,
+    whisper self-attention) and as the ASIC_D-style dense baseline. Same
+    online-softmax psum merge as the Salca path, no filtering. ``window``>0
+    restricts to the trailing window (global positions)."""
+    b, h, hd = q.shape
+    kv = cache.num_kv_heads
+    groups = h // kv
+    n_local = cache.max_seq
+    valid = cache.valid_mask()                                  # (B, n_local)
+    if window > 0:
+        assert global_len is not None
+        off = jax.lax.axis_index(axis_name) * n_local
+        pos = off + jnp.arange(n_local, dtype=jnp.int32)[None, :]
+        valid = valid & (pos > (global_len[:, None] - window))
+    k = cache.k_codes.astype(jnp.float32) * cache.k_scale[..., None]
+    v = cache.v_codes.astype(jnp.float32) * cache.v_scale[..., None]
+    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
+    kk = k.transpose(0, 2, 1, 3)                                # (B,KV,S,HD)
+    vv = v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, kk) / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m_l = jnp.max(s, axis=-1)
+    m_g = jax.lax.pmax(m_l, axis_name)
+    p = jnp.exp(s - m_g[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l_g = jax.lax.psum(jnp.sum(p, axis=-1), axis_name)
+    acc_g = jax.lax.psum(jnp.einsum("bkgs,bksd->bkgd", p, vv), axis_name)
+    out = acc_g / jnp.maximum(l_g, 1e-20)[..., None]
+    return out.reshape(b, h, hd)
+
+
+def sp_salca_decode(q: jax.Array, cache: SalcaCache, params: SalcaParams,
+                    axis_name, shard_cap: int | None = None) -> jax.Array:
+    """Salca decode attention with sequence-sharded cache, inside shard_map.
+
+    q: (B, H, HD) replicated across `axis_name`. `cache` holds this shard's
+    slice of the sequence; `cache.length` must hold *local* valid lengths.
+    `shard_cap` is the per-shard index-buffer capacity (defaults to
+    4×(k_cap / n_shards), clipped to the local length).
+    """
+    b, h, hd = q.shape
+    kv = cache.num_kv_heads
+    groups = h // kv
+    r = cache.heavy_idx.shape[-1]
+    n_local = cache.max_seq
+    n_shards = jax.lax.axis_size(axis_name)
+    if shard_cap is None:
+        shard_cap = min(n_local, max(128, (4 * params.k_cap) // max(n_shards, 1)))
+
+    # --- Phase 1: local relevance scores --------------------------------
+    idx = jnp.broadcast_to(cache.heavy_idx[:, :, None, :], (b, kv, groups, r))
+    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
+    q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r)
+    scores = estimate_relevance(q_feat, cache.feat_words, cache.feat_scale,
+                                cache.feat_zero, groups)          # (B,KV,n_local)
+    valid = cache.valid_mask()[:, None, :]                        # (B,1,n_local)
+    masked = jnp.where(valid, scores, NEG_INF)
+
+    # --- Phase 2: globally-consistent INT8 binning ----------------------
+    lo_l = jnp.min(jnp.where(valid, scores, jnp.inf), axis=-1)
+    hi_l = jnp.max(masked, axis=-1)
+    lo = jax.lax.pmin(lo_l, axis_name)                            # (B,KV)
+    hi = jax.lax.pmax(hi_l, axis_name)
+    lo = jnp.where(jnp.isfinite(lo), lo, 0.0)
+    scale = jnp.maximum((hi - lo) / 254.0, _EPS)
+    bins = jnp.clip(jnp.round((scores - lo[..., None]) / scale[..., None]) + 1.0,
+                    1.0, 255.0)
+    bins = jnp.where(valid, bins, 0.0).astype(jnp.uint8)
+
+    if params.use_pool and params.pool_window > 1:
+        halo = params.pool_window // 2
+        padded = _halo_exchange(bins, halo, axis_name)
+        pooled = maxpool1d_reuse(padded, params.pool_window)[..., halo:-halo]
+        pooled = jnp.where(valid, pooled, jnp.uint8(0))
+    else:
+        pooled = bins
+
+    # --- Phase 3: additive histogram → global threshold -----------------
+    hist = ht.histogram256(pooled)                                # (B,KV,256)
+    hist = jax.lax.psum(hist, axis_name)
+    t = ht.locate_threshold(hist, params.k)                       # (B,KV)
+    keep = pooled >= t[..., None].astype(pooled.dtype)
+    indices, mask, count = ht.compact_indices(keep, shard_cap)
+    sel = ht.Selection(indices, mask, count, t)
+
+    # --- Phase 4: local partial attention + online-softmax merge --------
+    kc, ks, vc, vs = gather_selected(cache, sel)                  # (B,KV,C,·)
+    qh = q.reshape(b, kv, groups, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bkcd->bkgc", qh, kc.astype(jnp.float32))
+    s = s * ks[:, :, None, :] / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+    m_l = jnp.max(s, axis=-1)                                     # (B,KV,G)
+    m_g = jax.lax.pmax(m_l, axis_name)
+    p = jnp.exp(s - m_g[..., None])
+    p = jnp.where(mask[:, :, None, :], p, 0.0)
+    l_l = jnp.sum(p, axis=-1)
+    v = vc.astype(jnp.float32) * vs[..., None]
+    acc_l = jnp.einsum("bkgc,bkcd->bkgd", p, v)
+    l_g = jax.lax.psum(l_l, axis_name)
+    acc_g = jax.lax.psum(acc_l, axis_name)
+    out = acc_g / jnp.maximum(l_g, 1e-20)[..., None]
+    return out.reshape(b, h, hd)

@@ -1,0 +1,9 @@
+"""Distribution substrate: sharding rules, compressed collectives."""
+
+from repro.distributed.sharding import (
+    ShardingCtx, activation_sharding, constrain, constrain_residual,
+    constrain_qkv, param_specs, fit_spec, named)
+
+__all__ = ["ShardingCtx", "activation_sharding", "constrain",
+           "constrain_residual", "constrain_qkv", "param_specs", "fit_spec",
+           "named"]

@@ -1,0 +1,272 @@
+"""Sharding rules: parameter/activation PartitionSpecs per arch strategy.
+
+Axes (DESIGN.md §4):
+    data (+pod)  — DP batch axis; also the FSDP/ZeRO shard axis for params
+                   and optimizer state.
+    model        — TP (heads, d_ff, experts, vocab) for "tp" archs;
+                   sequence/context axis for "cp" archs and for all decode
+                   KV caches; SP axis for the residual stream during train.
+
+Parameter rules match on the leaf's path string; unmatched leaves replicate.
+A rule's spec is dropped per-dimension when the dimension size does not
+divide the axis size (e.g. kv_heads=8 on a 16-way model axis → replicated),
+so one rule table serves every arch.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    dp: Any                      # batch axes: ("data",), ("pod","data"), or None
+    tp: str = "model"            # tensor/sequence axis
+    strategy: str = "tp"         # arch attn_strategy
+    moe_strategy: str = "ep"     # "ep" experts over model | "tp" FF over model
+    fsdp_axes: Any = None        # param-shard axes; defaults to dp. Decode
+                                 # keeps FSDP over the full DP axes even when
+                                 # the batch can't occupy them (B=1).
+    mode: str = "train"          # "decode" switches to the serving rules
+                                 # (§Perf it-1: weights resident, activations
+                                 # move — never re-gather weights per token)
+    wide2d: Any = None           # decode: axes for the 2nd weight dim of
+                                 # huge layers (arctic experts: E over model
+                                 # × FF over these axes)
+
+    @property
+    def fsdp(self):
+        if self.fsdp_axes is not None:
+            return self.fsdp_axes or None   # () → explicitly no FSDP
+        return self.dp
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_spec(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop per-dimension axes that don't divide the dim size."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, size in zip(dims, shape):
+        if d is None:
+            out.append(None)
+        elif size % _axis_size(mesh, d) == 0 and size > 0:
+            out.append(d)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def decode_param_rules(ctx: ShardingCtx) -> list[tuple[str, P]]:
+    """Serving layout (§Perf it-1): every weight stays resident-sharded and
+    the (tiny) per-token activations move instead.
+
+    * TP archs shard heads; CP archs shard the *contracting* d_model dim of
+      the attention projections (psum of a (B, H·HD) activation ≈ KB);
+    * MoE experts: E over model × expert-FF over `wide2d` (the DP axes) —
+      2D-resident, so even arctic's 466 GB of experts fit per-chip with no
+      per-token gather (w_down contracts the FF shard → psum of (B,E/16,C,D));
+    * vocab stays Megatron vocab-parallel.
+    """
+    m = ctx.tp
+    w2 = ctx.wide2d
+    attn_in = P(None, m, None) if ctx.strategy == "tp" else P(m, None, None)
+    return [
+        (r".*attn/wq$", attn_in),
+        (r".*attn/wk$", attn_in),
+        (r".*attn/wv$", attn_in),
+        (r".*attn/wo$", P(m, None)),
+        (r".*attn/(q_norm|k_norm)/scale$", P(None)),
+        (r".*(glu|dense)/w_gate$", P(None, m)),
+        (r".*(glu|dense)/w_up$", P(None, m)),
+        (r".*(glu|dense)/w_down$", P(m, None)),
+        (r".*moe/router$", P(None, None)),
+        (r".*moe/w_gate$", P(m, None, w2)),
+        (r".*moe/w_up$", P(m, None, w2)),
+        (r".*moe/w_down$", P(m, w2, None)),
+        (r".*ssd/w_x$", P(None, m)),
+        (r".*ssd/w_(B|C|dt)$", P(None, None)),
+        (r".*ssd/w_out$", P(m, None)),
+        (r".*ssd/z_gate$", P(None, m)),
+        (r".*ssd/conv_w$", P(None, None)),
+        (r".*ssd/norm/scale$", P(m)),
+        (r".*rglru/w_x$", P(None, m)),
+        (r".*rglru/w_gate_out$", P(None, m)),
+        (r".*rglru/w_out$", P(m, None)),
+        (r".*rglru/w_(r|i)$", P(m, None)),
+        (r".*rglru/conv_w$", P(None, m)),
+        (r".*rglru/lam$", P(m)),
+        (r".*embed/tok$", P(m, None)),
+        (r".*embed/head$", P(None, m)),
+        (r".*projector$", P(None, None)),
+        (r".*", P()),
+    ]
+
+
+def param_rules(ctx: ShardingCtx) -> list[tuple[str, P]]:
+    """(path-regex, spec) — first match wins. Paths use '/'-joined keys."""
+    if ctx.mode == "decode":
+        return decode_param_rules(ctx)
+    f = ctx.fsdp
+    m = ctx.tp
+    attn_heads = m if ctx.strategy == "tp" else None   # CP: replicate head dim
+    return [
+        # --- attention ---------------------------------------------------
+        (r".*attn/wq$", P(f, attn_heads, None)),
+        (r".*attn/wk$", P(f, attn_heads, None)),
+        (r".*attn/wv$", P(f, attn_heads, None)),
+        (r".*attn/wo$", P(attn_heads, f) if ctx.strategy == "tp" else P(f, None)),
+        (r".*attn/(q_norm|k_norm)/scale$", P(None)),
+        # --- dense GLU -----------------------------------------------
+        (r".*(glu|dense)/w_gate$", P(f, m)),
+        (r".*(glu|dense)/w_up$", P(f, m)),
+        (r".*(glu|dense)/w_down$", P(m, f)),
+        # --- MoE: EP (experts over model) or expert-TP (FF over model,
+        # tokens stay put — §Perf it-9, right call for tiny experts) -----
+        (r".*moe/router$", P(f, None)),
+        (r".*moe/w_gate$", P(m, f, None) if ctx.moe_strategy == "ep"
+         else P(None, f, m)),
+        (r".*moe/w_up$", P(m, f, None) if ctx.moe_strategy == "ep"
+         else P(None, f, m)),
+        (r".*moe/w_down$", P(m, None, f) if ctx.moe_strategy == "ep"
+         else P(None, m, f)),
+        # --- SSD -------------------------------------------------------
+        (r".*ssd/w_x$", P(f, m)),
+        (r".*ssd/w_(B|C|dt)$", P(f, None)),
+        (r".*ssd/w_out$", P(m, f)),
+        (r".*ssd/z_gate$", P(f, m)),
+        (r".*ssd/conv_w$", P(None, None)),
+        (r".*ssd/norm/scale$", P(m)),
+        # --- RG-LRU ---------------------------------------------------
+        (r".*rglru/w_x$", P(f, m)),
+        (r".*rglru/w_gate_out$", P(f, m)),
+        (r".*rglru/w_out$", P(m, f)),
+        (r".*rglru/w_(r|i)$", P(m, None)),
+        (r".*rglru/conv_w$", P(None, m)),
+        (r".*rglru/lam$", P(m)),
+        # --- embeddings (Megatron vocab-parallel) ---------------------
+        (r".*embed/tok$", P(m, None)),
+        (r".*embed/head$", P(None, m)),
+        (r".*projector$", P(None, None)),
+        # --- norms / scalars -------------------------------------------
+        (r".*", P()),
+    ]
+
+
+def path_of(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(ctx: ShardingCtx, params_shape: Any) -> Any:
+    """Pytree of PartitionSpecs for a params(-shaped) pytree.
+
+    Stacked-layer leaves (leading periods/encoder dims) get their spec
+    shifted right by the number of extra leading dims.
+    """
+    rules = [(re.compile(rx), sp) for rx, sp in param_rules(ctx)]
+
+    def assign(keypath, leaf):
+        path = path_of(keypath)
+        shape = leaf.shape
+        for rx, sp in rules:
+            if rx.match(path):
+                base = sp
+                extra = len(shape) - len(base)
+                if extra > 0:   # stacked over periods/layers: lead dims unsharded
+                    base = P(*([None] * extra + list(base)))
+                return fit_spec(ctx.mesh, base, shape)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def named(ctx: ShardingCtx, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (called from step builders via a context)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: list[ShardingCtx] = []
+
+
+class activation_sharding:
+    """Context manager installing the ambient ShardingCtx used by `constrain`."""
+
+    def __init__(self, ctx: ShardingCtx):
+        self.ctx = ctx
+
+    def __enter__(self):
+        _ACTIVE.append(self.ctx)
+        return self.ctx
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+
+
+def current_ctx() -> ShardingCtx | None:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x: jax.Array, *dims) -> jax.Array:
+    """with_sharding_constraint with symbolic dims: "dp" | "tp" | None.
+
+    No-op when no ambient ShardingCtx (single-device tests/examples).
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    resolved = tuple(ctx.dp if d == "dp" else ctx.tp if d == "tp" else d
+                     for d in dims)
+    spec = fit_spec(ctx.mesh, P(*resolved), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain_residual(h: jax.Array) -> jax.Array:
+    """Residual-stream constraint: batch over DP, sequence over model (SP)."""
+    return constrain(h, "dp", "tp", None)
+
+
+def constrain_qkv(q, k, v):
+    """Attention-entry constraint per strategy: TP shards heads (seq
+    gathered); CP shards the query sequence (KV gathered/replicated)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return q, k, v
+    if ctx.strategy == "tp":
+        return (constrain(q, "dp", None, "tp", None),
+                constrain(k, "dp", None, "tp", None),
+                constrain(v, "dp", None, "tp", None))
+    return (constrain(q, "dp", "tp", None, None),
+            constrain(k, "dp", None, None, None),
+            constrain(v, "dp", None, None, None))

@@ -1,0 +1,74 @@
+"""Performance flags: the §Perf hillclimb switches.
+
+Every optimization beyond the paper-faithful baseline sits behind a flag so
+the baseline stays reproducible (`perf_flags(baseline=True)`); the dry-run
+CLI exposes ``--variant {baseline,opt}`` and EXPERIMENTS.md §Perf records
+each flag's before/after.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, fields, replace
+
+
+@dataclass
+class PerfFlags:
+    # it-1 (decode, collective term): keep serving weights TP-resident
+    # instead of FSDP-sharded — no per-token weight all-gather. Applied only
+    # when the per-chip resident size fits the HBM budget.
+    decode_weights_resident: bool = True
+    # it-2 (decode, memory term): histogram via one-pass scatter-add instead
+    # of a materialized (…, n, 256) one-hot in the XLA path.
+    hist_scatter_add: bool = True
+    # it-3 (MoE, compute+collective): flatten (B, T) into one token axis for
+    # routing and size expert capacity from the *global* token count
+    # (baseline reproduces GShard-style per-row capacity).
+    moe_flat_dispatch: bool = True
+    # it-4 (train, collective term): keep flash-attention operands in bf16
+    # across resharding boundaries (cast per-chunk, not before the K loop).
+    bf16_collectives: bool = True
+    # it-7 (MoE train, memory+collective): dispatch/combine via index
+    # gather/scatter instead of (B,T,E,C) one-hot einsums — O(E·C·D) moved
+    # bytes instead of O(T·E·C).
+    moe_gather_dispatch: bool = True
+    # it-8 (GQA decode, compute+memory): Σ_g(q_g·k) == (Σ_g q_g)·k, so sum
+    # the group's queries BEFORE 3-bit quantization — one integer dot per kv
+    # head instead of G (the paper is MHA; this is the GQA refinement).
+    group_sum_query: bool = True
+    # it-10 (local-window decode, memory): sliding-window layers keep a
+    # ring buffer of `window` slots instead of the full-context cache —
+    # gemma3's 40 local layers were dequantizing the whole 32k cache per
+    # step for a 1024-token window.
+    ring_local_cache: bool = True
+
+    def baseline(self) -> "PerfFlags":
+        return replace(self, **{f.name: False for f in fields(self)})
+
+
+PERF = PerfFlags()
+
+
+def set_flags(**kw) -> None:
+    for k, v in kw.items():
+        setattr(PERF, k, v)
+
+
+def set_baseline() -> None:
+    for f in fields(PerfFlags):
+        setattr(PERF, f.name, False)
+
+
+def set_optimized() -> None:
+    for f in fields(PerfFlags):
+        setattr(PERF, f.name, True)
+
+
+@contextlib.contextmanager
+def perf_flags(**kw):
+    old = {k: getattr(PERF, k) for k in kw}
+    try:
+        set_flags(**kw)
+        yield PERF
+    finally:
+        set_flags(**old)

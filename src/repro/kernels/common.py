@@ -1,0 +1,27 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and
+are validated on CPU with ``interpret=True`` against their pure-jnp oracles
+in ``ref.py``. ``INTERPRET`` flips automatically when no TPU is present so
+the same call sites work in both environments.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# MXU/VPU-aligned tile sizes (v5e: 128x128 MXU, (8,128) VREG lanes).
+LANE = 128
+SUBLANE = 8
+
+
+def interpret_default() -> bool:
+    """True when running without a TPU (kernels execute in interpret mode)."""
+    try:
+        return jax.devices()[0].platform != "tpu"
+    except Exception:  # pragma: no cover - device probing should not fail
+        return True
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,4 @@
+from repro.kernels.flash_decode.ops import sparse_flash_decode
+from repro.kernels.flash_decode.ref import sparse_flash_decode_ref
+
+__all__ = ["sparse_flash_decode", "sparse_flash_decode_ref"]

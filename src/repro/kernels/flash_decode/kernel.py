@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: exact sparse attention over gathered INT8 K/V
+(paper §4.2.4, Fig. 7).
+
+Two fused stages, blocked over the selection-capacity dim C:
+
+* stage 1 — segmented INT8 dot products with running ``qk_max`` tracking
+  (the paper accumulates partial sums across cycles because one HBM PC
+  yields a partial key per cycle; here one grid step consumes one C-block);
+* stage 2 — online softmax + Value accumulation:
+  ``o = Σ e^{s_i − qk_max} V_i / Σ e^{s_i − qk_max}`` with the usual
+  rescale-on-new-max correction, carried in VMEM scratch across the grid.
+
+Inputs are the *gathered* rows (the gather itself is XLA's job — on TPU a
+row gather from HBM is a dynamic-slice stream the compiler already
+pipelines; the kernel owns the compute-bound part).
+
+Grid = (B·KV, C/BC); scratch: m (G,), l (G,), acc (G, HD) — double-buffered
+K/V blocks stream HBM→VMEM while the MXU consumes the previous block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default
+
+DEFAULT_BLOCK_C = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, nblocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # (G, HD)
+    k = kc_ref[0].astype(jnp.float32)                      # (BC, HD) int8 codes
+    ks = ks_ref[0]                                         # (BC,)
+    mask = mask_ref[0] != 0                                # (BC,)
+    # Stage 1: segmented dot product; dequant applied post-accumulate.
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, BC)
+    s = s * ks[None, :] * scale
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    # Stage 2: online softmax with qk_max tracking.
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask[None, :], p, 0.0)
+    v = vc_ref[0].astype(jnp.float32) * vs_ref[0][:, None]  # (BC, HD)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    m_ref[...] = m_new
+
+    @pl.when(j == nblocks - 1)
+    def _finalize():
+        out_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def sparse_flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                               v_codes: jax.Array, v_scale: jax.Array,
+                               mask: jax.Array, *, block_c: int = DEFAULT_BLOCK_C,
+                               interpret: bool | None = None) -> jax.Array:
+    """q (BH, G, HD); k/v codes (BH, C, HD) int8 + scales (BH, C) f32;
+    mask (BH, C) bool → out (BH, G, HD) f32."""
+    if interpret is None:
+        interpret = interpret_default()
+    bh, g, hd = q.shape
+    c = k_codes.shape[1]
+    bc = min(block_c, c)
+    assert c % bc == 0, f"C={c} not divisible by block {bc}"
+    nblocks = c // bc
+    scale = 1.0 / (hd ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, nblocks=nblocks),
+        grid=(bh, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bc, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bc), lambda b, j: (b, j)),
+            pl.BlockSpec((1, bc, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bc), lambda b, j: (b, j)),
+            pl.BlockSpec((1, bc), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_codes, k_scale, v_codes, v_scale, mask.astype(jnp.int8))

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for exact sparse attention over gathered INT8 K/V."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_decode.kernel import sparse_flash_decode_pallas
+from repro.kernels.flash_decode.ref import sparse_flash_decode_ref
+
+
+def sparse_flash_decode(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                        v_codes: jax.Array, v_scale: jax.Array, mask: jax.Array,
+                        *, impl: str = "pallas", interpret: bool | None = None) -> jax.Array:
+    """Exact attention of q (BH, G, HD) over gathered INT8 K/V (BH, C, ·)."""
+    if impl == "pallas":
+        return sparse_flash_decode_pallas(q, k_codes, k_scale, v_codes, v_scale,
+                                          mask, interpret=interpret)
+    return sparse_flash_decode_ref(q, k_codes, k_scale, v_codes, v_scale, mask)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the sparse flash-decode kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sparse_flash_decode_ref(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                            v_codes: jax.Array, v_scale: jax.Array,
+                            mask: jax.Array) -> jax.Array:
+    """Same contract as the kernel: q (BH,G,HD), codes (BH,C,HD) int8."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bgd,bcd->bgc", q.astype(jnp.float32),
+                   k_codes.astype(jnp.float32))
+    s = s * k_scale[:, None, :] / jnp.sqrt(hd)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    v = v_codes.astype(jnp.float32) * v_scale[..., None]
+    return jnp.einsum("bgc,bcd->bgd", p, v) / jnp.maximum(l, 1e-20)

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for dense causal flash attention."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_prefill.kernel import flash_attention_pallas
+from repro.kernels.flash_prefill.ref import flash_attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    impl: str = "pallas", interpret: bool | None = None) -> jax.Array:
+    """Dense (optionally sliding-window) causal attention, (BH, T, HD) layout."""
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=interpret)
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for dense (windowed-)causal attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True, window: int = 0) -> jax.Array:
+    """q (BH, T, HD), k/v (BH, S, HD) → (BH, T, HD)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(hd)
+    t, sl = s.shape[-2:]
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(sl)[None, :]
+    mask = jnp.ones((t, sl), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)

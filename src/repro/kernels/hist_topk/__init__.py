@@ -1,0 +1,4 @@
+from repro.kernels.hist_topk.ops import hist_threshold
+from repro.kernels.hist_topk.ref import hist_threshold_ref
+
+__all__ = ["hist_threshold", "hist_threshold_ref"]

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for histogram threshold locating."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hist_topk.kernel import hist_threshold_pallas
+from repro.kernels.hist_topk.ref import hist_threshold_ref
+
+
+def hist_threshold(bins: jax.Array, k: jax.Array | int,
+                   *, impl: str = "pallas", interpret: bool | None = None):
+    """O(n) approximate Top-K threshold from INT8 score bins.
+
+    bins (BH, N) uint8; k scalar or (BH,). Returns (hist, threshold).
+    """
+    kk = jnp.broadcast_to(jnp.asarray(k, jnp.int32), bins.shape[:1])
+    if impl == "pallas":
+        return hist_threshold_pallas(bins, kk, interpret=interpret)
+    return hist_threshold_ref(bins, kk)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the histogram threshold kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.histogram_topk import histogram256, locate_threshold
+
+
+def hist_threshold_ref(bins: jax.Array, k: jax.Array):
+    """bins (BH, N) uint8, k (BH,) → (hist (BH,256) int32, thr (BH,) int32)."""
+    hist = histogram256(bins)
+    thr = locate_threshold(hist, jnp.asarray(k))
+    return hist, thr

@@ -1,0 +1,4 @@
+from repro.kernels.maxpool.ops import maxpool_int8
+from repro.kernels.maxpool.ref import maxpool_int8_ref
+
+__all__ = ["maxpool_int8", "maxpool_int8_ref"]

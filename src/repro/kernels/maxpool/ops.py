@@ -1,0 +1,16 @@
+"""Jit'd public wrapper for INT8 stride-1 max-pooling."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.maxpool.kernel import maxpool_pallas
+from repro.kernels.maxpool.ref import maxpool_int8_ref
+
+
+def maxpool_int8(bins: jax.Array, window: int, *, impl: str = "pallas",
+                 interpret: bool | None = None) -> jax.Array:
+    """Stride-1 windowed max over INT8 score bins (BH, N)."""
+    if impl == "pallas":
+        return maxpool_pallas(bins, window, interpret=interpret)
+    return maxpool_int8_ref(bins, window)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the maxpool kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.maxpool import maxpool1d_direct
+
+
+def maxpool_int8_ref(bins: jax.Array, window: int) -> jax.Array:
+    """bins (BH, N) uint8 → stride-1 windowed max (direct form)."""
+    return maxpool1d_direct(bins, window)

@@ -1,0 +1,4 @@
+from repro.kernels.score_est.ops import score_estimate
+from repro.kernels.score_est.ref import score_estimate_ref
+
+__all__ = ["score_estimate", "score_estimate_ref"]

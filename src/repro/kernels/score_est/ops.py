@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for relevance-score estimation.
+
+Dispatches between the Pallas TPU kernel and the XLA reference path; both
+consume the *packed* 2-bit feature words so HBM traffic is identical.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.score_est.kernel import score_estimate_pallas
+from repro.kernels.score_est.ref import score_estimate_ref
+
+
+def score_estimate(q_codes: jax.Array, q_scale: jax.Array, words: jax.Array,
+                   feat_scale: jax.Array, feat_zero: jax.Array,
+                   *, impl: str = "pallas", interpret: bool | None = None) -> jax.Array:
+    """Group-summed relevance scores (BH, N) from dual-compressed features.
+
+    impl: "pallas" (TPU kernel; interpret-mode on CPU) or "xla".
+    """
+    if impl == "pallas":
+        return score_estimate_pallas(q_codes, q_scale, words, feat_scale,
+                                     feat_zero, interpret=interpret)
+    return score_estimate_ref(q_codes, q_scale, words, feat_scale, feat_zero)

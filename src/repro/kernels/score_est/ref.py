@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the score-estimation kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+
+
+def score_estimate_ref(q_codes: jax.Array, q_scale: jax.Array, words: jax.Array,
+                       feat_scale: jax.Array, feat_zero: jax.Array) -> jax.Array:
+    """Same contract as `score_estimate_pallas`, built from jnp primitives."""
+    bh, g, r = q_codes.shape
+    codes = qz.unpack2bit(words, r)                           # (BH, N, r) int8
+    int_dot = jnp.einsum("bgr,bnr->bgn", q_codes.astype(jnp.int32),
+                         codes.astype(jnp.int32))
+    qsum = jnp.sum(q_codes.astype(jnp.int32), axis=-1)        # (BH, G)
+    a = feat_scale[:, None, :]                                # (BH, 1, N)
+    z = feat_zero[:, None, :]
+    s = q_scale[..., None] * (a * int_dot.astype(jnp.float32)
+                              + z * qsum[..., None].astype(jnp.float32))
+    return jnp.sum(s, axis=1)                                 # (BH, N)

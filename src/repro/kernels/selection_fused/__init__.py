@@ -1,0 +1,4 @@
+from repro.kernels.selection_fused.ops import fused_bin_pool_threshold
+from repro.kernels.selection_fused.ref import fused_bin_pool_threshold_ref
+
+__all__ = ["fused_bin_pool_threshold", "fused_bin_pool_threshold_ref"]

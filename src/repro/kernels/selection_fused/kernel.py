@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: fused selection phases 2-3 (paper Alg. 1 lines 3-14).
+
+One pass over the relevance scores does INT8 binning (with a precomputed
+global [lo, hi] affine), the stride-1 max-pool (halo via neighbour-block
+views, as in the maxpool kernel), and the 256-bin histogram accumulation;
+the final grid step runs the reverse prefix scan and emits the threshold.
+
+This is the fusion the roofline §Perf analysis points at: in the XLA path
+each of bins/pooled/one-hot is an HBM round-trip; here scores stream
+HBM→VMEM once and only the pooled bins + (256,) histogram + threshold
+leave the chip. The ASIC pipelines the same three stages back-to-back
+(Score RAM → Quant/Pool → Threshold Locating) — this kernel is that
+pipeline with VMEM playing the role of the inter-stage RAMs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default
+
+NUM_BINS = 256
+DEFAULT_BLOCK_N = 4096
+_EPS = 1e-6
+
+
+def _pool_row(x: jax.Array, window: int) -> jax.Array:
+    def shift(v, off):
+        pad = jnp.zeros((abs(off),), v.dtype)
+        return jnp.concatenate([pad, v[:-off]] if off > 0 else [v[-off:], pad])
+    out = jnp.maximum(jnp.maximum(shift(x, 1), x), shift(x, -1))
+    for _ in range((window - 3) // 2):
+        out = jnp.maximum(shift(out, 1), shift(out, -1))
+    return out
+
+
+def _kernel(s_ref, sl_ref, sr_ref, lo_ref, hi_ref, k_ref, len_ref,
+            bins_out_ref, hist_out_ref, thr_out_ref, acc_ref,
+            *, window: int, bn: int, nblocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo = lo_ref[0]
+    scale = jnp.maximum((hi_ref[0] - lo) / 254.0, _EPS)
+    valid_len = len_ref[0]
+
+    def to_bins(vals, offset):
+        pos = offset + jax.lax.broadcasted_iota(jnp.int32, vals.shape, 0)
+        b = jnp.clip(jnp.round((vals - lo) / scale) + 1.0, 1.0, 255.0)
+        return jnp.where(pos < valid_len, b, 0.0).astype(jnp.int32)
+
+    halo = window // 2
+    centre = to_bins(s_ref[0], j * bn)                          # (bn,)
+    if window > 1:
+        left = to_bins(sl_ref[0, bn - halo:], j * bn - halo)
+        right = to_bins(sr_ref[0, :halo], (j + 1) * bn)
+        left = jnp.where(j == 0, 0, left)
+        right = jnp.where(j == nblocks - 1, 0, right)
+        row = jnp.concatenate([left, centre, right])
+        pooled = _pool_row(row, window)[halo:halo + bn]
+        # pooling never resurrects masked slots
+        pooled = jnp.where(centre > 0, pooled, 0)
+    else:
+        pooled = centre
+    bins_out_ref[0] = pooled.astype(jnp.uint8)
+
+    bin_ids = jax.lax.broadcasted_iota(jnp.int32, (bn, NUM_BINS), 1)
+    acc_ref[...] += jnp.sum((pooled[:, None] == bin_ids).astype(jnp.int32),
+                            axis=0)
+
+    @pl.when(j == nblocks - 1)
+    def _finalize():
+        hist = acc_ref[...]
+        hist_out_ref[0] = hist
+        rev_cum = jnp.cumsum(hist[::-1])[::-1]
+        reached = rev_cum >= k_ref[0]
+        ids = jax.lax.broadcasted_iota(jnp.int32, (NUM_BINS,), 0)
+        thr_out_ref[0] = jnp.maximum(jnp.max(jnp.where(reached, ids, 0)), 1)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_n", "interpret"))
+def fused_bin_pool_threshold_pallas(scores: jax.Array, lo: jax.Array,
+                                    hi: jax.Array, k: jax.Array,
+                                    lengths: jax.Array, *, window: int = 7,
+                                    block_n: int = DEFAULT_BLOCK_N,
+                                    interpret: bool | None = None):
+    """scores (BH, N) f32; lo/hi/k/lengths (BH,) → (pooled bins (BH,N) u8,
+    hist (BH,256) i32, threshold (BH,) i32)."""
+    if interpret is None:
+        interpret = interpret_default()
+    bh, n = scores.shape
+    bn = min(block_n, n)
+    assert n % bn == 0 and (window == 1 or (window % 2 == 1 and window // 2 < bn))
+    nblocks = n // bn
+
+    centre = lambda b, j: (b, j)
+    left = lambda b, j: (b, jnp.maximum(j - 1, 0))
+    right = lambda b, j: (b, jnp.minimum(j + 1, nblocks - 1))
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, bn=bn, nblocks=nblocks),
+        grid=(bh, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, bn), centre),
+            pl.BlockSpec((1, bn), left),
+            pl.BlockSpec((1, bn), right),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), centre),
+            pl.BlockSpec((1, NUM_BINS), lambda b, j: (b, 0)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n), jnp.uint8),
+            jax.ShapeDtypeStruct((bh, NUM_BINS), jnp.int32),
+            jax.ShapeDtypeStruct((bh,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((NUM_BINS,), jnp.int32)],
+        interpret=interpret,
+    )(scores, scores, scores, lo.astype(jnp.float32), hi.astype(jnp.float32),
+      k.astype(jnp.int32), lengths.astype(jnp.int32))

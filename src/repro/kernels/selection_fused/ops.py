@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the fused selection (phases 2-3) kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.selection_fused.kernel import fused_bin_pool_threshold_pallas
+from repro.kernels.selection_fused.ref import fused_bin_pool_threshold_ref
+
+
+def fused_bin_pool_threshold(scores: jax.Array, lo: jax.Array, hi: jax.Array,
+                             k: jax.Array, lengths: jax.Array, *,
+                             window: int = 7, impl: str = "pallas",
+                             interpret: bool | None = None):
+    """Fused INT8 binning + stride-1 maxpool + histogram threshold.
+
+    scores (BH, N) f32 with per-row global [lo, hi]; returns
+    (pooled_bins u8, hist i32, threshold i32)."""
+    if impl == "pallas":
+        return fused_bin_pool_threshold_pallas(scores, lo, hi, k, lengths,
+                                               window=window,
+                                               interpret=interpret)
+    return fused_bin_pool_threshold_ref(scores, lo, hi, k, lengths,
+                                        window=window)

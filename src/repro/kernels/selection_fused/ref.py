@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused bin→pool→histogram→threshold kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.histogram_topk import histogram256, locate_threshold
+from repro.core.maxpool import maxpool1d_direct
+
+_EPS = 1e-6
+
+
+def fused_bin_pool_threshold_ref(scores: jax.Array, lo: jax.Array,
+                                 hi: jax.Array, k: jax.Array,
+                                 lengths: jax.Array, *, window: int = 7):
+    """Same contract as the kernel, built from the library primitives."""
+    bh, n = scores.shape
+    scale = jnp.maximum((hi - lo) / 254.0, _EPS)
+    pos = jnp.arange(n)[None, :]
+    valid = pos < lengths[:, None]
+    bins = jnp.clip(jnp.round((scores - lo[:, None]) / scale[:, None]) + 1.0,
+                    1.0, 255.0)
+    bins = jnp.where(valid, bins, 0.0).astype(jnp.uint8)
+    pooled = maxpool1d_direct(bins, window) if window > 1 else bins
+    pooled = jnp.where(valid, pooled, jnp.uint8(0))
+    hist = histogram256(pooled)
+    thr = locate_threshold(hist, k)
+    return pooled, hist, thr

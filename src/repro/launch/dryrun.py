@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as its own process (the XLA flag above is consumed at first jax
+initialization): ``PYTHONPATH=src python -m repro.launch.dryrun --arch
+qwen3-8b --shape train_4k --mesh single``.
+
+Granularities:
+  step   — the production scan-over-layers step: THE dry-run artifact
+           (compile success, memory_analysis, collective schedule).
+  layer  — per-block-kind unrolled compiles assembled into honest roofline
+           FLOP/byte/wire totals (scan bodies are otherwise counted once by
+           cost_analysis; see analysis.roofline).
+
+Results append to a JSON store (one file per cell) consumed by
+EXPERIMENTS.md tables and `benchmarks.run`.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import parse_collectives
+from repro.analysis.roofline import make_terms, model_flops
+from repro.configs import ARCH_NAMES, get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for every model input of this cell."""
+    b, t = shape.global_batch, shape.seq_len
+    S = jax.ShapeDtypeStruct
+    if cfg.encdec:
+        td = cfg.decoder_max_len
+        return {"frames": S((b, t, cfg.d_model), jnp.float32),
+                "tokens": S((b, td), jnp.int32),
+                "labels": S((b, td), jnp.int32)}
+    if cfg.frontend == "vision":
+        p = min(cfg.num_image_tokens, t - 8)
+        return {"tokens": S((b, t - p), jnp.int32),
+                "labels": S((b, t - p), jnp.int32),
+                "patches": S((b, p, cfg.frontend_dim), jnp.float32)}
+    return {"tokens": S((b, t), jnp.int32), "labels": S((b, t), jnp.int32)}
+
+
+def _to_struct(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Step-granularity dry-run
+# ---------------------------------------------------------------------------
+
+def dryrun_step(cfg: ModelConfig, shape: ShapeConfig, mesh, verbose=True) -> dict:
+    from repro.runtime.steps import (MeshPlan, make_decode_step,
+                                     make_prefill_step, make_train_step)
+    plan = MeshPlan.for_mesh(mesh)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    if shape.kind == "train":
+        _, jitted, shapes, _ = make_train_step(cfg, plan)
+        batch = input_specs(cfg, shape)
+        (pshape, oshape), _ = shapes(batch)
+        lowered = jitted(batch).lower(pshape, oshape, batch)
+    elif shape.kind == "prefill":
+        _, jitted, shapes, _ = make_prefill_step(cfg, plan, shape)
+        batch = input_specs(cfg, shape)
+        pshape, _ = shapes(batch)
+        lowered = jitted(batch).lower(pshape, batch)
+    else:  # decode
+        _, jitted, shapes, _ = make_decode_step(cfg, plan, shape)
+        (pshape, sshape), (_, _, tokspec) = shapes()
+        tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        lowered = jitted().lower(pshape, sshape, tok)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    res = {
+        "granularity": "step",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "chips": chips,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_est_bytes": ma.argument_size_in_bytes + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+        },
+        "cost": {"flops_per_chip": float(ca.get("flops", 0.0)),
+                 "bytes_per_chip": float(ca.get("bytes accessed", 0.0))},
+        "collectives": colls.summary(),
+        "wire_bytes_per_chip": colls.total_wire_bytes,
+    }
+    if verbose:
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args {ma.argument_size_in_bytes/1e9:.2f}GB "
+              f"temp {ma.temp_size_in_bytes/1e9:.2f}GB | "
+              f"colls {colls.total_count} ({colls.total_wire_bytes/1e6:.1f}MB wire)")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Layer-granularity roofline assembly
+# ---------------------------------------------------------------------------
+
+def _compile_cost(fn, *args, mesh) -> dict:
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire": colls.total_wire_bytes}
+
+
+def dryrun_layer(cfg: ModelConfig, shape: ShapeConfig, mesh, verbose=True) -> dict:
+    """Assemble per-chip roofline totals from unrolled per-block compiles."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.sharding import (ShardingCtx, activation_sharding,
+                                            fit_spec, param_specs)
+    from repro.models import blocks as B
+    from repro.models import attention as attn_mod
+    from repro.runtime.steps import MeshPlan, _cache_spec, _ns, _substate_spec
+    import functools
+
+    plan = MeshPlan.for_mesh(mesh)
+    chips = int(np.prod(list(mesh.shape.values())))
+    sctx = ShardingCtx(mesh=mesh, dp=plan.dp, tp=plan.tp,
+                       strategy=cfg.attn_strategy, moe_strategy=cfg.moe_strategy)
+    kinds = cfg.block_kinds()
+    kind_counts = {k: kinds.count(k) for k in set(kinds)}
+    b, t = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+
+    def ns(spec_tree):
+        return _ns(mesh, spec_tree)
+
+    def block_params_spec(kind):
+        pshape = jax.eval_shape(lambda k: B.block_init(k, kind, cfg),
+                                jax.random.PRNGKey(0))
+        return pshape, param_specs(sctx, pshape)
+
+    totals = {"flops": 0.0, "bytes": 0.0, "wire": 0.0}
+    detail = {}
+
+    def add(name, cost, mult):
+        for k in totals:
+            totals[k] += cost[{"flops": "flops", "bytes": "bytes", "wire": "wire"}[k]] * mult
+        detail[name] = {"mult": mult, **cost}
+
+    attn_mod.UNROLL_KV_CHUNKS = True
+    try:
+        if shape.kind == "train":
+            x = jax.ShapeDtypeStruct((b, t, cfg.d_model), dtype)
+            xspec = fit_spec(mesh, P(plan.dp, plan.tp, None), x.shape)
+            for kind, count in kind_counts.items():
+                pshape, pspec = block_params_spec(kind)
+
+                def pseudo_loss(p, x_, kind=kind):
+                    with activation_sharding(sctx):
+                        h, aux = B.block_train(p, kind, x_, cfg)
+                    return jnp.mean(jnp.square(h.astype(jnp.float32))) + aux
+
+                fn = jax.jit(jax.grad(pseudo_loss),
+                             in_shardings=(ns(pspec), NamedSharding(mesh, xspec)))
+                add(f"block_{kind}_grad", _compile_cost(fn, pshape, x, mesh=mesh), count)
+            # embed + head + CE loss grad ("embed/" wrapper keeps the rule
+            # paths identical to the full model's)
+            from repro.models.common import (cross_entropy, embed_tokens,
+                                             embedding_init, lm_logits)
+            emb_shape = {"embed": jax.eval_shape(
+                lambda k: embedding_init(k, cfg), jax.random.PRNGKey(0))}
+            espec = param_specs(sctx, emb_shape)
+            toks = jax.ShapeDtypeStruct((b, t), jnp.int32)
+
+            def head_loss(ep, tok):
+                with activation_sharding(sctx):
+                    h = embed_tokens(ep["embed"], tok).astype(dtype)
+                    logits = lm_logits(ep["embed"], h, cfg)
+                    return cross_entropy(logits, tok, cfg)
+
+            fn = jax.jit(jax.grad(head_loss),
+                         in_shardings=(ns(espec),
+                                       NamedSharding(mesh, fit_spec(mesh, P(plan.dp, None), (b, t)))))
+            add("embed_head_grad", _compile_cost(fn, emb_shape, toks, mesh=mesh), 1)
+
+        elif shape.kind == "prefill":
+            x = jax.ShapeDtypeStruct((b, t, cfg.d_model), dtype)
+            xspec = fit_spec(mesh, P(plan.dp, plan.tp, None), x.shape)
+            for kind, count in kind_counts.items():
+                pshape, pspec = block_params_spec(kind)
+
+                def fwd(p, x_, kind=kind):
+                    with activation_sharding(sctx):
+                        return B.block_prefill(p, kind, x_, cfg, max_seq=t)
+
+                fn = jax.jit(fwd, in_shardings=(ns(pspec), NamedSharding(mesh, xspec)))
+                add(f"block_{kind}_prefill", _compile_cost(fn, pshape, x, mesh=mesh), count)
+
+        else:  # decode
+            from repro.runtime.steps import decode_sharding_ctx
+            bdp, seq_axes = plan.decode_axes(shape.global_batch)
+            sctx = decode_sharding_ctx(cfg, plan, bdp, shape.global_batch)
+            dctx = B.DecodeCtx(axis=seq_axes, mesh=mesh, batch_axes=bdp,
+                               self_axis=plan.tp if cfg.encdec else None)
+            xd = jax.ShapeDtypeStruct((b, cfg.d_model), dtype)
+            xspec = fit_spec(mesh, P(bdp, None), xd.shape)
+            pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+            pspec_pos = fit_spec(mesh, P(bdp), (b,))
+            salca = B.salca_params_for(cfg, t)
+            for kind, count in kind_counts.items():
+                pshape, pspec = block_params_spec(kind)
+                st = jax.eval_shape(
+                    lambda kind=kind: B.block_init_state(kind, b, t, cfg))
+                stspec = _substate_spec(mesh, st, bdp, seq_axes, plan.tp, lead=0)
+
+                def dec(p, x_, s_, pos_, kind=kind):
+                    with activation_sharding(sctx):
+                        return B.block_decode(p, kind, x_, s_, cfg, pos_, dctx, salca)
+
+                fn = jax.jit(dec, in_shardings=(
+                    ns(pspec), NamedSharding(mesh, xspec), ns(stspec),
+                    NamedSharding(mesh, pspec_pos)))
+                add(f"block_{kind}_decode", _compile_cost(fn, pshape, xd, st, pos, mesh=mesh), count)
+            # embed + head (fwd only)
+            from repro.models.common import embedding_init, embed_tokens, lm_logits
+            emb_shape = {"embed": jax.eval_shape(lambda k: embedding_init(k, cfg),
+                                                 jax.random.PRNGKey(0))}
+            espec = param_specs(sctx, emb_shape)
+            tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+            def head(ep, tk):
+                with activation_sharding(sctx):
+                    h = embed_tokens(ep["embed"], tk).astype(dtype)
+                    return lm_logits(ep["embed"], h, cfg)
+
+            fn = jax.jit(head, in_shardings=(ns(espec), NamedSharding(mesh, pspec_pos)))
+            add("embed_head", _compile_cost(fn, emb_shape, tok, mesh=mesh), 1)
+    finally:
+        attn_mod.UNROLL_KV_CHUNKS = False
+
+    terms = make_terms(cfg, shape, chips,
+                       flops_per_chip=totals["flops"],
+                       hbm_bytes_per_chip=totals["bytes"],
+                       wire_bytes_per_chip=totals["wire"])
+    res = {"granularity": "layer", "chips": chips, "detail": detail,
+           "totals_per_chip": totals, "roofline": terms.as_dict(),
+           "model_flops_global": model_flops(cfg, shape)}
+    if verbose:
+        print(f"  roofline: compute {terms.compute_s:.3e}s  memory {terms.memory_s:.3e}s  "
+              f"collective {terms.collective_s:.3e}s → {terms.bottleneck} "
+              f"(useful {terms.useful_ratio:.2f}, frac {terms.roofline_fraction:.3f})")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, granularity: str,
+             out_dir: str, variant: str = "baseline") -> dict:
+    from repro import flags
+    if variant == "opt":
+        flags.set_optimized()
+    else:
+        flags.set_baseline()
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    print(f"[dryrun] {arch} × {shape_name} × {mesh_kind} ({granularity}, {variant})",
+          flush=True)
+    try:
+        if granularity == "step":
+            res = dryrun_step(cfg, shape, mesh)
+        else:
+            res = dryrun_layer(cfg, shape, mesh)
+        res["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        traceback.print_exc()
+        res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+               "granularity": granularity}
+    res.update({"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "variant": variant, "time": time.time()})
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_kind}__{granularity}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--granularity", default="step", choices=["step", "layer", "both"])
+    ap.add_argument("--variant", default="baseline", choices=["baseline", "opt"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"] \
+        if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    grans = ["step", "layer"] if args.granularity == "both" else [args.granularity]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                for g in grans:
+                    res = run_cell(arch, shape, mesh, g, args.out, args.variant)
+                    failures += res["status"] != "ok"
+    print(f"[dryrun] done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

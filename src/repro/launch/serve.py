@@ -1,0 +1,53 @@
+"""Serving launcher: batched long-context decoding with Salca.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --local \
+        --requests 4 --prompt-len 192 --new-tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import get_model
+from repro.runtime.serve import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=192)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = cfg.reduced()
+    max_seq = args.max_seq or (args.prompt_len + args.new_tokens + 8)
+    # round up for clean sharding
+    max_seq = ((max_seq + 127) // 128) * 128
+
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(cfg, params, max_seq=max_seq, slots=args.slots)
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=(args.prompt_len,)).astype(np.int32)
+        engine.submit(Request(rid=i, prompt=prompt,
+                              max_new_tokens=args.new_tokens))
+    stats = engine.run()
+    print("serve stats:", stats.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: unified block-based LMs + enc-dec + SSM/hybrid/MoE/VLM families."""
+
+from repro.models.registry import ModelAPI, get_model, DecodeCtx
+
+__all__ = ["ModelAPI", "get_model", "DecodeCtx"]

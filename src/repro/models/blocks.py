@@ -1,0 +1,314 @@
+"""Layer blocks: assembly of mixers + FFNs per block kind.
+
+Block kinds (ModelConfig.layer_pattern):
+    "A" — global attention (+ FFN).   Salca decode when cfg.salca.
+    "L" — local sliding-window attention (+ FFN). Dense SP decode.
+    "S" — Mamba2 SSD mixer (no FFN; mamba block layout).
+    "R" — RG-LRU recurrent block (+ FFN).
+
+Each kind provides init / train / prefill / decode with a uniform state
+protocol so the transformer driver can scan heterogeneous patterns.
+Decode runs inside shard_map with the KV cache sequence-sharded; recurrent
+states are batch-sharded only.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.cache import SalcaCache, prefill_cache
+from repro.core.selection import SalcaParams
+from repro.core.sp_decode import (
+    local_lengths, sp_append_token, sp_dense_decode, sp_salca_decode)
+from repro.core.attention import salca_decode_attention, dense_decode_from_cache
+from repro.models import ssm, rglru
+from repro.models.attention import attention_init, attention_train, qkv_project
+from repro.models.common import glu_init, glu_apply, rmsnorm, rmsnorm_init, rope, cdtype
+from repro.models.moe import moe_init, moe_apply
+
+
+class DecodeCtx(NamedTuple):
+    """How decode attention is distributed.
+
+    axis: mesh axis name (or tuple of names) the cache *sequence* dim is
+        sharded over, or None for single-device execution.
+    mesh: the Mesh for the shard_map island (required when axis is set).
+    batch_axes: mesh axis name(s) the batch dim is sharded over (or None).
+    """
+    axis: Any = None
+    mesh: Any = None
+    batch_axes: Any = None
+    self_axis: Any = None    # enc-dec: separate (shorter) self-cache seq axis
+
+
+def cache_pspec(ctx: "DecodeCtx", axis: Any = None):
+    """PartitionSpec pytree for a sequence-sharded SalcaCache."""
+    from jax.sharding import PartitionSpec as P
+    ba, sa = ctx.batch_axes, (axis if axis is not None else ctx.axis)
+    return SalcaCache(
+        k_codes=P(ba, sa, None, None), k_scale=P(ba, sa, None),
+        v_codes=P(ba, sa, None, None), v_scale=P(ba, sa, None),
+        feat_words=P(ba, sa, None, None), feat_scale=P(ba, sa, None),
+        feat_zero=P(ba, sa, None),
+        heavy_idx=P(ba, None, None), length=P(ba))
+
+
+def salca_params_for(cfg: ModelConfig, seq_len: int) -> SalcaParams:
+    k = max(128, min(int(seq_len * cfg.salca_retention), cfg.salca_max_k, seq_len))
+    k_cap = min(((int(k * 1.25) + 127) // 128) * 128, seq_len)
+    return SalcaParams(
+        feature_sparsity=cfg.salca_feature_sparsity, k=k, k_cap=k_cap,
+        pool_window=cfg.salca_pool_window, use_pool=cfg.salca_use_pool)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _ffn_init(key, cfg: ModelConfig) -> dict:
+    if cfg.moe:
+        k1, k2 = jax.random.split(key)
+        p = {"moe": moe_init(k1, cfg)}
+        if cfg.dense_residual:
+            p["dense"] = glu_init(k2, cfg.d_model, cfg.d_ff, cdtype(cfg))
+        return p
+    return {"glu": glu_init(key, cfg.d_model, cfg.d_ff, cdtype(cfg))}
+
+
+def block_init(key, kind: str, cfg: ModelConfig) -> dict:
+    dtype = cdtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("A", "L"):
+        return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+                "attn": attention_init(k1, cfg),
+                "ln2": rmsnorm_init(cfg.d_model, dtype),
+                "ffn": _ffn_init(k2, cfg)}
+    if kind == "S":
+        return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+                "ssd": ssm.ssd_init(k1, cfg)}
+    if kind == "R":
+        return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+                "rglru": rglru.rglru_init(k1, cfg),
+                "ln2": rmsnorm_init(cfg.d_model, dtype),
+                "ffn": _ffn_init(k2, cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# FFN apply (dense GLU / MoE / arctic hybrid)
+# ---------------------------------------------------------------------------
+
+def ffn_apply(params: dict, x: jax.Array, cfg: ModelConfig):
+    aux = jnp.float32(0.0)
+    if cfg.moe:
+        squeeze = x.ndim == 2
+        x3 = x[:, None] if squeeze else x
+        out, aux = moe_apply(params["moe"], x3, cfg)
+        if cfg.dense_residual:
+            out = out + glu_apply(params["dense"], x3, cfg.act)
+        return (out[:, 0] if squeeze else out), aux
+    return glu_apply(params["glu"], x, cfg.act), aux
+
+
+# ---------------------------------------------------------------------------
+# Train (full-sequence) forward
+# ---------------------------------------------------------------------------
+
+def block_train(params: dict, kind: str, x: jax.Array, cfg: ModelConfig,
+                attn_impl: str = "xla"):
+    """x: (B, T, D) → (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if kind in ("A", "L"):
+        window = cfg.local_window if kind == "L" else 0
+        h = attention_train(params["attn"], rmsnorm(params["ln1"], x, cfg.norm_eps),
+                            cfg, window=window, impl=attn_impl)
+        x = x + h
+        f, aux = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+        return x + f, aux
+    if kind == "S":
+        h = ssm.ssd_train(params["ssd"], rmsnorm(params["ln1"], x, cfg.norm_eps), cfg)
+        return x + h, aux
+    if kind == "R":
+        h = rglru.rglru_train(params["rglru"], rmsnorm(params["ln1"], x, cfg.norm_eps), cfg)
+        x = x + h
+        f, aux = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+        return x + f, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: train-forward + state extraction
+# ---------------------------------------------------------------------------
+
+def ring_size(cfg: ModelConfig, kind: str, max_seq: int) -> int:
+    """Effective cache length for a block: sliding-window ("L") layers keep
+    a `window`-slot ring instead of the full context (§Perf it-10)."""
+    from repro.flags import PERF
+    if (kind == "L" and PERF.ring_local_cache and cfg.local_window > 0
+            and cfg.local_window < max_seq):
+        return cfg.local_window
+    return max_seq
+
+
+def block_prefill(params: dict, kind: str, x: jax.Array, cfg: ModelConfig,
+                  max_seq: int, attn_impl: str = "xla"):
+    """Returns (x_out, state) where state feeds block_decode."""
+    if kind in ("A", "L"):
+        window = cfg.local_window if kind == "L" else 0
+        xn = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        positions = jnp.arange(x.shape[1])
+        q, k, v = qkv_project(params["attn"], xn, cfg, positions)
+        from repro.models.attention import flash_attention_xla
+        o = flash_attention_xla(q, k, v, causal=True, window=window)
+        x = x + o.reshape(x.shape[0], x.shape[1], -1) @ params["attn"]["wo"]
+        f, _ = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+        sp = salca_params_for(cfg, max_seq)
+        w_ring = ring_size(cfg, kind, max_seq)
+        t = k.shape[1]
+        if w_ring < max_seq and t >= w_ring:
+            # keep the last `window` tokens at their canonical ring slots
+            # (token j lives at slot j % W, so decode's wrap stays aligned)
+            base = t - w_ring
+            slot_tok = base + ((jnp.arange(w_ring) - base) % w_ring)
+            k, v = k[:, slot_tok], v[:, slot_tok]
+        cache = prefill_cache(k, v, max_seq=w_ring if w_ring < max_seq else max_seq,
+                              params=sp)
+        return x + f, cache
+    if kind == "S":
+        h, st = ssm.ssd_train(params["ssd"], rmsnorm(params["ln1"], x, cfg.norm_eps),
+                              cfg, return_state=True)
+        return x + h, st
+    if kind == "R":
+        h, st = rglru.rglru_train(params["rglru"],
+                                  rmsnorm(params["ln1"], x, cfg.norm_eps), cfg,
+                                  return_state=True)
+        x = x + h
+        f, _ = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+        return x + f, st
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token
+# ---------------------------------------------------------------------------
+
+def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig,
+                 pos: jax.Array, window: int, use_salca: bool,
+                 ctx: DecodeCtx, salca: SalcaParams):
+    """x: (B, D); cache sequence-sharded when ctx.axis is set.
+
+    Ring semantics (§Perf it-10): when a sliding-window layer's cache was
+    allocated at `window` slots (< full context), the write cursor wraps
+    (pos % W) and exactly the last min(pos+1, W) tokens are valid — no
+    window masking needed, and the full-context buffer never exists.
+    """
+    b, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bd,dhk->bhk", x, params["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, params["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    q = q.astype(jnp.float32)
+
+    ring = window > 0 and cache.max_seq <= window
+    if ring:
+        write_pos = pos % cache.max_seq
+        valid_len = jnp.minimum(pos + 1, cache.max_seq)
+        window = 0          # the ring holds exactly the window
+    else:
+        write_pos = pos
+        valid_len = pos + 1
+
+    if ctx.axis is None:
+        from repro.core.cache import append_token
+        cache = append_token(cache._replace(length=write_pos), k, v)
+        cache = cache._replace(length=valid_len)
+        if use_salca:
+            o = salca_decode_attention(q, cache, salca)
+        else:
+            valid = cache.valid_mask()
+            if window > 0:
+                p = jnp.arange(cache.max_seq)[None, :]
+                valid = valid & (p > (pos[:, None] - window))
+            kd = cache.k_codes.astype(jnp.float32) * cache.k_scale[..., None]
+            vd = cache.v_codes.astype(jnp.float32) * cache.v_scale[..., None]
+            from repro.core.attention import dense_decode_attention
+            o = dense_decode_attention(q, kd, vd, valid)
+    else:
+        from jax.sharding import PartitionSpec as P
+        ba, sa = ctx.batch_axes, ctx.axis
+
+        def island(q_, k_, v_, wp_, vl_, cache_):
+            # Never trust the carried length field across the global/local
+            # boundary: recompute this shard's span from the write cursor,
+            # then mask attention to the valid length (ring-aware).
+            cache_ = cache_._replace(
+                length=local_lengths(wp_, cache_.max_seq, sa))
+            cache_ = sp_append_token(cache_, k_, v_, wp_, sa)
+            cache_ = cache_._replace(
+                length=local_lengths(vl_, cache_.max_seq, sa))
+            if use_salca:
+                o_ = sp_salca_decode(q_, cache_, salca, sa)
+            else:
+                o_ = sp_dense_decode(q_, cache_, sa, window=window,
+                                     global_len=vl_)
+            return o_, cache_
+
+        rep3 = P(ba, None, None)
+        o, cache = jax.shard_map(
+            island, mesh=ctx.mesh,
+            in_specs=(rep3, rep3, rep3, P(ba), P(ba), cache_pspec(ctx)),
+            out_specs=(rep3, cache_pspec(ctx)),
+            check_vma=False,
+        )(q, k, v, write_pos, valid_len, cache)
+    o = o.astype(x.dtype).reshape(b, h * hd)
+    return o @ params["wo"], cache
+
+
+def block_decode(params: dict, kind: str, x: jax.Array, state, cfg: ModelConfig,
+                 pos: jax.Array, ctx: DecodeCtx, salca: SalcaParams):
+    """x: (B, D) single token; returns (x, new_state)."""
+    if kind in ("A", "L"):
+        window = cfg.local_window if kind == "L" else 0
+        use_salca = cfg.salca and kind == "A"
+        h, state = _attn_decode(params["attn"],
+                                rmsnorm(params["ln1"], x, cfg.norm_eps),
+                                state, cfg, pos, window, use_salca, ctx, salca)
+        x = x + h
+        f, _ = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+        return x + f, state
+    if kind == "S":
+        h, state = ssm.ssd_decode(params["ssd"],
+                                  rmsnorm(params["ln1"], x, cfg.norm_eps), state, cfg)
+        return x + h, state
+    if kind == "R":
+        h, state = rglru.rglru_decode(params["rglru"],
+                                      rmsnorm(params["ln1"], x, cfg.norm_eps), state, cfg)
+        x = x + h
+        f, _ = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+        return x + f, state
+    raise ValueError(kind)
+
+
+def block_init_state(kind: str, batch: int, max_seq: int, cfg: ModelConfig):
+    """Empty decode state for one block (used when decoding from scratch or
+    for building ShapeDtypeStructs in the dry-run)."""
+    if kind in ("A", "L"):
+        from repro.core.cache import empty_cache
+        sp = salca_params_for(cfg, max_seq)
+        return empty_cache(batch, ring_size(cfg, kind, max_seq),
+                           cfg.num_kv_heads, cfg.resolved_head_dim,
+                           sp.r(cfg.resolved_head_dim))
+    if kind == "S":
+        return ssm.ssd_init_state(batch, cfg)
+    if kind == "R":
+        return rglru.rglru_init_state(batch, cfg)
+    raise ValueError(kind)

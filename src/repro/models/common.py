@@ -1,0 +1,124 @@
+"""Shared model primitives: norms, RoPE, GLU MLPs, embeddings, init.
+
+Functional style: params are nested dicts of jax arrays; every ``apply``
+takes (params, inputs, cfg) and is pure. Compute dtypes follow the config
+(bf16 matmuls, f32 normalization/softmax accumulation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    """Truncated-normal with 1/sqrt(fan_in) scaling (fan_in = shape[0])."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = fan ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, HD); positions (..., T) or (T,). Rotates pairs of dims."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]                               # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def glu_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, d_ff), dtype),
+        "w_up": dense_init(k2, (d, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d), dtype),
+    }
+
+
+def glu_apply(params: dict, x: jax.Array, act: str) -> jax.Array:
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    g = fn(x @ params["w_gate"]) * (x @ params["w_up"])
+    return g @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head (padded vocab, optional tying)
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> dict:
+    dtype = cdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": embed_init(k1, (cfg.padded_vocab, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, (cfg.d_model, cfg.padded_vocab), dtype)
+    return p
+
+
+def embed_tokens(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def lm_logits(params: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", h, params["tok"])
+    else:
+        logits = h @ params["head"]
+    return logits
+
+
+def vocab_mask_logits(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """-inf on the padded vocab slots so softmax/CE ignore them."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    v = jnp.arange(cfg.padded_vocab)
+    return jnp.where(v < cfg.vocab_size, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Mean CE over all positions, f32 accumulation, padded-vocab aware."""
+    logits = vocab_mask_logits(logits, cfg).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

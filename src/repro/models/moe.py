@@ -1,0 +1,147 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based dispatch, EP sharding.
+
+GShard/Switch-style dense dispatch: fixed expert capacity keeps all shapes
+static so the experts dim shards cleanly over the "model" axis (expert
+parallelism); XLA inserts the all-to-alls between the token-sharded router
+and the expert-sharded einsums. Experts may be padded for divisibility
+(granite 40 → 48); phantom experts are masked out of routing.
+
+Arctic's dense-residual hybrid (a small dense GLU in parallel with the MoE
+branch) is composed at the block level (`blocks.py`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, cdtype
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, e, ff = cfg.d_model, cfg.padded_experts, cfg.moe_d_ff
+    dtype = cdtype(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype, fan_in=d),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype, fan_in=d),
+        "w_down": dense_init(ks[3], (e, ff, d), dtype, fan_in=ff),
+    }
+
+
+def _capacity(tokens: int, cfg: ModelConfig, tight: bool) -> int:
+    cap = int(cfg.capacity_factor * tokens * cfg.experts_per_token
+              / max(cfg.num_experts, 1))
+    if tight:  # §Perf it-3: 4-aligned, no inflated floor
+        return max(cfg.experts_per_token, ((cap + 3) // 4) * 4)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, T, D) → (out (B, T, D), aux_loss scalar).
+
+    Dispatch tensor layout (B, T, E, C) is built from top-k routing with
+    position-in-expert computed by a cumulative sum over the token dim —
+    tokens beyond an expert's capacity are dropped (standard capacity
+    semantics; the aux loss pushes the router toward balance).
+
+    §Perf it-3 (`moe_flat_dispatch`): (B, T) flattens into one token axis so
+    capacity is sized from the *global* token count — the baseline per-row
+    dispatch wastes E×C_min slots per batch row, catastrophic at decode
+    (T=1 ⇒ 128 experts × 8 slots for 2 routed tokens per row).
+    """
+    from repro.flags import PERF
+    from repro.distributed.sharding import constrain
+    b_in, t_in, d = x.shape
+    # Flatten ONLY for decode-like shapes (T small): merging a
+    # (data-sharded B × model-sharded T) axis at train time forces global
+    # resharding of every dispatch tensor — measured 35× collective
+    # regression on granite train_4k (§Perf it-3 log).
+    if PERF.moe_flat_dispatch and b_in > 1 and t_in <= 16:
+        x = x.reshape(1, b_in * t_in, d)
+    b, t, d = x.shape
+    e, k = cfg.padded_experts, cfg.experts_per_token
+    cap = _capacity(t, cfg, tight=PERF.moe_flat_dispatch)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+
+    logits = x.astype(jnp.float32) @ params["router"]           # (B,T,E)
+    if e != cfg.num_experts:  # mask phantom (padded) experts
+        eid = jnp.arange(e)
+        logits = jnp.where(eid < cfg.num_experts, logits, -1e30)
+    # §Perf it-9: keep routing tensors batch/seq-sharded — without the
+    # constraint the partitioner replicated top_k and the combine scatter
+    # over the data axis and all-reduced 400 MB partials per layer. Under
+    # expert-TP ("moe_strategy=tp": FF over model, tokens stay put) the
+    # model axis belongs to the FF dim, so the token dim stays unsharded
+    # inside the MoE and re-shards (reduce-scatter) at the block boundary.
+    from repro.distributed.sharding import current_ctx
+    ctx = current_ctx()
+    seq_ax = None if (ctx is not None and ctx.moe_strategy == "tp") else "tp"
+    gates = constrain(jax.nn.softmax(logits, axis=-1), "dp", seq_ax, None)
+    topw, topi = jax.lax.top_k(gates, k)                        # (B,T,k)
+    topw = constrain(topw, "dp", seq_ax, None)
+    topi = constrain(topi, "dp", seq_ax, None)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch): E * Σ_e f_e · p_e
+    me = jnp.mean(gates, axis=(0, 1))                           # (E,)
+    onehot_top1 = jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = jnp.sum(me * ce) * e
+
+    # Position of each (token, choice) within its expert queue.
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.int32)              # (B,T,k,E)
+    flat = sel.reshape(b, t * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                           # (B,T*k,E)
+    pos = pos.reshape(b, t, k, e)
+    pos_in_e = jnp.sum(sel * pos, axis=-1)                      # (B,T,k)
+    keep = pos_in_e < cap
+    w = topw * keep.astype(topw.dtype)
+
+    if PERF.moe_gather_dispatch:
+        # §Perf it-7: index-based dispatch. Build per-(expert, slot) token
+        # indices by scattering, gather the tokens, run the expert GLUs,
+        # scatter-add back weighted by the (renormalized) gate. Widest
+        # tensors are O(E·C·D) — no (T,E,C) one-hots ever materialize.
+        tok_ids = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, :, None],
+                                   (b, t, k))
+        e_flat = topi.reshape(b, t * k)
+        p_flat = jnp.where(keep, pos_in_e, cap).reshape(b, t * k)
+        tok_flat = tok_ids.reshape(b, t * k)
+        w_flat = w.reshape(b, t * k)
+
+        def scat(vals, fill):
+            buf = jnp.full((e, cap + 1), fill, vals.dtype)
+            return jax.vmap(lambda ef, pf, vf: buf.at[ef, pf].set(vf, mode="drop")
+                            )(e_flat, p_flat, vals)[:, :, :cap]
+
+        idx_ec = scat(tok_flat, jnp.int32(0))                   # (B,E,C)
+        w_ec = scat(w_flat.astype(jnp.float32), jnp.float32(0))  # 0 ⇒ unused slot
+        xe = jnp.take_along_axis(x[:, None], idx_ec[..., None], axis=2)  # (B,E,C,D)
+        hg = act(jnp.einsum("becd,edf->becf", xe, params["w_gate"]))
+        hu = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+        ye = jnp.einsum("becf,efd->becd", hg * hu, params["w_down"])
+        ye = ye * w_ec[..., None].astype(ye.dtype)              # gate weighting
+        # combine: scatter-add expert outputs back to their tokens
+        safe_idx = jnp.where(w_ec > 0, idx_ec, t)               # drop unused
+        out = jax.vmap(lambda yb, ib: jnp.zeros((t, d), yb.dtype)
+                       .at[ib.reshape(-1)].add(yb.reshape(-1, d), mode="drop")
+                       )(ye, safe_idx)
+        out = constrain(out, "dp", seq_ax, None)                # it-9
+    else:
+        # Baseline: GShard-style dense one-hot dispatch/combine einsums.
+        cap_onehot = jax.nn.one_hot(jnp.where(keep, pos_in_e, cap), cap,
+                                    dtype=x.dtype)               # (B,T,k,C)
+        disp = jnp.einsum("btke,btkc->btec", sel.astype(x.dtype), cap_onehot)
+        xe = jnp.einsum("btd,btec->becd", x, disp)              # (B,E,C,D)
+        hg = act(jnp.einsum("becd,edf->becf", xe, params["w_gate"]))
+        hu = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+        ye = jnp.einsum("becf,efd->becd", hg * hu, params["w_down"])
+        comb = jnp.einsum("btke,btkc,btk->btec", sel.astype(x.dtype),
+                          cap_onehot, w.astype(x.dtype))
+        out = jnp.einsum("btec,becd->btd", comb, ye)
+    if (b, t) != (b_in, t_in):
+        out = out.reshape(b_in, t_in, d)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,77 @@
+"""Uniform model API across families: init / loss / prefill / decode_step.
+
+Batch dict layouts (mirrored by `launch.dryrun.input_specs`):
+
+    dense|moe|ssm|hybrid : {"tokens": (B,T) i32, "labels": (B,T) i32}
+    vlm                  : + {"patches": (B,P,F) f32}; tokens are (B, T-P)
+    audio (enc-dec)      : {"frames": (B,T_enc,D) f32, "tokens": (B,Td) i32,
+                            "labels": (B,Td) i32}
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.blocks import DecodeCtx
+
+
+class ModelAPI(NamedTuple):
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., jax.Array]            # (params, batch) -> scalar
+    prefill: Callable[..., Any]               # (params, batch, max_seq) -> (logits, state)
+    decode_step: Callable[..., Any]           # (params, state, token, ctx) -> (logits, state)
+    init_state: Callable[..., Any]            # (batch, max_seq, prefill_len) -> state
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.encdec:
+        def init(key):
+            return encdec.init_encdec_params(key, cfg)
+
+        def loss(params, batch):
+            return encdec.encdec_loss(params, cfg, batch["frames"],
+                                      batch["tokens"], batch["labels"])
+
+        def prefill(params, batch, max_seq):
+            del max_seq  # cross length = frames length; self = decoder_max_len
+            return encdec.encdec_prefill(params, cfg, batch["frames"],
+                                         batch["tokens"])
+
+        def decode_step(params, state, token, ctx=None):
+            return encdec.encdec_decode_step(params, cfg, state, token, ctx)
+
+        def init_state(batch, max_seq, prefill_len=0):
+            # prefill_len is the decoder cursor — bounded by the (short)
+            # target stream; the long context is the cross-attention cache.
+            pl = min(int(prefill_len), cfg.decoder_max_len - 1) \
+                if not isinstance(prefill_len, jax.Array) else prefill_len
+            return encdec.encdec_init_state(cfg, batch, enc_len=max_seq,
+                                            prefill_len=pl)
+
+        return ModelAPI(init, loss, prefill, decode_step, init_state)
+
+    def init(key):
+        return transformer.init_lm_params(key, cfg)
+
+    def loss(params, batch):
+        return transformer.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                                   patches=batch.get("patches"))
+
+    def prefill(params, batch, max_seq):
+        return transformer.lm_prefill(params, cfg, batch["tokens"], max_seq,
+                                      patches=batch.get("patches"))
+
+    def decode_step(params, state, token, ctx=None):
+        return transformer.lm_decode_step(params, cfg, state, token, ctx)
+
+    def init_state(batch, max_seq, prefill_len=0):
+        return transformer.lm_init_state(cfg, batch, max_seq, prefill_len)
+
+    return ModelAPI(init, loss, prefill, decode_step, init_state)
+
+
+__all__ = ["ModelAPI", "get_model", "DecodeCtx"]

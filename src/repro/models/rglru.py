@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+    r_t = σ(W_r x_t);  i_t = σ(W_i x_t)
+    a_t = a^{c·r_t}          with a = σ(Λ) (learned, per-channel), c = 8
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses `jax.lax.associative_scan` over the token dim (log-depth on
+the diagonal recurrence); decode is the O(1) per-step update — like mamba2,
+constant decode state (Salca inapplicable, DESIGN.md §Arch-applicability).
+The surrounding block (conv1d + gated output) follows the paper's
+recurrent-block layout.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, cdtype
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array       # (B, W) recurrence state, f32
+    conv: jax.Array    # (B, conv_width-1, W) rolling conv window
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    dtype = cdtype(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, w), dtype, fan_in=d),
+        "w_gate_out": dense_init(ks[1], (d, w), dtype, fan_in=d),
+        "w_out": dense_init(ks[2], (w, d), dtype, fan_in=w),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "w_r": dense_init(ks[4], (w, w), jnp.float32, fan_in=w),
+        "w_i": dense_init(ks[5], (w, w), jnp.float32, fan_in=w),
+        # Λ init so a = σ(Λ) ∈ (0.9, 0.999) — long memory at init.
+        "lam": jnp.log(jnp.linspace(9.0, 999.0, w)).astype(jnp.float32),
+    }
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, prior: jax.Array | None = None):
+    width = w.shape[0]
+    if prior is None:
+        prior = jnp.zeros((seq.shape[0], width - 1, seq.shape[2]), seq.dtype)
+    padded = jnp.concatenate([prior, seq], axis=1)
+    out = sum(padded[:, i:i + seq.shape[1]] * w[i][None, None]
+              for i in range(width))
+    return out, padded[:, -(width - 1):]
+
+
+def _gates(params: dict, x: jax.Array):
+    """x (..., W) f32 → (log_a, beta·x_in) for the diagonal recurrence."""
+    r = jax.nn.sigmoid(x @ params["w_r"])
+    i = jax.nn.sigmoid(x @ params["w_i"])
+    log_a = -_C * r * jax.nn.softplus(-params["lam"])   # log σ(Λ)^{c·r}
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * (i * x)
+
+
+def rglru_train(params: dict, u: jax.Array, cfg: ModelConfig,
+                return_state: bool = False):
+    """u: (B, T, D) → (B, T, D) [, final RGLRUState] via associative scan."""
+    x_raw = u @ params["w_x"]
+    x, tail = _causal_conv(x_raw, params["conv_w"])
+    xf = x.astype(jnp.float32)
+    a, b = _gates(params, xf)                            # (B,T,W) each
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(u.dtype) * jax.nn.gelu(u @ params["w_gate_out"])
+    out = y @ params["w_out"]
+    if return_state:
+        return out, RGLRUState(h=h[:, -1], conv=x_raw[:, -(params["conv_w"].shape[0] - 1):])
+    return out
+
+
+def rglru_init_state(batch: int, cfg: ModelConfig) -> RGLRUState:
+    w = cfg.rnn_width or cfg.d_model
+    return RGLRUState(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, cfg.conv_width - 1, w), cdtype(cfg)))
+
+
+def rglru_decode(params: dict, u: jax.Array, state: RGLRUState,
+                 cfg: ModelConfig) -> tuple[jax.Array, RGLRUState]:
+    """One-token update. u: (B, D) → (B, D), new state."""
+    x = (u @ params["w_x"])[:, None]
+    x, new_conv = _causal_conv(x, params["conv_w"], state.conv)
+    xf = x[:, 0].astype(jnp.float32)
+    a, b = _gates(params, xf)
+    h = a * state.h + b
+    y = h.astype(u.dtype) * jax.nn.gelu(u @ params["w_gate_out"])
+    return y @ params["w_out"], RGLRUState(h=h, conv=new_conv)

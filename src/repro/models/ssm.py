@@ -1,0 +1,191 @@
+"""Mamba-2 SSD (state-space duality) mixer: chunked train scan + O(1) decode.
+
+Follows the minimal SSD formulation (arXiv:2405.21060 §6): within a chunk
+the output is computed with dense attention-like matmuls (MXU-friendly);
+states are passed between chunks with an exponential-decay recurrence. The
+decode step is the pure recurrence — the attention-free O(1)-state property
+that makes Salca inapplicable here by construction.
+
+Shapes: d_inner = expand·d_model; nheads = d_inner / head_dim;
+x (B,T,d_inner) viewed as (B,T,nh,hd); B/C (B,T,ngroups=1,dstate).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rmsnorm, rmsnorm_init, cdtype
+
+
+class SSMState(NamedTuple):
+    h: jax.Array        # (B, NH, HD, DS) inter-chunk / decode state
+    conv: jax.Array     # (B, W-1, conv_dim) rolling conv window
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return di, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssd_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh, hd, ds = _dims(cfg)
+    dtype = cdtype(cfg)
+    conv_dim = di + 2 * ds
+    ks = jax.random.split(key, 7)
+    return {
+        # Separate projections (not fused): the x-projection's output dim
+        # maps onto SSD heads and shards cleanly over the model axis, while
+        # B/C/dt stay replicated — a fused projection would slice a sharded
+        # dim at non-aligned offsets (DESIGN.md hardware-adaptation notes).
+        "w_x": dense_init(ks[0], (d, di), dtype, fan_in=d),
+        "w_B": dense_init(ks[1], (d, ds), dtype, fan_in=d),
+        "w_C": dense_init(ks[2], (d, ds), dtype, fan_in=d),
+        "w_dt": dense_init(ks[3], (d, nh), dtype, fan_in=d),
+        "w_out": dense_init(ks[4], (di, d), dtype, fan_in=di),
+        "conv_w": (jax.random.normal(ks[5], (cfg.conv_width, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "z_gate": dense_init(ks[6], (d, di), dtype, fan_in=d),
+    }
+
+
+def _project(params: dict, u: jax.Array):
+    """u (..., D) → (x (..., di), B (..., ds), C (..., ds), dt (..., nh))."""
+    return (u @ params["w_x"], u @ params["w_B"], u @ params["w_C"],
+            u @ params["w_dt"])
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, prior: jax.Array | None = None):
+    """Depthwise causal conv1d. seq (B,T,C), w (W,C); prior (B,W-1,C)."""
+    width = w.shape[0]
+    if prior is None:
+        prior = jnp.zeros((seq.shape[0], width - 1, seq.shape[2]), seq.dtype)
+    padded = jnp.concatenate([prior, seq], axis=1)
+    out = sum(padded[:, i:i + seq.shape[1]] * w[i][None, None]
+              for i in range(width))
+    return jax.nn.silu(out), padded[:, -(width - 1):]
+
+
+def ssd_train(params: dict, u: jax.Array, cfg: ModelConfig,
+              return_state: bool = False):
+    """Chunked SSD forward. u: (B, T, D) → (B, T, D) [, final SSMState]."""
+    b, t_in, _ = u.shape
+    di, nh, hd, ds = _dims(cfg)
+    cs = min(cfg.ssm_chunk, t_in)
+    if t_in % cs:  # pad to a chunk multiple; x=0 rows contribute no state
+        pad = cs - t_in % cs
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    t = u.shape[1]
+    nc = t // cs
+    xbcd = _project(params, u)
+    conv_in = jnp.concatenate([xbcd[0], xbcd[1], xbcd[2]], axis=-1)
+    conv_out, conv_tail = _causal_conv(conv_in, params["conv_w"])
+    x = conv_out[..., :di].reshape(b, t, nh, hd)
+    bmat = conv_out[..., di:di + ds]                               # (B,T,DS)
+    cmat = conv_out[..., di + ds:]
+    dt = jax.nn.softplus(xbcd[3].astype(jnp.float32)
+                         + params["dt_bias"])                      # (B,T,NH)
+    if t != t_in:  # padded rows must be exact no-ops: no decay, no update
+        dt = dt * (jnp.arange(t) < t_in)[None, :, None]
+    a = -jnp.exp(params["A_log"])                                  # (NH,)
+    da = dt * a[None, None]                                        # (B,T,NH) ≤ 0
+
+    # chunk views
+    xc = x.reshape(b, nc, cs, nh, hd)
+    bc = bmat.reshape(b, nc, cs, ds).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, cs, ds).astype(jnp.float32)
+    dac = da.reshape(b, nc, cs, nh)
+    dtc = dt.reshape(b, nc, cs, nh)
+    cum = jnp.cumsum(dac, axis=2)                                  # (B,NC,CS,NH)
+
+    # Intra-chunk (the "quadratic" branch): L[i,j] = exp(cum_i - cum_j) for i≥j.
+    # Mask BEFORE the exp: above-diagonal seg is positive and can overflow,
+    # and `where(mask, exp(seg), 0)` still produces NaN in the VJP (0 × inf).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (B,NC,CS,CS,NH)
+    causal = jnp.tril(jnp.ones((cs, cs), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -1e9)
+    lmat = jnp.exp(seg)
+    cb = jnp.einsum("bnis,bnjs->bnij", cc, bc)                     # (B,NC,CS,CS)
+    att = cb[..., None] * lmat * dtc[:, :, None, :, :]             # weight dt_j
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", att,
+                         xc.astype(jnp.float32))
+
+    # Chunk-final states: S_n = Σ_j exp(cum_end - cum_j)·dt_j·B_j ⊗ x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,NC,CS,NH)
+    sxb = jnp.einsum("bnjh,bnjh,bnjs,bnjhd->bnhds",
+                     decay_to_end, dtc, bc, xc.astype(jnp.float32))
+
+    # Inter-chunk recurrence over states.
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))                    # (B,NC,NH)
+
+    def scan_body(h, inp):
+        s_new, dec = inp
+        h_out = h                                                  # state BEFORE chunk
+        h = h * dec[..., None, None] + s_new
+        return h, h_out
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scan_body, h0,
+        (sxb.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                       # (B,NC,NH,HD,DS)
+
+    # Inter-chunk contribution: y_j += C_j · exp(cum_j) · h_prev
+    y_inter = jnp.einsum("bnjs,bnjh,bnhds->bnjhd",
+                         cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(b, t, nh, hd)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, t, di).astype(u.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(u @ params["z_gate"])
+    out = (y @ params["w_out"])[:, :t_in]
+    if return_state:
+        # conv window wants the raw (pre-activation) inputs of REAL tokens
+        raw_tail = conv_in[:, max(t_in - (cfg.conv_width - 1), 0):t_in]
+        if raw_tail.shape[1] < cfg.conv_width - 1:
+            raw_tail = jnp.pad(raw_tail, ((0, 0),
+                                          (cfg.conv_width - 1 - raw_tail.shape[1], 0),
+                                          (0, 0)))
+        return out, SSMState(h=h_final, conv=raw_tail)
+    return out
+
+
+def ssd_init_state(batch: int, cfg: ModelConfig) -> SSMState:
+    di, nh, hd, ds = _dims(cfg)
+    conv_dim = di + 2 * ds
+    return SSMState(
+        h=jnp.zeros((batch, nh, hd, ds), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), cdtype(cfg)),
+    )
+
+
+def ssd_decode(params: dict, u: jax.Array, state: SSMState,
+               cfg: ModelConfig) -> tuple[jax.Array, SSMState]:
+    """One-token recurrence. u: (B, D) → (B, D), updated state."""
+    b, _ = u.shape
+    di, nh, hd, ds = _dims(cfg)
+    x_r, b_r, c_r, dt_r = jax.tree.map(lambda t: t[:, None], _project(params, u))
+    conv_in = jnp.concatenate([x_r, b_r, c_r], axis=-1)            # (B,1,conv)
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], state.conv)
+    x = conv_out[:, 0, :di].reshape(b, nh, hd).astype(jnp.float32)
+    bm = conv_out[:, 0, di:di + ds].astype(jnp.float32)            # (B,DS)
+    cm = conv_out[:, 0, di + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_r[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dt * a[None])                                    # (B,NH)
+    h = state.h * dec[..., None, None] + jnp.einsum(
+        "bh,bs,bhd->bhds", dt, bm, x)
+    y = jnp.einsum("bs,bhds->bhd", cm, h) + params["D"][None, :, None] * x
+    y = y.reshape(b, di).astype(u.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(u @ params["z_gate"])
+    return y @ params["w_out"], SSMState(h=h, conv=new_conv)

@@ -1,0 +1,220 @@
+"""Decoder-only LM driver: init / train / prefill / decode over block patterns.
+
+Heterogeneous layer patterns (gemma3 "LLLLLA", recurrentgemma "RRL") are
+executed as a `jax.lax.scan` over *periods*: parameters for each pattern
+position are stacked across periods, the scan body applies one full period
+in order. Layers that don't fill a whole period ("tail", e.g.
+recurrentgemma's final 2 of 26) run unrolled after the scan. This keeps the
+compiled HLO O(pattern) instead of O(layers) while preserving per-layer
+weights.
+
+The VLM frontend stub (llava) projects precomputed patch embeddings into the
+token stream; the audio stub (whisper) lives in `encdec.py`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models.common import (
+    cdtype, cross_entropy, dense_init, embed_tokens, embedding_init,
+    lm_logits, rmsnorm, rmsnorm_init, vocab_mask_logits)
+
+
+def pattern_layout(cfg: ModelConfig) -> tuple[str, int, str]:
+    """(pattern, n_periods, tail_kinds)."""
+    p = cfg.layer_pattern
+    n_periods = cfg.num_layers // len(p)
+    tail = p[: cfg.num_layers - n_periods * len(p)]
+    return p, n_periods, tail
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_lm_params(key, cfg: ModelConfig) -> dict:
+    pattern, n_periods, tail = pattern_layout(cfg)
+    keys = jax.random.split(key, 3 + len(tail))
+    params: dict[str, Any] = {"embed": embedding_init(keys[0], cfg),
+                              "ln_f": rmsnorm_init(cfg.d_model, cdtype(cfg))}
+    if cfg.frontend == "vision":
+        params["projector"] = dense_init(keys[1], (cfg.frontend_dim, cfg.d_model),
+                                         cdtype(cfg))
+
+    def stack_init(kind: str, base_key):
+        ks = jax.random.split(base_key, n_periods)
+        return jax.vmap(lambda k: B.block_init(k, kind, cfg))(ks)
+
+    pkeys = jax.random.split(keys[2], len(pattern))
+    params["periods"] = tuple(stack_init(kind, pkeys[i])
+                              for i, kind in enumerate(pattern))
+    params["tail"] = tuple(B.block_init(keys[3 + i], kind, cfg)
+                           for i, kind in enumerate(tail))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding frontends
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                 patches: jax.Array | None = None) -> jax.Array:
+    """tokens (B, T_text) [+ patches (B, P, F) for VLM] → (B, T, D)."""
+    h = embed_tokens(params["embed"], tokens).astype(cdtype(cfg))
+    if cfg.frontend == "vision" and patches is not None:
+        img = (patches.astype(cdtype(cfg)) @ params["projector"])
+        h = jnp.concatenate([img, h], axis=1)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Train forward / loss
+# ---------------------------------------------------------------------------
+
+def lm_forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+               patches: jax.Array | None = None, attn_impl: str = "xla"):
+    """Full-sequence forward → (logits (B,T,V_pad), aux_loss)."""
+    from repro.distributed.sharding import constrain, constrain_residual
+    pattern, n_periods, tail = pattern_layout(cfg)
+    h = constrain_residual(embed_inputs(params, cfg, tokens, patches))
+    aux_total = jnp.float32(0.0)
+
+    def run_period(h, period_params):
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(pattern):
+            h, a = B.block_train(period_params[i], kind, h, cfg, attn_impl)
+            h = constrain_residual(h)
+            aux = aux + a
+        return h, aux
+
+    if n_periods > 0:
+        def body(carry, period_params):
+            h, aux = carry
+            h, a = jax.checkpoint(run_period)(h, period_params)
+            return (h, aux + a), None
+
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), params["periods"])
+    for i, kind in enumerate(tail):
+        h, a = jax.checkpoint(
+            lambda h_, p_, k_=kind: B.block_train(p_, k_, h_, cfg, attn_impl)
+        )(h, params["tail"][i])
+        h = constrain_residual(h)
+        aux_total = aux_total + a
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    # Gather the sequence for the vocab-parallel head (Megatron layout).
+    h = constrain(h, "dp", None, None)
+    return lm_logits(params["embed"], h, cfg), aux_total
+
+
+def lm_loss(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            labels: jax.Array, patches: jax.Array | None = None,
+            attn_impl: str = "xla") -> jax.Array:
+    logits, aux = lm_forward(params, cfg, tokens, patches, attn_impl)
+    if cfg.frontend == "vision" and patches is not None:
+        logits = logits[:, patches.shape[1]:]  # loss over text positions
+    return cross_entropy(logits, labels, cfg) + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill → decode states
+# ---------------------------------------------------------------------------
+
+class LMState(NamedTuple):
+    """Decode state: per-pattern-position stacked states + tail states + cursor."""
+    period_states: tuple
+    tail_states: tuple
+    pos: jax.Array          # (B,) global lengths
+
+
+def lm_prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, max_seq: int,
+               patches: jax.Array | None = None):
+    """Run prefill, build decode states. Returns (last_logits, LMState)."""
+    pattern, n_periods, tail = pattern_layout(cfg)
+    h = embed_inputs(params, cfg, tokens, patches)
+    t = h.shape[1]
+
+    period_states = []
+    if n_periods > 0:
+        def body(h, period_params):
+            states = []
+            for i, kind in enumerate(pattern):
+                h, st = B.block_prefill(period_params[i], kind, h, cfg, max_seq)
+                states.append(st)
+            return h, tuple(states)
+
+        h, stacked_states = jax.lax.scan(body, h, params["periods"])
+        period_states = stacked_states
+    tail_states = []
+    for i, kind in enumerate(tail):
+        h, st = B.block_prefill(params["tail"][i], kind, h, cfg, max_seq)
+        tail_states.append(st)
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = vocab_mask_logits(lm_logits(params["embed"], h[:, -1], cfg), cfg)
+    pos = jnp.full((h.shape[0],), t, jnp.int32)
+    return logits, LMState(tuple(period_states), tuple(tail_states), pos)
+
+
+def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int,
+                  prefill_len: int | jax.Array = 0) -> LMState:
+    """Empty (or cursor-advanced) decode state, used for dry-run specs."""
+    pattern, n_periods, tail = pattern_layout(cfg)
+
+    def stack(kind):
+        st = B.block_init_state(kind, batch, max_seq, cfg)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), st)
+
+    period_states = tuple(stack(kind) for kind in pattern) if n_periods else ()
+    tail_states = tuple(B.block_init_state(kind, batch, max_seq, cfg) for kind in tail)
+    pos = jnp.full((batch,), prefill_len, jnp.int32)
+    return LMState(period_states, tail_states, pos)
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def lm_decode_step(params: dict, cfg: ModelConfig, state: LMState,
+                   token: jax.Array, ctx: B.DecodeCtx | None = None):
+    """One decode step. token (B,) int32 → (logits (B, V_pad), new state)."""
+    pattern, n_periods, tail = pattern_layout(cfg)
+    ctx = ctx or B.DecodeCtx()
+    h = embed_tokens(params["embed"], token).astype(cdtype(cfg))
+    pos = state.pos
+
+    # max_seq for salca params: derive from any attention cache in the state.
+    def _max_seq():
+        for st in list(state.period_states) + list(state.tail_states):
+            if isinstance(st, B.SalcaCache):
+                return st.k_codes.shape[-3]
+        return 0
+
+    salca = B.salca_params_for(cfg, max(_max_seq(), 128))
+
+    if n_periods > 0:
+        def body(h, xs):
+            period_params, period_states = xs
+            new_states = []
+            for i, kind in enumerate(pattern):
+                h, st = B.block_decode(period_params[i], kind, h,
+                                       period_states[i], cfg, pos, ctx, salca)
+                new_states.append(st)
+            return h, tuple(new_states)
+
+        h, new_period_states = jax.lax.scan(
+            body, h, (params["periods"], state.period_states))
+    else:
+        new_period_states = ()
+    new_tail = []
+    for i, kind in enumerate(tail):
+        h, st = B.block_decode(params["tail"][i], kind, h, state.tail_states[i],
+                               cfg, pos, ctx, salca)
+        new_tail.append(st)
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = vocab_mask_logits(lm_logits(params["embed"], h, cfg), cfg)
+    return logits, LMState(new_period_states, tuple(new_tail), pos + 1)

@@ -1,0 +1,78 @@
+"""Step monitoring: straggler detection, NaN guards, heartbeats.
+
+At thousand-node scale slow hosts (failing HBM, thermal throttle, network
+flap) show up as step-time outliers long before they hard-fail. The monitor
+keeps an EWMA of step time and flags steps slower than ``threshold ×`` the
+EWMA; repeated flags trip the straggler alarm the launcher can act on
+(drain + re-slice). A heartbeat file lets an external watchdog detect hangs.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+import time
+from dataclasses import dataclass, field
+
+log = logging.getLogger("repro.monitor")
+
+
+@dataclass
+class StepMonitor:
+    ewma_alpha: float = 0.1
+    straggler_threshold: float = 2.5     # × EWMA
+    alarm_after: int = 3                 # consecutive flags
+    heartbeat_path: str | None = None
+
+    ewma: float | None = None
+    slow_streak: int = 0
+    total_steps: int = 0
+    flagged_steps: int = 0
+    history: list = field(default_factory=list)
+
+    def record(self, step: int, seconds: float, loss: float | None = None) -> dict:
+        self.total_steps += 1
+        flagged = False
+        if self.ewma is None:
+            self.ewma = seconds
+        else:
+            if seconds > self.straggler_threshold * self.ewma:
+                flagged = True
+                self.flagged_steps += 1
+                self.slow_streak += 1
+                log.warning("straggler step %d: %.3fs vs EWMA %.3fs",
+                            step, seconds, self.ewma)
+            else:
+                self.slow_streak = 0
+            self.ewma = (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * seconds
+        alarm = self.slow_streak >= self.alarm_after
+        rec = {"step": step, "seconds": seconds, "ewma": self.ewma,
+               "flagged": flagged, "alarm": alarm, "loss": loss}
+        self.history.append(rec)
+        if self.heartbeat_path:
+            tmp = self.heartbeat_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"step": step, "time": time.time()}, f)
+            os.replace(tmp, self.heartbeat_path)
+        return rec
+
+
+class NaNGuard:
+    """Counts non-finite losses; trips after ``patience`` in a row."""
+
+    def __init__(self, patience: int = 2):
+        self.patience = patience
+        self.streak = 0
+        self.total = 0
+
+    def check(self, loss: float) -> bool:
+        """True → caller should restore from checkpoint."""
+        import math
+        if not math.isfinite(loss):
+            self.streak += 1
+            self.total += 1
+            log.error("non-finite loss (streak %d)", self.streak)
+            return self.streak >= self.patience
+        self.streak = 0
+        return False

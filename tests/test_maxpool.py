@@ -1,0 +1,39 @@
+"""Multi-level-reuse maxpool == direct windowed max (paper §4.2.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.maxpool import maxpool1d_direct, maxpool1d_reuse
+
+
+@given(st.integers(4, 200), st.sampled_from([3, 5, 7, 9, 11]), st.integers(0, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_reuse_equals_direct_int(n, window, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, size=(3, n)), jnp.uint8)
+    a = np.asarray(maxpool1d_reuse(x.astype(jnp.int32), window))
+    b = np.asarray(maxpool1d_direct(x.astype(jnp.int32), window))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.integers(4, 64), st.sampled_from([3, 5, 7]))
+@settings(max_examples=20, deadline=None)
+def test_reuse_equals_direct_float(n, window):
+    rng = np.random.default_rng(n * window)
+    x = jnp.asarray(rng.normal(size=(2, n)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(maxpool1d_reuse(x, window)),
+                                  np.asarray(maxpool1d_direct(x, window)))
+
+
+def test_window_one_is_identity():
+    x = jnp.arange(12, dtype=jnp.int32).reshape(1, 12)
+    np.testing.assert_array_equal(np.asarray(maxpool1d_reuse(x, 1)), np.asarray(x))
+
+
+def test_pooling_spreads_spikes():
+    """Positions adjacent to a high score get co-selected (paper's point)."""
+    x = np.zeros((1, 32), np.int32)
+    x[0, 16] = 100
+    out = np.asarray(maxpool1d_reuse(jnp.asarray(x), 7))
+    assert np.all(out[0, 13:20] == 100) and out[0, 12] == 0 and out[0, 20] == 0

@@ -1,0 +1,71 @@
+"""§4.4 performance model reproduces the paper's operating point."""
+
+import pytest
+
+from repro.core import performance_model as pm
+
+
+def test_paper_bandwidth_constraint_m_pre_25():
+    """Paper: with m_att=2, the HBM2 budget admits m_pre = 25."""
+    hw = pm.HardwareSpec()
+    bw = pm.bandwidth_bits_per_cycle(hw)       # 8192 bits per compute cycle
+    assert bw == 8192
+    m_att = 2
+    m_pre = int((bw - pm.att_bits_per_key(hw.d) * m_att)
+                / pm.pre_bits_per_key(hw.d, 0.5))
+    assert m_pre == 25
+
+
+def test_paper_operating_point():
+    """p_pre=16 ⇒ m_pre=17; min retention ≈ 5.8%; h_pre=11 (paper §4.4)."""
+    hw = pm.HardwareSpec()
+    dp = pm.solve(hw, s_f=0.5, target_retention=0.05)
+    assert dp.p_pre == 16
+    assert dp.m_pre == 17           # ceil(16 / 0.95)
+    assert dp.m_att >= 2
+    r_min = pm.min_retention(hw, m_pre=17, m_att=2)
+    assert abs(r_min - 0.058) < 0.002
+    h_pre, _ = pm.pc_allocation(hw, 0.5, m_pre=16, m_att=1)
+    assert h_pre == 11              # paper allocates 11 PCs to pre-computing
+
+
+def test_pc_allocation_fits_chn():
+    hw = pm.HardwareSpec()
+    dp = pm.solve(hw, s_f=0.5, target_retention=0.05)
+    h_pre, h_att = pm.pc_allocation(hw, 0.5, dp.p_pre, dp.p_att)
+    assert h_pre + h_att <= hw.chn + 4  # paper over-allocates slightly (27 vs 32)
+
+
+def test_bytes_model_dual_compression_ratio():
+    """Salca filter stream ≈ 1/8 the 4-bit baselines' and ≪ dense reads."""
+    n, d, kv = 32768, 128, 1
+    salca = pm.salca_bytes_per_token(n, d, kv, s_f=0.5, retention=0.05)
+    four = pm.filter4bit_bytes_per_token(n, d, kv, retention=0.13)
+    dense = pm.dense_bytes_per_token(n, d, kv)
+    assert four.feature_stream / salca.feature_stream > 3.2   # 544/160 bits
+    assert dense.total / salca.total > 5                      # end-to-end win
+    assert salca.feature_stream / dense.total < 0.05
+
+
+def test_retention_scaling_moves_bottleneck():
+    """Below the balance point pre-computing dominates; above it attention."""
+    hw = pm.HardwareSpec()
+    m_pre, m_att = 17, 2
+    r_bal = pm.min_retention(hw, m_pre, m_att)
+    lo = pm.decode_cycles(hw, 65536, r_bal * 0.5, m_pre, m_att)
+    bal = pm.decode_cycles(hw, 65536, r_bal, m_pre, m_att)
+    hi = pm.decode_cycles(hw, 65536, r_bal * 2.0, m_pre, m_att)
+    assert lo == pytest.approx(bal)    # pre-computing path is flat in r_q
+    assert hi > bal                     # attention path grows with retention
+
+
+def test_solver_respects_target():
+    """After the paper's power-of-two rounding, the supported retention sits
+    near the target — the paper itself lands at 5.8% for a 5% target."""
+    hw = pm.HardwareSpec()
+    for target in (0.03, 0.05, 0.10, 0.20):
+        dp = pm.solve(hw, s_f=0.5, target_retention=target)
+        # 5.8% is the hardware floor (the paper's own design point) —
+        # targets below it get the floor design.
+        assert dp.min_retention <= max(target * 1.25, 0.059) + 1e-9
+        assert dp.u_pre > 0.9 and dp.u_att >= 0.55

@@ -1,0 +1,112 @@
+"""Sharding-rule unit tests (no multi-device needed: specs are pure data)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import ShardingCtx, fit_spec, param_specs
+from repro.launch.mesh import make_local_mesh
+from repro.models import get_model
+
+
+class FakeMesh:
+    """Minimal mesh stand-in with prescribed axis sizes."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_fit_spec_drops_nondivisible():
+    assert fit_spec(MESH, P(None, "model", None), (4096, 8, 128)) == \
+        P(None, None, None)          # kv=8 can't shard 16-way
+    assert fit_spec(MESH, P(None, "model", None), (4096, 32, 128)) == \
+        P(None, "model", None)
+    assert fit_spec(MESH, P(("data", "model"),), (512,)) == P(("data", "model"),)
+    assert fit_spec(MESH, P(("data", "model"),), (100,)) == P(None)
+
+
+def _specs(arch):
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    pshape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    ctx = ShardingCtx(mesh=MESH, dp=("data",), strategy=cfg.attn_strategy)
+    return cfg, pshape, param_specs(ctx, pshape)
+
+
+def test_tp_arch_shards_heads():
+    cfg, pshape, specs = _specs("qwen3-8b")
+    wq = specs["periods"][0]["attn"]["wq"]
+    assert wq == P(None, "data", "model", None)  # (periods, D, H, HD)
+    wk = specs["periods"][0]["attn"]["wk"]
+    assert wk[2] is None                          # kv=8 ∤ 16 → replicated
+    glu = specs["periods"][0]["ffn"]["glu"]["w_gate"]
+    assert glu == P(None, "data", "model")
+
+
+def test_cp_arch_replicates_head_dim():
+    cfg, pshape, specs = _specs("phi3-medium-14b")
+    wq = specs["periods"][0]["attn"]["wq"]
+    assert wq[2] is None            # CP: heads not sharded (40 ∤ 16 anyway)
+    assert wq[1] == "data"          # FSDP survives
+    glu = specs["periods"][0]["ffn"]["glu"]["w_gate"]
+    assert glu[2] == "model"        # MLP still tensor-parallel (17920/16)
+
+
+def test_moe_experts_shard_over_model():
+    cfg, pshape, specs = _specs("arctic-480b")
+    moe = specs["periods"][0]["ffn"]["moe"]
+    assert moe["w_gate"][1] == "model"   # (periods, E, D, FF): experts axis
+    assert moe["w_up"][1] == "model"
+    assert moe["router"] == P(None, "data", None)
+    # arctic dense residual rides TP
+    assert specs["periods"][0]["ffn"]["dense"]["w_gate"][2] == "model"
+
+
+def test_granite_padded_experts_divide():
+    cfg = get_config("granite-moe-3b-a800m")
+    assert cfg.padded_experts == 48 and cfg.padded_experts % 16 == 0
+
+
+def test_vocab_padding():
+    for arch in ("mamba2-2.7b", "granite-moe-3b-a800m", "whisper-small"):
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab % 16 == 0
+
+
+def test_embed_specs_vocab_parallel():
+    _, _, specs = _specs("qwen3-8b")
+    assert specs["embed"]["tok"] == P("model", None)
+    assert specs["embed"]["head"] == P(None, "model")
+
+
+def test_ssd_specs():
+    _, _, specs = _specs("mamba2-2.7b")
+    blk = specs["periods"][0]["ssd"]
+    assert blk["w_x"] == P(None, "data", "model")       # d_inner over model
+    assert blk["w_B"][2] is None                        # small dims replicated
+    assert blk["w_out"] == P(None, "model", "data")
+
+
+def test_decode_axes_plan():
+    from repro.runtime.steps import MeshPlan
+    mesh = make_local_mesh()   # (1, N) real mesh just for construction
+    plan = MeshPlan(mesh=MESH, dp=("data",))
+    b, s = plan.decode_axes(128)
+    assert b == ("data",) and s == "model"
+    b, s = plan.decode_axes(1)
+    assert b is None and s == ("data", "model")
+    plan3 = MeshPlan(mesh=MESH3, dp=("pod", "data"))
+    b, s = plan3.decode_axes(128)
+    assert b == ("pod", "data") and s == "model"
+    b, s = plan3.decode_axes(1)
+    assert b is None and s == ("pod", "data", "model")
+    b, s = plan3.decode_axes(32)
+    assert b == ("pod", "data") and s == "model"

@@ -1,0 +1,42 @@
+"""Sequence-parallel decode correctness (8 forced host devices, subprocess —
+the XLA device-count flag must precede jax init, so this cannot run in the
+main pytest process)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_sp_decode_multi_device_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "_sp_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "distributed histogram threshold == global: OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_compressed_ddp_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "_ddp_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "tracks exact: OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_elastic_restore_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "_elastic_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "elastic reshard-on-restore: OK" in out.stdout

@@ -1,0 +1,103 @@
+"""Step builders compile and run on the local mesh (reduced configs)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models import get_model
+from repro.runtime.steps import MeshPlan, make_decode_step, make_train_step
+from repro.runtime.data import make_batch
+
+
+def _plan():
+    return MeshPlan.for_mesh(make_local_mesh())
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "granite-moe-3b-a800m"])
+def test_train_step_runs(arch):
+    cfg = get_config(arch).reduced()
+    shape = ShapeConfig("t", seq_len=64, global_batch=2, kind="train")
+    plan = _plan()
+    _, jitted, shapes, _ = make_train_step(cfg, plan)
+    batch = make_batch(cfg, shape, seed=0, step=0)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    from repro.runtime.optimizer import AdamWConfig, init_opt_state
+    opt = init_opt_state(params, AdamWConfig())
+    before = [np.asarray(x, np.float32) for x in jax.tree.leaves(params)]
+    step = jitted(batch)
+    params2, opt2, metrics = step(params, opt, batch)   # donates params/opt
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2.step) == 1
+    # params actually changed
+    delta = sum(float(np.abs(np.asarray(a, np.float32) - b).sum())
+                for a, b in zip(jax.tree.leaves(params2), before))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-2.7b"])
+def test_decode_step_runs(arch):
+    cfg = get_config(arch).reduced()
+    shape = ShapeConfig("d", seq_len=128, global_batch=2, kind="decode")
+    plan = _plan()
+    _, jitted, shapes, _ = make_decode_step(cfg, plan, shape)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    state = api.init_state(shape.global_batch, shape.seq_len,
+                           prefill_len=shape.seq_len - 1)
+    tok = jnp.zeros((2,), jnp.int32)
+    step = jitted()
+    nxt, logits, state2 = step(params, state, tok)
+    assert nxt.shape == (2,) and logits.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_flags_baseline_opt_equivalent_selection(rng):
+    """Baseline vs optimized flags: identical selections & close outputs."""
+    from repro import flags
+    from repro.core import SalcaParams, prefill_cache, salca_decode_attention
+    q = jnp.asarray(rng.normal(size=(1, 4, 2, 32))[:, 0], jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 32)), jnp.float32)
+    params = SalcaParams.for_seq(256, retention=0.2, use_pool=True)
+    try:
+        flags.set_baseline()
+        cache = prefill_cache(k, v, max_seq=256, params=params)
+        out_b, sel_b = salca_decode_attention(q, cache, params, return_selection=True)
+        flags.set_optimized()
+        cache = prefill_cache(k, v, max_seq=256, params=params)
+        out_o, sel_o = salca_decode_attention(q, cache, params, return_selection=True)
+    finally:
+        flags.set_optimized()
+    # histogram impls identical; bf16 scores may flip borderline bins only
+    agree = (np.asarray(sel_b.indices) == np.asarray(sel_o.indices)).mean()
+    assert agree > 0.95
+    rel = float(jnp.linalg.norm(out_b - out_o) / jnp.linalg.norm(out_b))
+    assert rel < 0.05
+
+
+def test_moe_dispatch_variants_match():
+    from repro import flags
+    from repro.models.moe import moe_apply, moe_init
+    cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
+                              capacity_factor=4.0)
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 32, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    try:
+        flags.set_baseline()
+        a, aux_a = moe_apply(params, x, cfg)
+        flags.set_optimized()
+        flags.set_flags(moe_flat_dispatch=False)
+        b, aux_b = moe_apply(params, x, cfg)
+    finally:
+        flags.set_optimized()
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-5, rtol=1e-4)
+    assert float(aux_a) == pytest.approx(float(aux_b))
