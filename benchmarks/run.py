@@ -15,13 +15,14 @@ import traceback
 def main() -> None:
     from benchmarks import (accelerator_table6, conflict_table1, kernel_bench,
                             quant_sweep, roofline_table, selection_accuracy,
-                            throughput_model)
+                            serving_throughput, throughput_model)
     suites = [
         ("table1_conflict", conflict_table1),
         ("table34_selection", selection_accuracy),
         ("table7_quant", quant_sweep),
         ("table6_accelerators", accelerator_table6),
         ("fig9_throughput", throughput_model),
+        ("serving_throughput", serving_throughput),
         ("kernel_bench", kernel_bench),
         ("roofline", roofline_table),
     ]

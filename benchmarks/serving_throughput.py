@@ -1,0 +1,75 @@
+"""Serving throughput: decode ms/tick vs active slots (the batching win).
+
+The slot-pooled engine issues ONE fused decode per tick, so decode wall time
+per tick should stay ~flat as active slots grow (bandwidth-bound regime:
+weights + program dispatch amortize across slots) instead of scaling
+linearly the way per-request dispatch does. Sweeps slots=1..16, reports
+decode ms/tick and ms/token, and a sublinearity summary comparing slots=8
+against 8× the slots=1 cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+PROMPT_LEN = 64
+NEW_TOKENS = 9          # 1 from prefill + 8 decode ticks
+MAX_SEQ = 128
+
+
+def _drive(engine, n_requests: int, rng) -> dict:
+    """Submit n_requests and run; return the marginal decode stats."""
+    from repro.runtime.serve import Request
+    s0_decode, s0_ticks, s0_steps = (engine.stats.decode_s,
+                                     engine.stats.ticks,
+                                     engine.stats.decode_steps)
+    for i in range(n_requests):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(0, engine.cfg.vocab_size,
+                                       PROMPT_LEN).astype(np.int32),
+            max_new_tokens=NEW_TOKENS))
+    engine.run()
+    return {
+        "decode_s": engine.stats.decode_s - s0_decode,
+        "ticks": engine.stats.ticks - s0_ticks,
+        "steps": engine.stats.decode_steps - s0_steps,
+    }
+
+
+def run():
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.runtime.serve import ServingEngine
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    yield "serving,slots,ticks,decode_ms_per_tick,decode_ms_per_token,tokens_per_s"
+    per_tick = {}
+    for slots in (1, 2, 4, 8, 16):
+        engine = ServingEngine(cfg, params, max_seq=MAX_SEQ, slots=slots)
+        _drive(engine, slots, rng)          # warmup: compiles prefill+decode
+        m = _drive(engine, slots, rng)      # measured: steady-state
+        ms_tick = 1e3 * m["decode_s"] / max(m["ticks"], 1)
+        ms_tok = 1e3 * m["decode_s"] / max(m["steps"], 1)
+        tps = m["steps"] / max(m["decode_s"], 1e-9)
+        per_tick[slots] = ms_tick
+        yield (f"serving,{slots},{m['ticks']},{ms_tick:.3f},"
+               f"{ms_tok:.3f},{tps:.1f}")
+    # Sublinearity: one resident program must NOT cost 8× at 8 slots.
+    ratio = per_tick[8] / max(per_tick[1], 1e-9)
+    yield (f"serving_sublinearity,slots8_vs_1x,{ratio:.2f},"
+           f"{'sublinear' if ratio < 8.0 else 'LINEAR-REGRESSION'}")
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    for row in run():
+        print(row, flush=True)
+    print(f"# done in {time.time() - t0:.1f}s")

@@ -48,8 +48,12 @@ def main() -> None:
     stats = engine.run()
     s = stats.summary()
     print(f"completed {s['completed']} requests | prefill {s['prefill_s']}s "
-          f"decode {s['decode_s']}s over {s['decode_steps']} steps "
-          f"({s['decode_ms_per_step']} ms/step)")
+          f"decode {s['decode_s']}s over {s['ticks']} ticks "
+          f"({s['decode_calls']} fused decode calls, "
+          f"{s['decode_ms_per_tick']} ms/tick, "
+          f"{s['decode_ms_per_step']} ms/token)")
+    print(f"latency: mean TTFT {s['mean_ttft_s']}s "
+          f"(queue wait {s['mean_queue_wait_s']}s)")
     print("decode/(prefill+decode) time share: "
           f"{s['decode_s']/(s['prefill_s']+s['decode_s']):.1%} "
           "(the paper's Fig.1 regime: decode dominates long-context serving)")

@@ -1,0 +1,41 @@
+"""jax version-compatibility shims.
+
+The codebase targets the current jax API (`jax.shard_map`, `check_vma`,
+`jax.sharding.AxisType`); older 0.4.x runtimes (like this container's CPU
+image) expose the same functionality under `jax.experimental.shard_map`
+(`check_rep`) and build meshes without axis types. Everything routes through
+these two helpers so the rest of the code stays on the modern spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """`jax.make_mesh` with Auto axis types when the runtime supports them."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def axis_size(axis_name):
+    """`jax.lax.axis_size`, or the classic `psum(1, axis)` spelling (which
+    constant-folds to the static mesh axis size) on runtimes without it."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map`, falling back to `jax.experimental.shard_map`
+    (where `check_vma` was spelled `check_rep`)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -7,7 +7,9 @@ Public API:
 """
 
 from repro.core.selection import SalcaParams, salca_select, select_sparse_pattern
-from repro.core.cache import SalcaCache, empty_cache, prefill_cache, append_token, cache_bytes
+from repro.core.cache import (
+    SalcaCache, empty_cache, prefill_cache, append_token, append_token_masked,
+    cache_bytes, write_prefill_into_slot, reset_slot)
 from repro.core.attention import (
     salca_decode_attention,
     dense_decode_attention,
@@ -37,7 +39,8 @@ from repro.core import conflict_sim
 
 __all__ = [
     "SalcaParams", "SalcaCache", "empty_cache", "prefill_cache", "append_token",
-    "cache_bytes", "salca_select", "select_sparse_pattern",
+    "append_token_masked", "cache_bytes", "write_prefill_into_slot", "reset_slot",
+    "salca_select", "select_sparse_pattern",
     "salca_decode_attention", "dense_decode_attention", "dense_decode_from_cache",
     "exact_sparse_attention", "gather_selected", "sp_salca_decode",
     "Selection", "histogram256", "locate_threshold", "compact_indices",

@@ -103,6 +103,10 @@ def dense_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """Full-precision dense decode attention oracle.
 
     q: (B, H, HD); k, v: (B, S, KV, HD); valid_mask: (B, S).
+
+    Masked-slot contract (slot-pooled serving): a row whose valid mask is
+    all-False — an inactive pool slot holding 0 tokens — returns exact
+    zeros, never NaN and never an average over stale rows.
     """
     b, h, hd = q.shape
     kv = k.shape[2]
@@ -114,6 +118,10 @@ def dense_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if valid_mask is not None:
         s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    if valid_mask is not None:
+        # No-op for partially-masked rows (those probs are already ~0);
+        # zeroes the uniform softmax a fully-masked row would produce.
+        p = p * valid_mask[:, None, None, :]
     o = jnp.einsum("bkgs,bksd->bkgd", p, vv)
     return o.reshape(b, h, hd)
 

@@ -134,6 +134,57 @@ def append_token(cache: SalcaCache, k: jax.Array, v: jax.Array) -> SalcaCache:
     )
 
 
+# ---------------------------------------------------------------------------
+# Slot pool: the serving engine keeps ONE persistent cache per layer whose
+# leading `batch` dimension is a pool of request slots. Admission prefills a
+# request (batch=1) and writes the result into a free slot; completion resets
+# the slot. Both operations are jit-safe with a traced `slot` index, so the
+# engine pays one compiled program regardless of which slot turns over.
+# ---------------------------------------------------------------------------
+
+def write_prefill_into_slot(pool: SalcaCache, src: SalcaCache, slot) -> SalcaCache:
+    """Write a batch=1 prefilled cache into row `slot` of a pooled cache.
+
+    `src` must have batch 1 and match `pool` on every trailing dimension
+    (same max_seq / kv heads / head_dim / r). `slot` may be a Python int or a
+    traced int32 scalar. Every field — including the frozen per-request
+    heavy-channel set and the length cursor — is replaced for that slot;
+    other slots are untouched.
+    """
+    if src.k_codes.shape[0] != 1:
+        raise ValueError(f"src cache must have batch 1, got {src.k_codes.shape[0]}")
+    if pool.k_codes.shape[1:] != src.k_codes.shape[1:]:
+        raise ValueError(
+            f"slot shape mismatch: pool {pool.k_codes.shape[1:]} "
+            f"vs src {src.k_codes.shape[1:]}")
+    return SalcaCache(*[p.at[slot].set(s[0].astype(p.dtype))
+                        for p, s in zip(pool, src)])
+
+
+def reset_slot(pool: SalcaCache, slot) -> SalcaCache:
+    """Mark a slot empty (length 0). The K/V rows are left in place — the
+    valid mask gates every read, and admission overwrites the whole region —
+    so reset is O(1) instead of O(max_seq)."""
+    return pool._replace(length=pool.length.at[slot].set(0))
+
+
+def append_token_masked(cache: SalcaCache, k: jax.Array, v: jax.Array,
+                        active: jax.Array | None) -> SalcaCache:
+    """`append_token` under an active-slot mask: inactive slots drop the
+    write (cursor forced out of range, scatter mode="drop") and keep their
+    stored length — the single definition of the masked-append invariant for
+    length-cursor caches (the pos-cursor attention path gates its own
+    cursors in `models.blocks._attn_decode`)."""
+    if active is None:
+        return append_token(cache, k, v)
+    old_len = cache.length
+    gated = cache._replace(
+        length=jnp.where(active, old_len, jnp.int32(cache.max_seq)))
+    return append_token(gated, k, v)._replace(
+        length=jnp.where(active, jnp.minimum(old_len + 1, cache.max_seq),
+                         old_len))
+
+
 def cache_bytes(cache: SalcaCache) -> dict[str, int]:
     """Physical bytes by region (for the performance model / roofline)."""
     def nbytes(x):

@@ -32,6 +32,7 @@ from repro.core.cache import SalcaCache, _encode_tokens
 from repro.core.maxpool import maxpool1d_reuse
 from repro.core.selection import SalcaParams, estimate_relevance
 from repro.core.attention import gather_selected, NEG_INF
+from repro import compat
 
 _EPS = 1e-6
 
@@ -42,7 +43,7 @@ def _halo_exchange(x: jax.Array, halo: int, axis_name) -> jax.Array:
     x: (..., n_local). Returns (..., n_local + 2*halo) with edge fill 0
     (the minimum INT8 bin) at the global boundaries.
     """
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     left_edge = x[..., -halo:]    # what our LEFT neighbour needs on its right
     right_edge = x[..., :halo]
@@ -142,7 +143,7 @@ def sp_salca_decode(q: jax.Array, cache: SalcaCache, params: SalcaParams,
     groups = h // kv
     r = cache.heavy_idx.shape[-1]
     n_local = cache.max_seq
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = compat.axis_size(axis_name)
     if shard_cap is None:
         shard_cap = min(n_local, max(128, (4 * params.k_cap) // max(n_shards, 1)))
 

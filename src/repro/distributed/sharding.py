@@ -60,10 +60,16 @@ def _axis_size(mesh: Mesh, axes) -> int:
 
 
 def fit_spec(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
-    """Drop per-dimension axes that don't divide the dim size."""
+    """Drop per-dimension axes that don't divide the dim size.
+
+    Also canonicalizes entries: a 1-tuple axis group becomes the bare axis
+    name and an empty group becomes None, so the resulting PartitionSpecs
+    compare equal across jax versions (older jax doesn't normalize)."""
     dims = list(spec) + [None] * (len(shape) - len(spec))
     out = []
     for d, size in zip(dims, shape):
+        if isinstance(d, (tuple, list)):
+            d = d[0] if len(d) == 1 else (tuple(d) or None)
         if d is None:
             out.append(None)
         elif size % _axis_size(mesh, d) == 0 and size > 0:

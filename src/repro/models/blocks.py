@@ -198,13 +198,21 @@ def block_prefill(params: dict, kind: str, x: jax.Array, cfg: ModelConfig,
 
 def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig,
                  pos: jax.Array, window: int, use_salca: bool,
-                 ctx: DecodeCtx, salca: SalcaParams):
+                 ctx: DecodeCtx, salca: SalcaParams,
+                 active: jax.Array | None = None):
     """x: (B, D); cache sequence-sharded when ctx.axis is set.
 
     Ring semantics (§Perf it-10): when a sliding-window layer's cache was
     allocated at `window` slots (< full context), the write cursor wraps
     (pos % W) and exactly the last min(pos+1, W) tokens are valid — no
     window masking needed, and the full-context buffer never exists.
+
+    Masked-slot semantics: `active` is an optional (B,) bool mask over pooled
+    request slots. Inactive slots still flow through the whole datapath (the
+    batch shape stays static for jit), but their K/V write is forced
+    out-of-range (dropped) and their valid length is pinned to 0, so the
+    slot's cache region is bit-identical afterwards and its attention output
+    is a well-defined finite value the engine discards.
     """
     b, d = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -226,6 +234,14 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
     else:
         write_pos = pos
         valid_len = pos + 1
+    if active is not None:
+        # Inactive slots: drop the write, treat the slot as holding 0 tokens.
+        # (Non-sharded scatters wrap negative indices, so force OOB with
+        # max_seq; the sharded path uses -1, which sp_append_token rejects
+        # explicitly on every shard.)
+        oob = -1 if ctx.axis is not None else cache.max_seq
+        write_pos = jnp.where(active, write_pos, jnp.int32(oob))
+        valid_len = jnp.where(active, valid_len, 0)
 
     if ctx.axis is None:
         from repro.core.cache import append_token
@@ -262,8 +278,9 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
                                      global_len=vl_)
             return o_, cache_
 
+        from repro.compat import shard_map
         rep3 = P(ba, None, None)
-        o, cache = jax.shard_map(
+        o, cache = shard_map(
             island, mesh=ctx.mesh,
             in_specs=(rep3, rep3, rep3, P(ba), P(ba), cache_pspec(ctx)),
             out_specs=(rep3, cache_pspec(ctx)),
@@ -273,28 +290,50 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
     return o @ params["wo"], cache
 
 
+def merge_masked_state(new_state, old_state, active: jax.Array):
+    """Per-slot select: keep `new_state` where active, `old_state` where not.
+
+    Used for recurrent (SSM / RG-LRU) decode states, which are small
+    batch-leading pytrees; attention caches gate their own writes instead
+    (see `_attn_decode`), which avoids copying the whole pooled cache.
+    """
+    def sel(n, o):
+        a = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+
+    return jax.tree.map(sel, new_state, old_state)
+
+
 def block_decode(params: dict, kind: str, x: jax.Array, state, cfg: ModelConfig,
-                 pos: jax.Array, ctx: DecodeCtx, salca: SalcaParams):
-    """x: (B, D) single token; returns (x, new_state)."""
+                 pos: jax.Array, ctx: DecodeCtx, salca: SalcaParams,
+                 active: jax.Array | None = None):
+    """x: (B, D) single token; returns (x, new_state). `active` (B,) bool
+    masks pooled request slots: inactive slots compute (static shapes) but
+    their state carries through unchanged."""
     if kind in ("A", "L"):
         window = cfg.local_window if kind == "L" else 0
         use_salca = cfg.salca and kind == "A"
         h, state = _attn_decode(params["attn"],
                                 rmsnorm(params["ln1"], x, cfg.norm_eps),
-                                state, cfg, pos, window, use_salca, ctx, salca)
+                                state, cfg, pos, window, use_salca, ctx, salca,
+                                active)
         x = x + h
         f, _ = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
         return x + f, state
     if kind == "S":
-        h, state = ssm.ssd_decode(params["ssd"],
-                                  rmsnorm(params["ln1"], x, cfg.norm_eps), state, cfg)
-        return x + h, state
+        h, new = ssm.ssd_decode(params["ssd"],
+                                rmsnorm(params["ln1"], x, cfg.norm_eps), state, cfg)
+        if active is not None:
+            new = merge_masked_state(new, state, active)
+        return x + h, new
     if kind == "R":
-        h, state = rglru.rglru_decode(params["rglru"],
-                                      rmsnorm(params["ln1"], x, cfg.norm_eps), state, cfg)
+        h, new = rglru.rglru_decode(params["rglru"],
+                                    rmsnorm(params["ln1"], x, cfg.norm_eps), state, cfg)
         x = x + h
         f, _ = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
-        return x + f, state
+        if active is not None:
+            new = merge_masked_state(new, state, active)
+        return x + f, new
     raise ValueError(kind)
 
 

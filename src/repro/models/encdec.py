@@ -199,9 +199,37 @@ def encdec_init_state(cfg: ModelConfig, batch: int, enc_len: int,
         pos=jnp.full((batch,), prefill_len, jnp.int32))
 
 
+def encdec_write_into_slot(pool: EncDecState, src: EncDecState, slot) -> EncDecState:
+    """Install a batch=1 prefilled state into row `slot` of a pooled state.
+
+    Cache stacks carry a leading layer axis; the per-cache write is vmapped
+    over it (see `core.cache.write_prefill_into_slot`)."""
+    from repro.core.cache import write_prefill_into_slot
+    wr = lambda p, s: write_prefill_into_slot(p, s, slot)
+    return EncDecState(
+        self_caches=jax.vmap(wr)(pool.self_caches, src.self_caches),
+        cross_caches=jax.vmap(wr)(pool.cross_caches, src.cross_caches),
+        pos=pool.pos.at[slot].set(src.pos[0]))
+
+
+def encdec_reset_slot(pool: EncDecState, slot) -> EncDecState:
+    """Free row `slot`: both cache stacks marked empty, cursor zeroed."""
+    from repro.core.cache import reset_slot
+    rs = lambda c: reset_slot(c, slot)
+    return EncDecState(
+        self_caches=jax.vmap(rs)(pool.self_caches),
+        cross_caches=jax.vmap(rs)(pool.cross_caches),
+        pos=pool.pos.at[slot].set(0))
+
+
 def encdec_decode_step(params: dict, cfg: ModelConfig, state: EncDecState,
-                       token: jax.Array, ctx: B.DecodeCtx | None = None):
-    """One decoder step. Salca runs on the cross-attention stream."""
+                       token: jax.Array, ctx: B.DecodeCtx | None = None,
+                       active: jax.Array | None = None):
+    """One decoder step. Salca runs on the cross-attention stream.
+
+    `active` (B,) bool masks pooled request slots: inactive slots compute
+    (static shapes) but append nothing to their self-cache and hold their
+    cursor; their logits are garbage the caller ignores."""
     ctx = ctx or B.DecodeCtx()
     h = embed_tokens(params["embed"], token).astype(cdtype(cfg))
     pos = state.pos
@@ -218,8 +246,8 @@ def encdec_decode_step(params: dict, cfg: ModelConfig, state: EncDecState,
         q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0].astype(jnp.float32)
         k = rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
         if ctx.axis is None:
-            from repro.core.cache import append_token
-            self_cache = append_token(self_cache, k, v)
+            from repro.core.cache import append_token_masked
+            self_cache = append_token_masked(self_cache, k, v, active)
             kd = self_cache.k_codes.astype(jnp.float32) * self_cache.k_scale[..., None]
             vd = self_cache.v_codes.astype(jnp.float32) * self_cache.v_scale[..., None]
             o = dense_decode_attention(q, kd, vd, self_cache.valid_mask())
@@ -228,17 +256,21 @@ def encdec_decode_step(params: dict, cfg: ModelConfig, state: EncDecState,
             ba = ctx.batch_axes
             sa = ctx.self_axis if ctx.self_axis is not None else ctx.axis
             rep3 = P(ba, None, None)
+            # Sharded path: -1 cursor ⇒ every shard drops the write and
+            # recomputes a 0 valid length for the slot.
+            cursor = pos if active is None else jnp.where(active, pos, -1)
 
             def island(q_, k_, v_, pos_, c_):
                 c_ = c_._replace(length=local_lengths(pos_, c_.max_seq, sa))
                 c_ = sp_append_token(c_, k_, v_, pos_, sa)
                 return sp_dense_decode(q_, c_, sa, global_len=pos_ + 1), c_
 
-            o, self_cache = jax.shard_map(
+            from repro.compat import shard_map
+            o, self_cache = shard_map(
                 island, mesh=ctx.mesh,
                 in_specs=(rep3, rep3, rep3, P(ba), B.cache_pspec(ctx, sa)),
                 out_specs=(rep3, B.cache_pspec(ctx, sa)), check_vma=False,
-            )(q, k, v, pos, self_cache)
+            )(q, k, v, cursor, self_cache)
         h = h + (o.astype(h.dtype).reshape(h.shape[0], -1)
                  @ lp["self_attn"]["wo"])
 
@@ -264,7 +296,8 @@ def encdec_decode_step(params: dict, cfg: ModelConfig, state: EncDecState,
                     return sp_salca_decode(q_, c_, sp_cross, sa)
                 return sp_dense_decode(q_, c_, sa, global_len=el_)
 
-            ox = jax.shard_map(
+            from repro.compat import shard_map
+            ox = shard_map(
                 island_x, mesh=ctx.mesh,
                 in_specs=(rep3, P(ba), B.cache_pspec(ctx)),
                 out_specs=rep3, check_vma=False,
@@ -278,4 +311,5 @@ def encdec_decode_step(params: dict, cfg: ModelConfig, state: EncDecState,
         body, h, (params["dec"], state.self_caches, state.cross_caches))
     h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
     logits = vocab_mask_logits(lm_logits(params["embed"], h, cfg), cfg)
-    return logits, EncDecState(new_self, state.cross_caches, pos + 1)
+    new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
+    return logits, EncDecState(new_self, state.cross_caches, new_pos)

@@ -23,8 +23,12 @@ class ModelAPI(NamedTuple):
     init: Callable[[jax.Array], Any]
     loss: Callable[..., jax.Array]            # (params, batch) -> scalar
     prefill: Callable[..., Any]               # (params, batch, max_seq) -> (logits, state)
-    decode_step: Callable[..., Any]           # (params, state, token, ctx) -> (logits, state)
+    decode_step: Callable[..., Any]           # (params, state, token, ctx, active) -> (logits, state)
     init_state: Callable[..., Any]            # (batch, max_seq, prefill_len) -> state
+    # Slot-pool serving: install a batch=1 prefill state into one row of a
+    # pooled (batch=slots) state / free a row after completion.
+    write_into_slot: Callable[..., Any]       # (pool_state, src_state, slot) -> pool_state
+    reset_slot: Callable[..., Any]            # (pool_state, slot) -> pool_state
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -41,8 +45,9 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
             return encdec.encdec_prefill(params, cfg, batch["frames"],
                                          batch["tokens"])
 
-        def decode_step(params, state, token, ctx=None):
-            return encdec.encdec_decode_step(params, cfg, state, token, ctx)
+        def decode_step(params, state, token, ctx=None, active=None):
+            return encdec.encdec_decode_step(params, cfg, state, token, ctx,
+                                             active)
 
         def init_state(batch, max_seq, prefill_len=0):
             # prefill_len is the decoder cursor — bounded by the (short)
@@ -52,7 +57,8 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
             return encdec.encdec_init_state(cfg, batch, enc_len=max_seq,
                                             prefill_len=pl)
 
-        return ModelAPI(init, loss, prefill, decode_step, init_state)
+        return ModelAPI(init, loss, prefill, decode_step, init_state,
+                        encdec.encdec_write_into_slot, encdec.encdec_reset_slot)
 
     def init(key):
         return transformer.init_lm_params(key, cfg)
@@ -65,13 +71,14 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         return transformer.lm_prefill(params, cfg, batch["tokens"], max_seq,
                                       patches=batch.get("patches"))
 
-    def decode_step(params, state, token, ctx=None):
-        return transformer.lm_decode_step(params, cfg, state, token, ctx)
+    def decode_step(params, state, token, ctx=None, active=None):
+        return transformer.lm_decode_step(params, cfg, state, token, ctx, active)
 
     def init_state(batch, max_seq, prefill_len=0):
         return transformer.lm_init_state(cfg, batch, max_seq, prefill_len)
 
-    return ModelAPI(init, loss, prefill, decode_step, init_state)
+    return ModelAPI(init, loss, prefill, decode_step, init_state,
+                    transformer.lm_write_into_slot, transformer.lm_reset_slot)
 
 
 __all__ = ["ModelAPI", "get_model", "DecodeCtx"]

@@ -176,12 +176,67 @@ def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 # ---------------------------------------------------------------------------
+# Slot pool: write a per-request (batch=1) prefill state into one row of a
+# pooled (batch=slots) LMState, and reset a row on completion. Both are
+# jit-safe with a traced slot index — the serving engine compiles each once.
+# ---------------------------------------------------------------------------
+
+def _write_substate_into_slot(pool_st, src_st, slot):
+    from repro.core.cache import write_prefill_into_slot
+    if isinstance(pool_st, B.SalcaCache):
+        return write_prefill_into_slot(pool_st, src_st, slot)
+    # Recurrent states (SSM / RG-LRU): batch-leading leaves, plain row write.
+    return jax.tree.map(lambda p, s: p.at[slot].set(s[0].astype(p.dtype)),
+                        pool_st, src_st)
+
+
+def _reset_substate_slot(st, slot):
+    from repro.core.cache import reset_slot
+    if isinstance(st, B.SalcaCache):
+        return reset_slot(st, slot)
+    return jax.tree.map(lambda x: x.at[slot].set(jnp.zeros((), x.dtype)), st)
+
+
+def lm_write_into_slot(pool: LMState, src: LMState, slot) -> LMState:
+    """Install a batch=1 prefilled `src` state into row `slot` of `pool`.
+
+    Period states carry a leading n_periods axis; the per-cache write is
+    vmapped over it so `core.cache.write_prefill_into_slot` stays the single
+    definition of the slot-write semantics.
+    """
+    periods = tuple(
+        jax.vmap(lambda p, s: _write_substate_into_slot(p, s, slot))(pp, sp)
+        for pp, sp in zip(pool.period_states, src.period_states))
+    tails = tuple(_write_substate_into_slot(p, s, slot)
+                  for p, s in zip(pool.tail_states, src.tail_states))
+    return LMState(periods, tails, pool.pos.at[slot].set(src.pos[0]))
+
+
+def lm_reset_slot(pool: LMState, slot) -> LMState:
+    """Free row `slot`: caches marked empty (length 0), recurrent states and
+    the position cursor zeroed. O(1) per cache — data rows are left for the
+    next admission to overwrite."""
+    periods = tuple(jax.vmap(lambda p: _reset_substate_slot(p, slot))(pp)
+                    for pp in pool.period_states)
+    tails = tuple(_reset_substate_slot(p, slot) for p in pool.tail_states)
+    return LMState(periods, tails, pool.pos.at[slot].set(0))
+
+
+# ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------
 
 def lm_decode_step(params: dict, cfg: ModelConfig, state: LMState,
-                   token: jax.Array, ctx: B.DecodeCtx | None = None):
-    """One decode step. token (B,) int32 → (logits (B, V_pad), new state)."""
+                   token: jax.Array, ctx: B.DecodeCtx | None = None,
+                   active: jax.Array | None = None):
+    """One decode step. token (B,) int32 → (logits (B, V_pad), new state).
+
+    `active` is an optional (B,) bool mask over pooled request slots: every
+    slot flows through the same fused program (shapes stay static for
+    jit/pjit), but inactive slots write nothing, hold their cursor, and their
+    logits are garbage the caller must ignore. One call therefore advances
+    *all* active slots at once — the serving engine's per-tick step.
+    """
     pattern, n_periods, tail = pattern_layout(cfg)
     ctx = ctx or B.DecodeCtx()
     h = embed_tokens(params["embed"], token).astype(cdtype(cfg))
@@ -202,7 +257,8 @@ def lm_decode_step(params: dict, cfg: ModelConfig, state: LMState,
             new_states = []
             for i, kind in enumerate(pattern):
                 h, st = B.block_decode(period_params[i], kind, h,
-                                       period_states[i], cfg, pos, ctx, salca)
+                                       period_states[i], cfg, pos, ctx, salca,
+                                       active)
                 new_states.append(st)
             return h, tuple(new_states)
 
@@ -213,8 +269,9 @@ def lm_decode_step(params: dict, cfg: ModelConfig, state: LMState,
     new_tail = []
     for i, kind in enumerate(tail):
         h, st = B.block_decode(params["tail"][i], kind, h, state.tail_states[i],
-                               cfg, pos, ctx, salca)
+                               cfg, pos, ctx, salca, active)
         new_tail.append(st)
     h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
     logits = vocab_mask_logits(lm_logits(params["embed"], h, cfg), cfg)
-    return logits, LMState(new_period_states, tuple(new_tail), pos + 1)
+    new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
+    return logits, LMState(new_period_states, tuple(new_tail), new_pos)

@@ -1,16 +1,19 @@
 """Distributed runtime: steps, optimizer, trainer, checkpointing, data, serving."""
 
-from repro.runtime.steps import MeshPlan, make_train_step, make_decode_step, make_prefill_step
+from repro.runtime.steps import (
+    MeshPlan, make_train_step, make_decode_step, make_prefill_step,
+    make_serve_decode_step)
 from repro.runtime.optimizer import AdamWConfig, AdamWState, adamw_update, init_opt_state
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.runtime.monitor import StepMonitor, NaNGuard
 from repro.runtime.data import make_batch, PrefetchIterator
-from repro.runtime.serve import ServingEngine, Request
+from repro.runtime.serve import ServingEngine, ServeStats, Request
 
 __all__ = [
     "MeshPlan", "make_train_step", "make_decode_step", "make_prefill_step",
+    "make_serve_decode_step",
     "AdamWConfig", "AdamWState", "adamw_update", "init_opt_state",
     "CheckpointManager", "Trainer", "TrainerConfig", "StepMonitor", "NaNGuard",
-    "make_batch", "PrefetchIterator", "ServingEngine", "Request",
+    "make_batch", "PrefetchIterator", "ServingEngine", "ServeStats", "Request",
 ]

@@ -1,21 +1,33 @@
-"""Serving engine: continuous batching over prefill + Salca decode.
+"""Serving engine: continuous batching over a slot-pooled KV cache.
 
-A fixed pool of `slots` sequences decodes in lock-step (one fused decode
-step per tick — the paper's architecture activates per new query the same
-way); finished sequences free their slot and the scheduler admits queued
-requests by running a prefill that writes the slot's cache region. Latency
-accounting separates prefill (compute-bound) from decode (bandwidth-bound,
-the paper's target regime).
+The engine keeps ONE persistent pooled decode state (`api.init_state(slots,
+max_seq)`): every layer's `SalcaCache` has a leading `slots` dimension, and
+each row is one resident request. The scheduler admits queued requests by
+prefilling them individually (prefill is compute-bound and shape-varying)
+and writing the batch=1 result into a free slot (`api.write_into_slot`);
+after that, every tick is exactly ONE fused jitted decode call that advances
+all active slots at once under an active-slot mask — inactive slots flow
+through the same program (static shapes for jit/pjit) but write nothing and
+hold their cursor. Finished sequences free their slot (`api.reset_slot`) and
+the next queued request takes it over.
 
-This engine is deliberately single-program: on a mesh, the same code runs
-with the jitted sharded steps from `runtime.steps`.
+This is the paper's serving regime: decode is bandwidth-bound, so the one
+resident program amortizes weight and KV-cache traffic across every active
+sequence instead of multiplying dispatch overhead per request (the
+AccLLM / SparseAccelerate batching argument). On a mesh the same engine runs
+with the sharded fused step from `runtime.steps.make_serve_decode_step`.
+
+Latency accounting separates queue wait (submit→admit), TTFT
+(submit→first token, i.e. queue wait + prefill), and decode (per tick and
+per token).
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -31,18 +43,36 @@ class Request:
     rid: int
     prompt: np.ndarray                 # (T,) int32
     max_new_tokens: int = 16
+    stop_token: int | None = None      # finish early when sampled
+    temperature: float = 0.0           # 0 = greedy; >0 = per-slot sampling
     submitted: float = field(default_factory=time.time)
+    admitted: float | None = None      # prefill start (end of queue wait)
     first_token_time: float | None = None
     done_time: float | None = None
     output: list = field(default_factory=list)
+
+    @property
+    def queue_wait_s(self) -> float | None:
+        return None if self.admitted is None else self.admitted - self.submitted
+
+    @property
+    def ttft_s(self) -> float | None:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submitted
 
 
 @dataclass
 class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
-    decode_steps: int = 0
+    decode_steps: int = 0      # per-slot token decodes (Σ active over ticks)
+    ticks: int = 0             # scheduler iterations that decoded
+    decode_calls: int = 0      # jitted decode dispatches (== ticks by design)
     completed: int = 0
+    tokens_generated: int = 0  # includes the prefill-produced first token
+    queue_wait_s: float = 0.0  # summed over completed admissions
+    ttft_s: float = 0.0        # summed over admitted requests
 
     def summary(self) -> dict:
         return {
@@ -50,70 +80,145 @@ class ServeStats:
             "prefill_s": round(self.prefill_s, 4),
             "decode_s": round(self.decode_s, 4),
             "decode_steps": self.decode_steps,
+            "ticks": self.ticks,
+            "decode_calls": self.decode_calls,
+            "tokens_generated": self.tokens_generated,
             "decode_ms_per_step": round(1e3 * self.decode_s / max(self.decode_steps, 1), 3),
+            "decode_ms_per_tick": round(1e3 * self.decode_s / max(self.ticks, 1), 3),
+            "mean_queue_wait_s": round(self.queue_wait_s / max(self.completed, 1), 4),
+            "mean_ttft_s": round(self.ttft_s / max(self.completed, 1), 4),
         }
 
 
 class ServingEngine:
-    """Batched prefill/decode driver (single device or mesh ctx)."""
+    """Slot-pooled continuous-batching driver (single device or mesh ctx)."""
 
     def __init__(self, cfg: ModelConfig, params: Any, max_seq: int,
                  slots: int = 4, ctx: DecodeCtx | None = None,
-                 greedy: bool = True):
+                 greedy: bool = True, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.slots = slots
         self.ctx = ctx
+        self.greedy = greedy
         self.api = get_model(cfg)
         self.stats = ServeStats()
-        self._queue: list[Request] = []
-        self._active: dict[int, Request] = {}      # slot -> request
-        self._decode = jax.jit(
-            lambda p, s, t: self.api.decode_step(p, s, t, ctx))
+        self._rng = np.random.default_rng(seed)
+        self._queue: deque[Request] = deque()
+        self._active: dict[int, Request] = {}       # slot -> request
+        self._free: list[int] = sorted(range(slots), reverse=True)  # pop() → lowest
+        # Host-side per-slot buffers: next token to feed, and the mask.
+        self._tokens = np.zeros((slots,), np.int32)
+        self._mask = np.zeros((slots,), bool)
+        # The one persistent pooled decode state (slots × max_seq caches).
+        self._state = self.api.init_state(slots, max_seq)
 
-    def submit(self, req: Request) -> None:
-        self._queue.append(req)
+        def _tick_fn(p, s, tok, act):
+            logits, s2 = self.api.decode_step(p, s, tok, ctx, active=act)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, logits, s2
+
+        # One fused program per tick. jax.jit caches by shape, so the mask
+        # flipping values never retraces. The pooled state is donated into
+        # every consumer (decode / write / reset) so XLA updates the KV pool
+        # in place instead of copying slots × max_seq of cache per tick —
+        # except on CPU, where donation is unimplemented and only warns.
+        donate = jax.default_backend() != "cpu"
+        self._decode = jax.jit(_tick_fn, donate_argnums=(1,) if donate else ())
+        self._prefill = jax.jit(
+            lambda p, toks: self.api.prefill(p, {"tokens": toks}, self.max_seq))
+        self._write = jax.jit(self.api.write_into_slot,
+                              donate_argnums=(0,) if donate else ())
+        self._reset = jax.jit(self.api.reset_slot,
+                              donate_argnums=(0,) if donate else ())
 
     # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt({len(req.prompt)}) + "
+                f"max_new_tokens({req.max_new_tokens}) exceeds max_seq={self.max_seq}")
+        self._queue.append(req)
+
+    def _sample(self, req: Request, logits_row: np.ndarray) -> int:
+        """Per-slot sampling from a (V_pad,) logits row."""
+        temp = 0.0 if self.greedy else req.temperature
+        if temp <= 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / temp
+        g = self._rng.gumbel(size=z.shape)
+        return int(np.argmax(z + g))
+
     def _admit(self) -> None:
-        """Fill free slots: batch-prefill pending requests (same length)."""
-        while self._queue and len(self._active) < self.slots:
-            req = self._queue.pop(0)
+        """FIFO-admit queued requests into free slots: per-request prefill,
+        then write the batch=1 state into the slot's pooled cache region."""
+        while self._queue and self._free:
+            req = self._queue.popleft()
+            slot = self._free.pop()
             t0 = time.time()
-            batch = {"tokens": jnp.asarray(req.prompt[None])}
-            logits, state = self.api.prefill(self.params, batch, self.max_seq)
-            jax.block_until_ready(logits)
+            req.admitted = t0
+            logits, state1 = self._prefill(
+                self.params, jnp.asarray(req.prompt[None]))
+            logits_row = np.asarray(logits)[0]          # blocks until ready
             self.stats.prefill_s += time.time() - t0
-            tok = int(jnp.argmax(logits[-1] if logits.ndim == 1 else logits[0]))
+            self._state = self._write(self._state, state1, jnp.int32(slot))
+            tok = self._sample(req, logits_row)
             req.output.append(tok)
             req.first_token_time = time.time()
-            slot = min(set(range(self.slots)) - set(self._active), default=None)
+            self.stats.tokens_generated += 1
             self._active[slot] = req
-            req._state = state              # per-slot state (batch=1)
-            req._next = tok
+            self._tokens[slot] = tok
+            self._mask[slot] = True
+            # The prefill-produced token may already satisfy the stop rule.
+            if (req.max_new_tokens <= 1
+                    or (req.stop_token is not None and tok == req.stop_token)):
+                self._finish(slot, req, time.time())
 
-    def _step_slot(self, slot: int) -> None:
-        req = self._active[slot]
+    def _finish(self, slot: int, req: Request, now: float) -> None:
+        req.done_time = now
+        self.stats.completed += 1
+        self.stats.queue_wait_s += req.queue_wait_s or 0.0
+        self.stats.ttft_s += req.ttft_s or 0.0
+        del self._active[slot]
+        self._mask[slot] = False
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        self._state = self._reset(self._state, jnp.int32(slot))
+
+    def _tick(self) -> None:
+        """ONE fused decode call advancing every active slot."""
         t0 = time.time()
-        tok = jnp.asarray([req._next], jnp.int32)
-        logits, req._state = self._decode(self.params, req._state, tok)
-        jax.block_until_ready(logits)
+        nxt, logits, self._state = self._decode(
+            self.params, self._state, jnp.asarray(self._tokens),
+            jnp.asarray(self._mask))
+        nxt_host = np.asarray(nxt)                      # blocks until ready
         self.stats.decode_s += time.time() - t0
-        self.stats.decode_steps += 1
-        nxt = int(jnp.argmax(logits[0]))
-        req.output.append(nxt)
-        req._next = nxt
-        if len(req.output) >= req.max_new_tokens:
-            req.done_time = time.time()
-            self.stats.completed += 1
-            del self._active[slot]
+        self.stats.decode_calls += 1
+        self.stats.ticks += 1
+        self.stats.decode_steps += int(self._mask.sum())
+        logits_host = None                              # fetched only if sampling
+        now = time.time()
+        for slot in list(self._active):
+            req = self._active[slot]
+            if self.greedy or req.temperature <= 0.0:
+                tok = int(nxt_host[slot])
+            else:
+                if logits_host is None:
+                    logits_host = np.asarray(logits)
+                tok = self._sample(req, logits_host[slot])
+            req.output.append(tok)
+            self._tokens[slot] = tok
+            self.stats.tokens_generated += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.stop_token is not None and tok == req.stop_token)):
+                self._finish(slot, req, now)
 
     def run(self, max_ticks: int = 10_000) -> ServeStats:
         ticks = 0
         while (self._queue or self._active) and ticks < max_ticks:
             self._admit()
-            for slot in list(self._active):
-                self._step_slot(slot)
+            if self._active:
+                self._tick()
             ticks += 1
         return self.stats

@@ -192,17 +192,21 @@ def decode_sharding_ctx(cfg: ModelConfig, plan: MeshPlan, bdp,
                        moe_strategy=cfg.moe_strategy)
 
 
-def make_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):
-    """serve_step(params, state, token) → (next_token, logits, state)."""
+def _decode_step_builder(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
+                         masked: bool):
+    """Shared plumbing for the plain and active-masked decode steps: same
+    sharding contexts, state specs, and jit wiring — `masked` only threads
+    the (B,) active-slot mask through as a fourth argument."""
     api = get_model(cfg)
     bdp, seq_axes = plan.decode_axes(shape.global_batch)
     dctx = DecodeCtx(axis=seq_axes, mesh=plan.mesh, batch_axes=bdp,
                      self_axis=plan.tp if cfg.encdec else None)
     sctx = decode_sharding_ctx(cfg, plan, bdp, shape.global_batch)
 
-    def step(params, state, token):
+    def step(params, state, token, active=None):
         with activation_sharding(sctx):
-            logits, new_state = api.decode_step(params, state, token, dctx)
+            logits, new_state = api.decode_step(params, state, token, dctx,
+                                                active=active)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_token, logits, new_state
 
@@ -218,14 +222,32 @@ def make_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):
 
     def jitted():
         (_, _), (pspec, sspec, tokspec) = shapes()
-        return jax.jit(
-            step,
-            in_shardings=(_ns(plan.mesh, pspec), _ns(plan.mesh, sspec),
-                          NamedSharding(plan.mesh, tokspec)),
-            donate_argnums=(1,),
-        )
+        ns_tok = NamedSharding(plan.mesh, tokspec)
+        base = (_ns(plan.mesh, pspec), _ns(plan.mesh, sspec), ns_tok)
+        if masked:
+            return jax.jit(step, in_shardings=base + (ns_tok,),
+                           donate_argnums=(1,))
+        return jax.jit(lambda p, s, t: step(p, s, t), in_shardings=base,
+                       donate_argnums=(1,))
 
     return step, jitted, shapes, dctx
+
+
+def make_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):
+    """serve_step(params, state, token) → (next_token, logits, state)."""
+    return _decode_step_builder(cfg, plan, shape, masked=False)
+
+
+def make_serve_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):
+    """Slot-pooled serving tick:
+    serve_step(params, state, token, active) → (next_token, logits, state).
+
+    Identical sharding layout to `make_decode_step`, plus an (B,) bool
+    active-slot mask: the batch dimension is a pool of request slots and one
+    call advances every active slot at once (inactive slots compute but
+    neither write their caches nor move their cursors — shapes stay static,
+    so the serving engine pays exactly one pjit dispatch per tick)."""
+    return _decode_step_builder(cfg, plan, shape, masked=True)
 
 
 def make_prefill_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):

@@ -9,6 +9,8 @@ import sys
 import tempfile
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -22,15 +24,13 @@ def main() -> int:
     mgr = CheckpointManager(tmp, async_save=False)
 
     # "training" ran on a (8,) data-only mesh
-    mesh_a = jax.make_mesh((8,), ("data",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_a = compat.make_mesh((8,), ("data",))
     w = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
                        NamedSharding(mesh_a, P("data", None)))
     mgr.save(7, {"w": w}, block=True)
 
     # restart lands on a (2, 4) data×model mesh — reshard on restore
-    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = compat.make_mesh((2, 4), ("data", "model"))
     target = {"w": jnp.zeros((8, 8), jnp.float32)}
     sh = {"w": NamedSharding(mesh_b, P("data", "model"))}
     step, restored = mgr.restore(target, shardings=sh)

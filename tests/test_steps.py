@@ -11,7 +11,8 @@ from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_local_mesh
 from repro.models import get_model
-from repro.runtime.steps import MeshPlan, make_decode_step, make_train_step
+from repro.runtime.steps import (
+    MeshPlan, make_decode_step, make_serve_decode_step, make_train_step)
 from repro.runtime.data import make_batch
 
 
@@ -56,6 +57,25 @@ def test_decode_step_runs(arch):
     nxt, logits, state2 = step(params, state, tok)
     assert nxt.shape == (2,) and logits.shape == (2, cfg.padded_vocab)
     assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_serve_decode_step_masked_slots():
+    """The sharded fused serving tick runs with an active-slot mask, holds
+    inactive slots in place, and advances active ones."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    shape = ShapeConfig("s", seq_len=128, global_batch=2, kind="decode")
+    plan = _plan()
+    _, jitted, shapes, _ = make_serve_decode_step(cfg, plan, shape)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    state = api.init_state(shape.global_batch, shape.seq_len, prefill_len=16)
+    tok = jnp.zeros((2,), jnp.int32)
+    active = jnp.asarray([True, False])
+    step = jitted()
+    nxt, logits, state2 = step(params, state, tok, active)
+    assert nxt.shape == (2,) and logits.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(state2.pos[0]) == 17 and int(state2.pos[1]) == 16
 
 
 def test_flags_baseline_opt_equivalent_selection(rng):
