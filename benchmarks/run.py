@@ -3,16 +3,37 @@
 Prints ``name,...`` CSV rows per benchmark. The dry-run roofline table reads
 the JSON store produced by ``repro.launch.dryrun`` (run separately — it
 forces 512 host devices and must own its process).
+
+``--smoke`` runs every suite at tiny shapes (seconds, not minutes) so CI can
+exercise all benchmark entry points on every push — numbers are meaningless
+at those sizes, but import errors, API drift, and crashed sweeps surface
+immediately instead of rotting silently.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
+# Per-suite kwargs for --smoke: shrink whatever the module parameterizes.
+# Suites absent here are already analytic/fast and run as-is.
+SMOKE_KWARGS = {
+    "table34_selection": {"T": 512},
+    "table7_quant": {"T": 256},
+    "fig9_throughput": {"n": 4096},
+    "serving_throughput": {"smoke": True},
+    "kernel_bench": {"n": 2048, "bh": 2, "k": 128},
+}
 
-def main() -> None:
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny shapes: exercise every entry point fast")
+    args = parser.parse_args(argv)
+
     from benchmarks import (accelerator_table6, conflict_table1, kernel_bench,
                             quant_sweep, roofline_table, selection_accuracy,
                             serving_throughput, throughput_model)
@@ -30,8 +51,9 @@ def main() -> None:
     for name, mod in suites:
         t0 = time.time()
         print(f"# === {name} ({mod.__name__}) ===", flush=True)
+        kwargs = SMOKE_KWARGS.get(name, {}) if args.smoke else {}
         try:
-            for row in mod.run():
+            for row in mod.run(**kwargs):
                 print(row, flush=True)
         except Exception:
             failed += 1

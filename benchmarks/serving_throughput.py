@@ -1,11 +1,19 @@
-"""Serving throughput: decode ms/tick vs active slots (the batching win).
+"""Serving throughput: batching sublinearity + paged-pool admission wins.
 
-The slot-pooled engine issues ONE fused decode per tick, so decode wall time
-per tick should stay ~flat as active slots grow (bandwidth-bound regime:
-weights + program dispatch amortize across slots) instead of scaling
-linearly the way per-request dispatch does. Sweeps slots=1..16, reports
-decode ms/tick and ms/token, and a sublinearity summary comparing slots=8
-against 8× the slots=1 cost.
+Two sweeps:
+
+1. **Slots sweep** — the slot-pooled engine issues ONE fused decode per
+   tick, so decode wall time per tick should stay ~flat as active slots grow
+   (bandwidth-bound regime) instead of scaling linearly the way per-request
+   dispatch does. Sweeps slots=1..16 and reports a sublinearity summary.
+
+2. **Mixed-length sweep** — at a FIXED HBM token budget, the dense pool
+   reserves a `max_seq` stripe per slot, so concurrency is capped by
+   worst-case length; the paged pool allocates blocks for tokens actually
+   held, so mixed short/long requests pack. Reports peak concurrent
+   requests and block-pool utilization for both, plus a paged-vs-contiguous
+   greedy-output parity row (the correctness anchor: same prompts, same
+   tokens, block-granular pool vs dense stripes).
 """
 
 from __future__ import annotations
@@ -19,6 +27,7 @@ import numpy as np
 PROMPT_LEN = 64
 NEW_TOKENS = 9          # 1 from prefill + 8 decode ticks
 MAX_SEQ = 128
+BLOCK_SIZE = 16
 
 
 def _drive(engine, n_requests: int, rng) -> dict:
@@ -40,19 +49,13 @@ def _drive(engine, n_requests: int, rng) -> dict:
     }
 
 
-def run():
-    from repro.configs import get_config
-    from repro.models import get_model
+def _slots_sweep(cfg, params, rng, smoke: bool):
     from repro.runtime.serve import ServingEngine
-
-    cfg = get_config("qwen3-0.6b").reduced()
-    api = get_model(cfg)
-    params = api.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
 
     yield "serving,slots,ticks,decode_ms_per_tick,decode_ms_per_token,tokens_per_s"
     per_tick = {}
-    for slots in (1, 2, 4, 8, 16):
+    sweep = (1, 2) if smoke else (1, 2, 4, 8, 16)
+    for slots in sweep:
         engine = ServingEngine(cfg, params, max_seq=MAX_SEQ, slots=slots)
         _drive(engine, slots, rng)          # warmup: compiles prefill+decode
         m = _drive(engine, slots, rng)      # measured: steady-state
@@ -62,10 +65,82 @@ def run():
         per_tick[slots] = ms_tick
         yield (f"serving,{slots},{m['ticks']},{ms_tick:.3f},"
                f"{ms_tok:.3f},{tps:.1f}")
-    # Sublinearity: one resident program must NOT cost 8× at 8 slots.
-    ratio = per_tick[8] / max(per_tick[1], 1e-9)
-    yield (f"serving_sublinearity,slots8_vs_1x,{ratio:.2f},"
-           f"{'sublinear' if ratio < 8.0 else 'LINEAR-REGRESSION'}")
+    if not smoke:
+        # Sublinearity: one resident program must NOT cost 8× at 8 slots.
+        ratio = per_tick[8] / max(per_tick[1], 1e-9)
+        yield (f"serving_sublinearity,slots8_vs_1x,{ratio:.2f},"
+               f"{'sublinear' if ratio < 8.0 else 'LINEAR-REGRESSION'}")
+
+
+def _mixed_workload(cfg, rng, smoke: bool):
+    """Mixed short/long prompts: the regime where dense per-slot stripes
+    waste HBM (a short request reserves the same max_seq as a long one)."""
+    from repro.runtime.serve import Request
+    n_short = 4 if smoke else 10
+    n_long = 1 if smoke else 2
+    # Shorts fit one 16-token block (12+3 writes < 16); longs take 6 blocks
+    # (88+7 < 96) — so the paged pool packs every request concurrently
+    # within the dense pool's HBM budget without starving block growth.
+    specs = ([(12, 4)] * n_short) + ([(88, 8)] * n_long)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                    max_new_tokens=m)
+            for i, (pl, m) in enumerate(specs)]
+
+
+def _mixed_sweep(cfg, params, smoke: bool):
+    from repro.runtime.serve import ServingEngine
+
+    # Fixed HBM budget: `budget_tokens` of KV storage. Dense spends it on
+    # budget/max_seq uniform slots; paged splits the same bytes into blocks
+    # and takes more slots (slot metadata — page table rows, recurrent
+    # state — is negligible next to the KV region).
+    dense_slots = 2 if smoke else 4
+    budget_tokens = dense_slots * MAX_SEQ
+    paged_slots = 6 if smoke else 12
+    num_blocks = budget_tokens // BLOCK_SIZE
+    rng = np.random.default_rng(7)
+    reqs_dense = _mixed_workload(cfg, rng, smoke)
+    rng = np.random.default_rng(7)
+    reqs_paged = _mixed_workload(cfg, rng, smoke)
+
+    yield ("serving_mixed,mode,slots,budget_tokens,peak_concurrent,"
+           "completed,ticks,block_utilization")
+    dense = ServingEngine(cfg, params, max_seq=MAX_SEQ, slots=dense_slots)
+    for r in reqs_dense:
+        dense.submit(r)
+    sd = dense.run()
+    yield (f"serving_mixed,dense,{dense_slots},{budget_tokens},"
+           f"{sd.peak_active_slots},{sd.completed},{sd.ticks},n/a")
+    paged = ServingEngine(cfg, params, max_seq=MAX_SEQ, slots=paged_slots,
+                          paged=True, block_size=BLOCK_SIZE,
+                          num_blocks=num_blocks)
+    for r in reqs_paged:
+        paged.submit(r)
+    sp = paged.run()
+    util = sp.summary().get("block_utilization", 0.0)
+    yield (f"serving_mixed,paged,{paged_slots},{budget_tokens},"
+           f"{sp.peak_active_slots},{sp.completed},{sp.ticks},{util}")
+    gain = sp.peak_active_slots / max(sd.peak_active_slots, 1)
+    yield (f"serving_mixed_gain,paged_vs_dense_concurrency,{gain:.2f},"
+           f"{'paged-admits-more' if sp.peak_active_slots > sd.peak_active_slots else 'NO-GAIN'}")
+    # Correctness anchor: block-granular pool must reproduce the dense
+    # pool's greedy tokens exactly (paged-vs-contiguous logits parity).
+    match = all(a.output == b.output for a, b in zip(reqs_dense, reqs_paged))
+    yield f"serving_mixed_parity,paged_vs_dense_outputs,{'ok' if match else 'MISMATCH'}"
+
+
+def run(smoke: bool = False):
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    yield from _slots_sweep(cfg, params, rng, smoke)
+    yield from _mixed_sweep(cfg, params, smoke)
 
 
 if __name__ == "__main__":

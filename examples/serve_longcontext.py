@@ -26,6 +26,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=192)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged block-pool KV cache instead of dense slots")
+    ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="pool size in blocks (0 = dense-equivalent budget)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -38,7 +43,9 @@ def main() -> None:
           f"{sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M")
 
     max_seq = ((args.prompt_len + args.new_tokens + 127) // 128) * 128
-    engine = ServingEngine(cfg, params, max_seq=max_seq, slots=args.slots)
+    engine = ServingEngine(cfg, params, max_seq=max_seq, slots=args.slots,
+                           paged=args.paged, block_size=args.block_size,
+                           num_blocks=args.num_blocks or None)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(
@@ -54,6 +61,10 @@ def main() -> None:
           f"{s['decode_ms_per_step']} ms/token)")
     print(f"latency: mean TTFT {s['mean_ttft_s']}s "
           f"(queue wait {s['mean_queue_wait_s']}s)")
+    if args.paged:
+        print(f"block pool: {s['peak_blocks_in_use']}/{s['block_pool_size']} "
+              f"blocks at peak (utilization {s['block_utilization']}), "
+              f"{s['overflows']} overflows")
     print("decode/(prefill+decode) time share: "
           f"{s['decode_s']/(s['prefill_s']+s['decode_s']):.1%} "
           "(the paper's Fig.1 regime: decode dominates long-context serving)")

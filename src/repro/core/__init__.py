@@ -6,14 +6,20 @@ Public API:
     performance model and conflict simulator.
 """
 
-from repro.core.selection import SalcaParams, salca_select, select_sparse_pattern
+from repro.core.selection import (
+    SalcaParams, salca_select, select_sparse_pattern,
+    select_sparse_pattern_blocked)
 from repro.core.cache import (
     SalcaCache, empty_cache, prefill_cache, append_token, append_token_masked,
-    cache_bytes, write_prefill_into_slot, reset_slot)
+    cache_bytes, write_prefill_into_slot, reset_slot,
+    PagedSalcaCache, empty_paged_cache, prefill_into_pages, append_token_paged,
+    map_block, free_pages, gather_selected_paged, paged_cache_bytes)
 from repro.core.attention import (
     salca_decode_attention,
+    salca_decode_attention_paged,
     dense_decode_attention,
     dense_decode_from_cache,
+    dense_decode_from_paged,
     exact_sparse_attention,
     gather_selected,
 )
@@ -31,7 +37,8 @@ from repro.core.histogram_topk import (
     histogram_topk,
     exact_topk_indices,
 )
-from repro.core.maxpool import maxpool1d_reuse, maxpool1d_direct
+from repro.core.histogram_topk import histogram_topk_blocked
+from repro.core.maxpool import maxpool1d_blocked, maxpool1d_reuse, maxpool1d_direct
 from repro.core import quantization
 from repro.core import heavy_channels
 from repro.core import performance_model
@@ -40,10 +47,15 @@ from repro.core import conflict_sim
 __all__ = [
     "SalcaParams", "SalcaCache", "empty_cache", "prefill_cache", "append_token",
     "append_token_masked", "cache_bytes", "write_prefill_into_slot", "reset_slot",
-    "salca_select", "select_sparse_pattern",
-    "salca_decode_attention", "dense_decode_attention", "dense_decode_from_cache",
+    "PagedSalcaCache", "empty_paged_cache", "prefill_into_pages",
+    "append_token_paged", "map_block", "free_pages", "gather_selected_paged",
+    "paged_cache_bytes",
+    "salca_select", "select_sparse_pattern", "select_sparse_pattern_blocked",
+    "salca_decode_attention", "salca_decode_attention_paged",
+    "dense_decode_attention", "dense_decode_from_cache", "dense_decode_from_paged",
     "exact_sparse_attention", "gather_selected", "sp_salca_decode",
     "Selection", "histogram256", "locate_threshold", "compact_indices",
-    "histogram_topk", "exact_topk_indices", "maxpool1d_reuse", "maxpool1d_direct",
+    "histogram_topk", "histogram_topk_blocked", "exact_topk_indices",
+    "maxpool1d_blocked", "maxpool1d_reuse", "maxpool1d_direct",
     "quantization", "heavy_channels", "performance_model", "conflict_sim",
 ]

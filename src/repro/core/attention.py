@@ -12,9 +12,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.cache import SalcaCache
+from repro.core.cache import (
+    PagedSalcaCache, SalcaCache, gather_selected_paged, paged_logical_features,
+    paged_logical_kv)
 from repro.core.histogram_topk import Selection
-from repro.core.selection import SalcaParams, salca_select
+from repro.core.selection import (
+    SalcaParams, estimate_relevance, salca_select, select_sparse_pattern_blocked)
 
 NEG_INF = -1e30
 
@@ -94,6 +97,36 @@ def salca_decode_attention(q: jax.Array, cache: SalcaCache, params: SalcaParams,
     return out
 
 
+def salca_decode_attention_paged(q: jax.Array, pool: PagedSalcaCache,
+                                 params: SalcaParams,
+                                 return_selection: bool = False):
+    """Full Salca decode attention over a paged block pool.
+
+    Identical math to `salca_decode_attention` on the contiguous cache: the
+    feature stream is gathered into logical (page) order, relevance scoring
+    and the additive histogram run block-decomposed, and the exact-attention
+    gather resolves the selection's logical indices through the page table
+    before fetching K/V rows from the shared pool.
+    """
+    b, h, hd = q.shape
+    kv = pool.num_kv_heads
+    groups = h // kv
+    r = pool.heavy_idx.shape[-1]
+    idx = jnp.broadcast_to(pool.heavy_idx[:, :, None, :], (b, kv, groups, r))
+    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
+    q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r)
+    fw, fs, fz = paged_logical_features(pool)
+    scores = estimate_relevance(q_feat, fw, fs, fz, groups)
+    sel = select_sparse_pattern_blocked(scores, params,
+                                        pool.valid_mask()[:, None, :],
+                                        pool.block_size)
+    kc, ks, vc, vs = gather_selected_paged(pool, sel)
+    out = exact_sparse_attention(q, kc, ks, vc, vs, sel.mask)
+    if return_selection:
+        return out, sel
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Dense oracles (for accuracy benchmarks and tests)
 # ---------------------------------------------------------------------------
@@ -132,3 +165,12 @@ def dense_decode_from_cache(q: jax.Array, cache: SalcaCache) -> jax.Array:
     k = cache.k_codes.astype(jnp.float32) * cache.k_scale[..., None]
     v = cache.v_codes.astype(jnp.float32) * cache.v_scale[..., None]
     return dense_decode_attention(q, k, v, cache.valid_mask())
+
+
+def dense_decode_from_paged(q: jax.Array, pool: PagedSalcaCache,
+                            valid_mask: jax.Array | None = None) -> jax.Array:
+    """Dense attention over a paged pool's logical view (sliding-window
+    layers and the paged-vs-contiguous parity oracle)."""
+    k, v = paged_logical_kv(pool)
+    return dense_decode_attention(
+        q, k, v, pool.valid_mask() if valid_mask is None else valid_mask)

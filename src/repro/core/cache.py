@@ -192,3 +192,281 @@ def cache_bytes(cache: SalcaCache) -> dict[str, int]:
     kv = nbytes(cache.k_codes) + nbytes(cache.v_codes) + nbytes(cache.k_scale) + nbytes(cache.v_scale)
     feats = nbytes(cache.feat_words) + nbytes(cache.feat_scale) + nbytes(cache.feat_zero)
     return {"kv_region": kv, "feature_region": feats, "total": kv + feats}
+
+
+# ---------------------------------------------------------------------------
+# Paged block pool: the serving-scale cache substrate. One shared physical
+# pool per layer holds `num_blocks` blocks of `block_size` tokens for all
+# seven cache fields; each request slot owns a *page table* mapping its
+# logical block j to a physical block id (-1 = unmapped). HBM is therefore
+# allocated at the granularity of tokens actually held — a 256-token request
+# costs 256/block_size blocks, not a dense max_seq stripe — and the engine's
+# free list packs mixed 1k/100k requests into one pool.
+#
+# Logical order is recovered by gathering blocks through the page table, so
+# the paper's streaming selection (per-block relevance + additive histograms)
+# maps directly onto page order; the exact-attention gather resolves logical
+# token indices to physical rows (page * block_size + offset) before fetching
+# K/V. All shapes are static, all ops jit-safe with traced slots/pages.
+# ---------------------------------------------------------------------------
+
+PAGE_UNMAPPED = -1
+
+
+class PagedSalcaCache(NamedTuple):
+    # Physical pool, shared by all slots (no batch dim):
+    k_codes: jax.Array     # (P, BS, KV, HD) int8
+    k_scale: jax.Array     # (P, BS, KV) f32
+    v_codes: jax.Array     # (P, BS, KV, HD) int8
+    v_scale: jax.Array     # (P, BS, KV) f32
+    feat_words: jax.Array  # (P, BS, KV, R//16) uint32
+    feat_scale: jax.Array  # (P, BS, KV) f32
+    feat_zero: jax.Array   # (P, BS, KV) f32
+    # Per-slot request state:
+    heavy_idx: jax.Array   # (S, KV, R) int32 — frozen heavy-channel set
+    length: jax.Array      # (S,) int32 — tokens currently stored
+    page_table: jax.Array  # (S, MB) int32 — logical block → physical block, -1 unmapped
+
+    # Shape properties use negative indices so they stay correct on stacked
+    # (n_periods-leading) instances inside scanned model states.
+    @property
+    def num_blocks(self) -> int:
+        return self.k_codes.shape[-4]
+
+    @property
+    def block_size(self) -> int:
+        return self.k_codes.shape[-3]
+
+    @property
+    def num_slots(self) -> int:
+        return self.page_table.shape[-2]
+
+    @property
+    def max_blocks(self) -> int:
+        return self.page_table.shape[-1]
+
+    @property
+    def max_seq(self) -> int:
+        """Logical per-slot capacity (tokens)."""
+        return self.max_blocks * self.block_size
+
+    @property
+    def num_kv_heads(self) -> int:
+        return self.k_codes.shape[-2]
+
+    @property
+    def head_dim(self) -> int:
+        return self.k_codes.shape[-1]
+
+    def valid_mask(self) -> jax.Array:
+        """(S, L) bool over the logical view — True where a real token is stored."""
+        pos = jnp.arange(self.max_seq, dtype=jnp.int32)
+        return pos[None, :] < self.length[:, None]
+
+    def clamped_pages(self) -> jax.Array:
+        """Page table with unmapped entries clamped to block 0 for gathers.
+
+        Gathered garbage at unmapped positions is gated by `valid_mask` (a
+        mapped logical position is always < length or beyond it, and reads
+        are masked to pos < length)."""
+        return jnp.where(self.page_table >= 0, self.page_table, 0)
+
+
+def empty_paged_cache(num_blocks: int, block_size: int, slots: int,
+                      max_blocks: int, kv_heads: int, head_dim: int,
+                      r: int) -> PagedSalcaCache:
+    zeros = lambda shape, dt: jnp.zeros(shape, dt)
+    return PagedSalcaCache(
+        k_codes=zeros((num_blocks, block_size, kv_heads, head_dim), jnp.int8),
+        k_scale=zeros((num_blocks, block_size, kv_heads), jnp.float32),
+        v_codes=zeros((num_blocks, block_size, kv_heads, head_dim), jnp.int8),
+        v_scale=zeros((num_blocks, block_size, kv_heads), jnp.float32),
+        feat_words=zeros((num_blocks, block_size, kv_heads, r // qz.CODES_PER_WORD),
+                         jnp.uint32),
+        feat_scale=zeros((num_blocks, block_size, kv_heads), jnp.float32),
+        feat_zero=zeros((num_blocks, block_size, kv_heads), jnp.float32),
+        heavy_idx=zeros((slots, kv_heads, r), jnp.int32),
+        length=zeros((slots,), jnp.int32),
+        page_table=jnp.full((slots, max_blocks), PAGE_UNMAPPED, jnp.int32),
+    )
+
+
+def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
+                       pages: jax.Array) -> PagedSalcaCache:
+    """Write a batch=1 contiguous prefilled cache into the physical blocks
+    named by `pages` and install the page table for `slot`.
+
+    `pages`: (max_blocks,) int32 — physical block id for logical block j, or
+    -1 for blocks the engine did not allocate (their writes are dropped; the
+    src rows there are padding anyway). `slot` and `pages` may be traced, so
+    the engine compiles this once. Unallocated physical blocks keep whatever
+    stale data a freed request left — every read path is gated to
+    pos < length, so reuse is safe.
+    """
+    if src.k_codes.shape[0] != 1:
+        raise ValueError(f"src cache must have batch 1, got {src.k_codes.shape[0]}")
+    if src.k_codes.shape[2:] != pool.k_codes.shape[2:]:
+        raise ValueError(
+            f"kv-head/head-dim mismatch: pool {pool.k_codes.shape[2:]} "
+            f"vs src {src.k_codes.shape[2:]}")
+    if src.max_seq > pool.max_seq:
+        raise ValueError(
+            f"src length {src.max_seq} exceeds paged logical capacity "
+            f"{pool.max_seq} (= {pool.max_blocks} blocks × {pool.block_size})")
+    bs, mb, p = pool.block_size, pool.max_blocks, pool.num_blocks
+    pad = pool.max_seq - src.max_seq
+    safe_pages = jnp.where(pages >= 0, pages, p)     # -1 → OOB → dropped
+
+    def upd(buf, val):  # val: (1, src_seq, KV, ·) → blocks → scatter rows
+        v = jnp.pad(val[0], ((0, pad),) + ((0, 0),) * (val.ndim - 2))
+        blocks = v.reshape((mb, bs) + v.shape[1:]).astype(buf.dtype)
+        return buf.at[safe_pages].set(blocks, mode="drop")
+
+    return pool._replace(
+        k_codes=upd(pool.k_codes, src.k_codes),
+        k_scale=upd(pool.k_scale, src.k_scale),
+        v_codes=upd(pool.v_codes, src.v_codes),
+        v_scale=upd(pool.v_scale, src.v_scale),
+        feat_words=upd(pool.feat_words, src.feat_words),
+        feat_scale=upd(pool.feat_scale, src.feat_scale),
+        feat_zero=upd(pool.feat_zero, src.feat_zero),
+        heavy_idx=pool.heavy_idx.at[slot].set(src.heavy_idx[0]),
+        length=pool.length.at[slot].set(src.length[0]),
+        page_table=pool.page_table.at[slot].set(pages.astype(jnp.int32)),
+    )
+
+
+def append_token_paged(pool: PagedSalcaCache, k: jax.Array,
+                       v: jax.Array) -> PagedSalcaCache:
+    """Append one decoded token's K/V (S, KV, HD) at each slot's cursor.
+
+    The cursor (`pool.length`) resolves through the page table: block =
+    table[slot, cursor // BS], physical row = block·BS + cursor % BS. Writes
+    to unmapped blocks or past the logical capacity are DROPPED and the
+    cursor does not advance — there is no silent clip; the engine is
+    responsible for growing the slot's page list (or finishing the request
+    with an overflow stop) before the write lands.
+    """
+    s = k.shape[0]
+    bs, mb, p = pool.block_size, pool.max_blocks, pool.num_blocks
+    cur = pool.length
+    blk = jnp.clip(cur // bs, 0, mb - 1)
+    sidx = jnp.arange(s)
+    page = pool.page_table[sidx, blk]                          # (S,)
+    ok = (cur >= 0) & (cur < pool.max_seq) & (page >= 0)
+    phys = jnp.where(ok, page * bs + cur % bs, p * bs)         # OOB → drop
+    k8, v8, words, fs, fz = _encode_tokens(k[:, None], v[:, None], pool.heavy_idx)
+
+    def upd(buf, val):  # scatter each slot's row into the flat (P·BS, ·) pool
+        flat = buf.reshape((p * bs,) + buf.shape[2:])
+        flat = flat.at[phys].set(val[:, 0].astype(buf.dtype), mode="drop")
+        return flat.reshape(buf.shape)
+
+    return pool._replace(
+        k_codes=upd(pool.k_codes, k8.codes), k_scale=upd(pool.k_scale, k8.scale),
+        v_codes=upd(pool.v_codes, v8.codes), v_scale=upd(pool.v_scale, v8.scale),
+        feat_words=upd(pool.feat_words, words),
+        feat_scale=upd(pool.feat_scale, fs), feat_zero=upd(pool.feat_zero, fz),
+        length=jnp.where(ok, cur + 1, cur),
+    )
+
+
+def map_block(pool: PagedSalcaCache, slot, logical_block, page) -> PagedSalcaCache:
+    """Map one logical block of `slot` to physical block `page` (on-demand
+    growth: the engine allocates a block from its free list when a slot's
+    cursor crosses a block boundary). All args may be traced."""
+    return pool._replace(
+        page_table=pool.page_table.at[slot, logical_block].set(
+            jnp.asarray(page, jnp.int32)))
+
+
+def free_pages(pool: PagedSalcaCache, slot) -> PagedSalcaCache:
+    """Release a slot: unmap its page table row and zero its length. The
+    physical blocks return to the engine's free list (host side); their data
+    rows are left in place — every read is gated by the valid mask, and the
+    next owner overwrites them."""
+    return pool._replace(
+        length=pool.length.at[slot].set(0),
+        page_table=pool.page_table.at[slot].set(jnp.int32(PAGE_UNMAPPED)),
+    )
+
+
+def paged_logical_features(pool: PagedSalcaCache):
+    """Gather the feature stream into logical order: (S, L, KV, ·).
+
+    This is the paper's sequentially-streamed pre-computing read, resolved
+    through the page table — the per-block gathers arrive in page order, so
+    the result is logically contiguous and all downstream selection math is
+    unchanged. Unmapped pages clamp to block 0; the valid mask gates them.
+    """
+    pt = pool.clamped_pages()                                   # (S, MB)
+    s, l = pt.shape[0], pool.max_seq
+
+    def logical(buf):  # (P, BS, KV, ·) → (S, L, KV, ·)
+        g = buf[pt]                                             # (S, MB, BS, KV, ·)
+        return g.reshape((s, l) + buf.shape[2:])
+
+    return (logical(pool.feat_words), logical(pool.feat_scale),
+            logical(pool.feat_zero))
+
+
+def paged_logical_kv(pool: PagedSalcaCache):
+    """Dequantized dense logical K/V view (S, L, KV, HD) f32 — the dense
+    oracle / sliding-window read over a paged pool. O(S·L) transient; use
+    the selected-gather path for the sparse decode."""
+    pt = pool.clamped_pages()
+    s, l = pt.shape[0], pool.max_seq
+    k = (pool.k_codes[pt].astype(jnp.float32)
+         * pool.k_scale[pt][..., None]).reshape(s, l, pool.num_kv_heads, -1)
+    v = (pool.v_codes[pt].astype(jnp.float32)
+         * pool.v_scale[pt][..., None]).reshape(s, l, pool.num_kv_heads, -1)
+    return k, v
+
+
+def resolve_logical_rows(pool: PagedSalcaCache, idx: jax.Array) -> jax.Array:
+    """Resolve logical token indices (S, ..., ) to physical rows in the flat
+    (P·BS) pool through the page table. Unmapped resolutions clamp to row 0
+    (callers mask them)."""
+    bs = pool.block_size
+    blk = jnp.clip(idx // bs, 0, pool.max_blocks - 1)
+    # page[s, ...] = page_table[s, blk[s, ...]]
+    pt = pool.page_table.reshape(
+        (pool.page_table.shape[0],) + (1,) * (idx.ndim - 2) + (pool.max_blocks,))
+    page = jnp.take_along_axis(pt, blk, axis=-1)
+    return jnp.where(page >= 0, page * bs + idx % bs, 0)
+
+
+def gather_selected_paged(pool: PagedSalcaCache, sel) -> tuple:
+    """Gather selected K/V rows per (slot, kv-head), resolving the selection's
+    logical indices through the page table before fetching from the pool.
+
+    sel.indices: (S, KV, C) logical. Returns int8 k/v codes (S, KV, C, HD)
+    and scales (S, KV, C) — the same contract as `attention.gather_selected`.
+    """
+    phys = resolve_logical_rows(pool, sel.indices)              # (S, KV, C)
+
+    def take_codes(codes):  # (P, BS, KV, HD) → (S, KV, C, HD)
+        flat = codes.reshape((-1,) + codes.shape[2:])           # (P·BS, KV, HD)
+        f = flat.transpose(1, 0, 2)                             # (KV, P·BS, HD)
+        return jnp.take_along_axis(f[None], phys[..., None], axis=2)
+
+    def take_scale(scale):  # (P, BS, KV) → (S, KV, C)
+        flat = scale.reshape((-1,) + scale.shape[2:])           # (P·BS, KV)
+        f = flat.transpose(1, 0)                                # (KV, P·BS)
+        return jnp.take_along_axis(f[None], phys, axis=2)
+
+    return (take_codes(pool.k_codes), take_scale(pool.k_scale),
+            take_codes(pool.v_codes), take_scale(pool.v_scale))
+
+
+def paged_cache_bytes(pool: PagedSalcaCache) -> dict[str, int]:
+    """Physical bytes by region, plus the page-table overhead."""
+    def nbytes(x):
+        return int(x.size) * x.dtype.itemsize
+    kv = (nbytes(pool.k_codes) + nbytes(pool.v_codes)
+          + nbytes(pool.k_scale) + nbytes(pool.v_scale))
+    feats = (nbytes(pool.feat_words) + nbytes(pool.feat_scale)
+             + nbytes(pool.feat_zero))
+    table = nbytes(pool.page_table)
+    return {"kv_region": kv, "feature_region": feats, "page_table": table,
+            "total": kv + feats + table}

@@ -126,6 +126,25 @@ def histogram_topk(bins: jax.Array, k: jax.Array | int, k_cap: int) -> Selection
     return Selection(indices, mask, count, t)
 
 
+def histogram_topk_blocked(bins: jax.Array, k: jax.Array | int,
+                           k_cap: int) -> Selection:
+    """Block-decomposed `histogram_topk`: bins (..., nb, bs) in page order.
+
+    The 256-bin histogram is purely additive, so per-block histograms simply
+    sum into the global one (the paper's O(n) streaming accumulation, here
+    over page order; the distributed path does the same merge with a psum).
+    The threshold and the compacted indices are identical to the flat form —
+    indices come out in the *logical* (flattened) coordinate.
+    """
+    nb, bs = bins.shape[-2], bins.shape[-1]
+    hist = jnp.sum(histogram256(bins), axis=-2)        # per-block → merge
+    t = locate_threshold(hist, k)
+    flat = bins.reshape(bins.shape[:-2] + (nb * bs,))
+    keep = flat >= t[..., None].astype(flat.dtype)
+    indices, mask, count = compact_indices(keep, k_cap)
+    return Selection(indices, mask, count, t)
+
+
 def exact_topk_indices(scores: jax.Array, k: int) -> jax.Array:
     """O(n log k) exact Top-K baseline (``Std_TopK``) for tests/benchmarks."""
     _, idx = jax.lax.top_k(scores, k)

@@ -54,6 +54,34 @@ def maxpool1d_reuse(x: jax.Array, window: int, axis: int = -1) -> jax.Array:
     return out
 
 
+def maxpool1d_blocked(x: jax.Array, window: int) -> jax.Array:
+    """Stride-1 windowed max over block-decomposed data: x (..., nb, bs).
+
+    Blocks are logically adjacent (page order), so windows crossing a block
+    boundary need the neighbour's edge columns — the single-device analogue
+    of ``sp_decode._halo_exchange``: each block is padded with ``window//2``
+    halo columns taken from its neighbours (dtype-min fill at the global
+    edges, matching a hardware shift register that clamps), pooled, and the
+    halo cropped. Bit-identical to ``maxpool1d_reuse`` over the flattened
+    (..., nb*bs) axis.
+    """
+    if window == 1:
+        return x
+    assert window % 2 == 1 and window >= 3, f"window must be odd ≥3, got {window}"
+    bs = x.shape[-1]
+    halo = window // 2
+    assert halo <= bs, f"halo {halo} exceeds block size {bs}"
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        fill = jnp.iinfo(x.dtype).min
+    else:
+        fill = -jnp.inf
+    edge = jnp.full(x.shape[:-2] + (1, halo), fill, x.dtype)
+    from_left = jnp.concatenate([edge, x[..., :-1, -halo:]], axis=-2)
+    from_right = jnp.concatenate([x[..., 1:, :halo], edge], axis=-2)
+    padded = jnp.concatenate([from_left, x, from_right], axis=-1)
+    return maxpool1d_reuse(padded, window)[..., halo:-halo]
+
+
 def maxpool1d_direct(x: jax.Array, window: int, axis: int = -1) -> jax.Array:
     """Naive direct windowed max (oracle for the reuse form and the kernel)."""
     if window == 1:

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import quantization as qz
 from repro.core import histogram_topk as ht
-from repro.core.maxpool import maxpool1d_reuse
+from repro.core.maxpool import maxpool1d_blocked, maxpool1d_reuse
 
 
 @dataclass(frozen=True)
@@ -86,7 +86,6 @@ def estimate_relevance(q_feat: jax.Array, feat_words: jax.Array,
     # §Perf it-6: the dequantized scores only feed an 8-bit binning, so the
     # elementwise chain runs in bf16 (halves every (B,KV,N) temp's bytes);
     # baseline keeps f32.
-    from repro.flags import PERF
     acc_dt = jnp.bfloat16 if PERF.bf16_collectives else jnp.float32
     a = feat_scale.astype(acc_dt).transpose(0, 2, 1)[:, :, None, :]
     z = feat_zero.astype(acc_dt).transpose(0, 2, 1)[:, :, None, :]
@@ -120,6 +119,47 @@ def select_sparse_pattern(scores: jax.Array, params: SalcaParams,
         pooled = jnp.where(forced & (valid_mask if valid_mask is not None else True),
                            jnp.uint8(255), pooled)
     return ht.histogram_topk(pooled, params.k, params.k_cap)
+
+
+def select_sparse_pattern_blocked(scores: jax.Array, params: SalcaParams,
+                                  valid_mask: jax.Array | None,
+                                  block_size: int) -> ht.Selection:
+    """Phases 2-3 over block-decomposed (paged) scores.
+
+    scores: (B, KV, N) f32 in *logical* order, with N divisible by
+    `block_size` — the paged pool's gathered page-order view. The math is
+    the block decomposition of `select_sparse_pattern`: binning uses the
+    same global affine map, maxpool exchanges `window//2` halo columns
+    across adjacent blocks (`maxpool.maxpool1d_blocked`), and the 256-bin
+    histogram is built per block and additively merged
+    (`histogram_topk.histogram_topk_blocked`). Output is identical to the
+    flat form; selection indices are logical token positions.
+    """
+    n = scores.shape[-1]
+    assert n % block_size == 0, f"N={n} not divisible by block_size={block_size}"
+    nb = n // block_size
+    bins = qz.quantize_scores_uint8(scores, valid_mask)
+    if params.use_pool and params.pool_window > 1:
+        blocked = bins.reshape(bins.shape[:-1] + (nb, block_size))
+        pooled = maxpool1d_blocked(blocked, params.pool_window)
+        pooled = pooled.reshape(bins.shape)
+        if valid_mask is not None:  # pooling must not resurrect masked slots
+            pooled = jnp.where(valid_mask, pooled, jnp.uint8(0))
+    else:
+        pooled = bins
+    if params.sink_tokens or params.recent_tokens:
+        pos = jnp.arange(n)
+        forced = jnp.zeros((n,), bool)
+        if params.sink_tokens:
+            forced |= pos < params.sink_tokens
+        if params.recent_tokens and valid_mask is not None:
+            length = jnp.sum(valid_mask.astype(jnp.int32), axis=-1, keepdims=True)
+            forced = forced | (pos >= (length - params.recent_tokens))
+        pooled = jnp.where(forced & (valid_mask if valid_mask is not None else True),
+                           jnp.uint8(255), pooled)
+    return ht.histogram_topk_blocked(
+        pooled.reshape(pooled.shape[:-1] + (nb, block_size)),
+        params.k, params.k_cap)
 
 
 def salca_select(q_feat: jax.Array, feat_words: jax.Array, feat_scale: jax.Array,

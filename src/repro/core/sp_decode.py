@@ -26,7 +26,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import quantization as qz
 from repro.core import histogram_topk as ht
 from repro.core.cache import SalcaCache, _encode_tokens
 from repro.core.maxpool import maxpool1d_reuse

@@ -16,3 +16,26 @@ def sparse_flash_decode(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
         return sparse_flash_decode_pallas(q, k_codes, k_scale, v_codes, v_scale,
                                           mask, interpret=interpret)
     return sparse_flash_decode_ref(q, k_codes, k_scale, v_codes, v_scale, mask)
+
+
+def sparse_flash_decode_paged(q: jax.Array, pool, sel, *, impl: str = "pallas",
+                              interpret: bool | None = None) -> jax.Array:
+    """Paged front-end: resolve the selection's logical indices through the
+    page table, fetch the K/V rows from the shared block pool, and run the
+    same flash-decode kernel over the gathered (BH, C, ·) operands.
+
+    q: (S, H, HD); pool: `core.cache.PagedSalcaCache`; sel: Selection with
+    (S, KV, C) logical indices. Returns (S, H, HD) f32.
+    """
+    from repro.core.cache import gather_selected_paged
+    s, h, hd = q.shape
+    kv = pool.num_kv_heads
+    g = h // kv
+    kc, ks, vc, vs = gather_selected_paged(pool, sel)      # (S, KV, C, ·)
+    c = kc.shape[2]
+    out = sparse_flash_decode(
+        q.reshape(s * kv, g, hd),
+        kc.reshape(s * kv, c, hd), ks.reshape(s * kv, c),
+        vc.reshape(s * kv, c, hd), vs.reshape(s * kv, c),
+        sel.mask.reshape(s * kv, c), impl=impl, interpret=interpret)
+    return out.reshape(s, h, hd)

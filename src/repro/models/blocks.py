@@ -20,11 +20,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.cache import SalcaCache, prefill_cache
+from repro.core.cache import (
+    PagedSalcaCache, SalcaCache, append_token_paged, prefill_cache)
 from repro.core.selection import SalcaParams
 from repro.core.sp_decode import (
     local_lengths, sp_append_token, sp_dense_decode, sp_salca_decode)
-from repro.core.attention import salca_decode_attention, dense_decode_from_cache
+from repro.core.attention import (
+    dense_decode_from_cache, dense_decode_from_paged, salca_decode_attention,
+    salca_decode_attention_paged)
 from repro.models import ssm, rglru
 from repro.models.attention import attention_init, attention_train, qkv_project
 from repro.models.common import glu_init, glu_apply, rmsnorm, rmsnorm_init, rope, cdtype
@@ -226,7 +229,8 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
     k = rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
     q = q.astype(jnp.float32)
 
-    ring = window > 0 and cache.max_seq <= window
+    paged = isinstance(cache, PagedSalcaCache)
+    ring = (not paged) and window > 0 and cache.max_seq <= window
     if ring:
         write_pos = pos % cache.max_seq
         valid_len = jnp.minimum(pos + 1, cache.max_seq)
@@ -243,7 +247,25 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
         write_pos = jnp.where(active, write_pos, jnp.int32(oob))
         valid_len = jnp.where(active, valid_len, 0)
 
-    if ctx.axis is None:
+    if paged:
+        # Paged block pool: the write cursor resolves through the slot's page
+        # table (unmapped / out-of-capacity writes are dropped, no silent
+        # clip — the engine grows or overflow-finishes first). Sequence
+        # sharding of the pool is an open item (ROADMAP).
+        if ctx.axis is not None:
+            raise NotImplementedError(
+                "paged KV cache does not support sequence-sharded decode yet")
+        cache = append_token_paged(cache._replace(length=write_pos), k, v)
+        cache = cache._replace(length=valid_len)
+        if use_salca:
+            o = salca_decode_attention_paged(q, cache, salca)
+        else:
+            valid = cache.valid_mask()
+            if window > 0:
+                p = jnp.arange(cache.max_seq)[None, :]
+                valid = valid & (p > (pos[:, None] - window))
+            o = dense_decode_from_paged(q, cache, valid)
+    elif ctx.axis is None:
         from repro.core.cache import append_token
         cache = append_token(cache._replace(length=write_pos), k, v)
         cache = cache._replace(length=valid_len)
@@ -351,3 +373,28 @@ def block_init_state(kind: str, batch: int, max_seq: int, cfg: ModelConfig):
     if kind == "R":
         return rglru.rglru_init_state(batch, cfg)
     raise ValueError(kind)
+
+
+def block_init_paged_state(kind: str, slots: int, max_seq: int, cfg: ModelConfig,
+                           block_size: int, num_blocks: int):
+    """Empty decode state for one block with attention caches backed by a
+    paged block pool instead of dense per-slot stripes.
+
+    Sliding-window layers whose ring cache is already bounded by the window
+    keep the dense per-slot stripe (a ring is O(window) per slot — paging it
+    buys nothing and complicates the wrap); full-context caches become one
+    shared `(num_blocks, block_size, ·)` pool with a per-slot page table.
+    Recurrent states are per-slot dense as before.
+    """
+    if kind in ("A", "L"):
+        from repro.core.cache import empty_cache, empty_paged_cache
+        sp = salca_params_for(cfg, max_seq)
+        r = sp.r(cfg.resolved_head_dim)
+        w_ring = ring_size(cfg, kind, max_seq)
+        if w_ring < max_seq:
+            return empty_cache(slots, w_ring, cfg.num_kv_heads,
+                               cfg.resolved_head_dim, r)
+        max_blocks = -(-max_seq // block_size)
+        return empty_paged_cache(num_blocks, block_size, slots, max_blocks,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim, r)
+    return block_init_state(kind, slots, max_seq, cfg)

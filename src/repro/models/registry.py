@@ -29,6 +29,15 @@ class ModelAPI(NamedTuple):
     # pooled (batch=slots) state / free a row after completion.
     write_into_slot: Callable[..., Any]       # (pool_state, src_state, slot) -> pool_state
     reset_slot: Callable[..., Any]            # (pool_state, slot) -> pool_state
+    # Paged-pool serving (None where the family doesn't support it yet):
+    # attention caches are a shared block pool + per-slot page tables; the
+    # engine owns the free list and passes physical block ids in.
+    init_paged_state: Callable[..., Any] | None = None
+    #   (slots, max_seq, block_size, num_blocks) -> state
+    write_into_pages: Callable[..., Any] | None = None
+    #   (pool_state, src_state, slot, pages) -> pool_state
+    map_block: Callable[..., Any] | None = None
+    #   (pool_state, slot, logical_block, page) -> pool_state
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -77,8 +86,18 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
     def init_state(batch, max_seq, prefill_len=0):
         return transformer.lm_init_state(cfg, batch, max_seq, prefill_len)
 
+    def init_paged_state(slots, max_seq, block_size, num_blocks):
+        return transformer.lm_init_paged_state(cfg, slots, max_seq,
+                                               block_size, num_blocks)
+
+    def write_into_pages(pool, src, slot, pages):
+        return transformer.lm_write_into_slot(pool, src, slot, pages=pages)
+
     return ModelAPI(init, loss, prefill, decode_step, init_state,
-                    transformer.lm_write_into_slot, transformer.lm_reset_slot)
+                    transformer.lm_write_into_slot, transformer.lm_reset_slot,
+                    init_paged_state=init_paged_state,
+                    write_into_pages=write_into_pages,
+                    map_block=transformer.lm_map_block)
 
 
 __all__ = ["ModelAPI", "get_model", "DecodeCtx"]

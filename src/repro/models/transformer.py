@@ -175,14 +175,39 @@ def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int,
     return LMState(period_states, tail_states, pos)
 
 
+def lm_init_paged_state(cfg: ModelConfig, slots: int, max_seq: int,
+                        block_size: int, num_blocks: int) -> LMState:
+    """Pooled decode state whose full-context attention caches are paged:
+    one `(num_blocks, block_size, ·)` physical pool per layer plus per-slot
+    page tables, instead of dense `(slots, max_seq, ·)` stripes."""
+    pattern, n_periods, tail = pattern_layout(cfg)
+
+    def init(kind):
+        return B.block_init_paged_state(kind, slots, max_seq, cfg,
+                                        block_size, num_blocks)
+
+    def stack(kind):
+        st = init(kind)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), st)
+
+    period_states = tuple(stack(kind) for kind in pattern) if n_periods else ()
+    tail_states = tuple(init(kind) for kind in tail)
+    return LMState(period_states, tail_states, jnp.zeros((slots,), jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # Slot pool: write a per-request (batch=1) prefill state into one row of a
 # pooled (batch=slots) LMState, and reset a row on completion. Both are
 # jit-safe with a traced slot index — the serving engine compiles each once.
 # ---------------------------------------------------------------------------
 
-def _write_substate_into_slot(pool_st, src_st, slot):
-    from repro.core.cache import write_prefill_into_slot
+def _write_substate_into_slot(pool_st, src_st, slot, pages=None):
+    from repro.core.cache import prefill_into_pages, write_prefill_into_slot
+    if isinstance(pool_st, B.PagedSalcaCache):
+        if pages is None:
+            raise ValueError("paged cache substate requires a pages array "
+                             "(use write_into_pages)")
+        return prefill_into_pages(pool_st, src_st, slot, pages)
     if isinstance(pool_st, B.SalcaCache):
         return write_prefill_into_slot(pool_st, src_st, slot)
     # Recurrent states (SSM / RG-LRU): batch-leading leaves, plain row write.
@@ -191,35 +216,60 @@ def _write_substate_into_slot(pool_st, src_st, slot):
 
 
 def _reset_substate_slot(st, slot):
-    from repro.core.cache import reset_slot
+    from repro.core.cache import free_pages, reset_slot
+    if isinstance(st, B.PagedSalcaCache):
+        return free_pages(st, slot)
     if isinstance(st, B.SalcaCache):
         return reset_slot(st, slot)
     return jax.tree.map(lambda x: x.at[slot].set(jnp.zeros((), x.dtype)), st)
 
 
-def lm_write_into_slot(pool: LMState, src: LMState, slot) -> LMState:
+def lm_write_into_slot(pool: LMState, src: LMState, slot, pages=None) -> LMState:
     """Install a batch=1 prefilled `src` state into row `slot` of `pool`.
 
     Period states carry a leading n_periods axis; the per-cache write is
-    vmapped over it so `core.cache.write_prefill_into_slot` stays the single
-    definition of the slot-write semantics.
+    vmapped over it so `core.cache.write_prefill_into_slot` /
+    `prefill_into_pages` stay the single definition of the slot-write
+    semantics. `pages` (max_blocks,) int32 names the physical blocks the
+    engine allocated for this request — required when the pool's attention
+    caches are paged (the same block ids apply to every layer's pool), and
+    must be None for dense pools.
     """
     periods = tuple(
-        jax.vmap(lambda p, s: _write_substate_into_slot(p, s, slot))(pp, sp)
+        jax.vmap(lambda p, s: _write_substate_into_slot(p, s, slot, pages))(pp, sp)
         for pp, sp in zip(pool.period_states, src.period_states))
-    tails = tuple(_write_substate_into_slot(p, s, slot)
+    tails = tuple(_write_substate_into_slot(p, s, slot, pages)
                   for p, s in zip(pool.tail_states, src.tail_states))
     return LMState(periods, tails, pool.pos.at[slot].set(src.pos[0]))
 
 
 def lm_reset_slot(pool: LMState, slot) -> LMState:
-    """Free row `slot`: caches marked empty (length 0), recurrent states and
-    the position cursor zeroed. O(1) per cache — data rows are left for the
-    next admission to overwrite."""
+    """Free row `slot`: caches marked empty (length 0, page tables unmapped
+    for paged pools), recurrent states and the position cursor zeroed. O(1)
+    per cache — data rows are left for the next admission to overwrite."""
     periods = tuple(jax.vmap(lambda p: _reset_substate_slot(p, slot))(pp)
                     for pp in pool.period_states)
     tails = tuple(_reset_substate_slot(p, slot) for p in pool.tail_states)
     return LMState(periods, tails, pool.pos.at[slot].set(0))
+
+
+def lm_map_block(pool: LMState, slot, logical_block, page) -> LMState:
+    """On-demand growth: map `logical_block` of `slot` to physical block
+    `page` in every layer's paged pool (the engine allocates one block id
+    from its free list and it applies to all layers). Non-paged substates
+    pass through unchanged."""
+    from repro.core.cache import map_block
+
+    def sub(st):
+        if isinstance(st, B.PagedSalcaCache):
+            return map_block(st, slot, logical_block, page)
+        return st
+
+    periods = tuple(
+        jax.vmap(sub)(pp) if isinstance(pp, B.PagedSalcaCache) else pp
+        for pp in pool.period_states)
+    tails = tuple(sub(st) for st in pool.tail_states)
+    return LMState(periods, tails, pool.pos)
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +295,8 @@ def lm_decode_step(params: dict, cfg: ModelConfig, state: LMState,
     # max_seq for salca params: derive from any attention cache in the state.
     def _max_seq():
         for st in list(state.period_states) + list(state.tail_states):
+            if isinstance(st, B.PagedSalcaCache):
+                return st.max_seq        # logical capacity (negative-index safe)
             if isinstance(st, B.SalcaCache):
                 return st.k_codes.shape[-3]
         return 0

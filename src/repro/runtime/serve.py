@@ -1,21 +1,24 @@
-"""Serving engine: continuous batching over a slot-pooled KV cache.
+"""Serving engine: continuous batching over a slot-pooled or paged KV cache.
 
-The engine keeps ONE persistent pooled decode state (`api.init_state(slots,
-max_seq)`): every layer's `SalcaCache` has a leading `slots` dimension, and
-each row is one resident request. The scheduler admits queued requests by
-prefilling them individually (prefill is compute-bound and shape-varying)
-and writing the batch=1 result into a free slot (`api.write_into_slot`);
-after that, every tick is exactly ONE fused jitted decode call that advances
-all active slots at once under an active-slot mask — inactive slots flow
-through the same program (static shapes for jit/pjit) but write nothing and
-hold their cursor. Finished sequences free their slot (`api.reset_slot`) and
+The engine keeps ONE persistent pooled decode state: every layer's cache has
+a leading `slots` dimension (dense mode) or is a shared physical block pool
+with per-slot page tables (paged mode, `paged=True`). The scheduler admits
+queued requests by prefilling them individually (prefill is compute-bound
+and shape-varying) and writing the batch=1 result into a free slot; after
+that, every tick is exactly ONE fused jitted decode call that advances all
+active slots at once under an active-slot mask. Finished sequences free
+their slot (and, in paged mode, return their blocks to the free list) and
 the next queued request takes it over.
 
-This is the paper's serving regime: decode is bandwidth-bound, so the one
-resident program amortizes weight and KV-cache traffic across every active
-sequence instead of multiplying dispatch overhead per request (the
-AccLLM / SparseAccelerate batching argument). On a mesh the same engine runs
-with the sharded fused step from `runtime.steps.make_serve_decode_step`.
+Paged mode is the serving-scale memory model: instead of reserving a dense
+`max_seq` stripe per slot, admission allocates `ceil(prompt/block_size)`
+physical blocks from a shared free list, decode grows the slot's page list
+one block at a time as its cursor crosses block boundaries, and completion
+returns the blocks — so a 256-token request costs 256 tokens of HBM, not
+max_seq, and mixed 1k/100k requests pack into one pool (the AccLLM /
+SparseAccelerate argument). If the free list is empty when a slot must grow,
+the request is finished with an ``overflow`` stop reason (the dropped write
+is counted — never silently clipped).
 
 Latency accounting separates queue wait (submit→admit), TTFT
 (submit→first token, i.e. queue wait + prefill), and decode (per tick and
@@ -49,6 +52,7 @@ class Request:
     admitted: float | None = None      # prefill start (end of queue wait)
     first_token_time: float | None = None
     done_time: float | None = None
+    stop_reason: str | None = None     # "length" | "stop" | "overflow"
     output: list = field(default_factory=list)
 
     @property
@@ -60,6 +64,17 @@ class Request:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.submitted
+
+    def stats(self) -> dict:
+        """Per-request stats (exposed so callers can log completions)."""
+        return {
+            "rid": self.rid,
+            "prompt_tokens": int(len(self.prompt)),
+            "output_tokens": len(self.output),
+            "stop_reason": self.stop_reason,
+            "queue_wait_s": self.queue_wait_s,
+            "ttft_s": self.ttft_s,
+        }
 
 
 @dataclass
@@ -73,9 +88,16 @@ class ServeStats:
     tokens_generated: int = 0  # includes the prefill-produced first token
     queue_wait_s: float = 0.0  # summed over completed admissions
     ttft_s: float = 0.0        # summed over admitted requests
+    peak_active_slots: int = 0
+    overflows: int = 0         # requests finished with stop_reason="overflow"
+    dropped_writes: int = 0    # KV writes that could not be stored
+    # Paged-pool bookkeeping (zero in dense mode):
+    block_pool_size: int = 0
+    blocks_in_use: int = 0
+    peak_blocks_in_use: int = 0
 
     def summary(self) -> dict:
-        return {
+        out = {
             "completed": self.completed,
             "prefill_s": round(self.prefill_s, 4),
             "decode_s": round(self.decode_s, 4),
@@ -87,15 +109,34 @@ class ServeStats:
             "decode_ms_per_tick": round(1e3 * self.decode_s / max(self.ticks, 1), 3),
             "mean_queue_wait_s": round(self.queue_wait_s / max(self.completed, 1), 4),
             "mean_ttft_s": round(self.ttft_s / max(self.completed, 1), 4),
+            "peak_active_slots": self.peak_active_slots,
+            "overflows": self.overflows,
+            "dropped_writes": self.dropped_writes,
         }
+        if self.block_pool_size:
+            out["block_pool_size"] = self.block_pool_size
+            out["peak_blocks_in_use"] = self.peak_blocks_in_use
+            out["block_utilization"] = round(
+                self.peak_blocks_in_use / self.block_pool_size, 3)
+        return out
 
 
 class ServingEngine:
-    """Slot-pooled continuous-batching driver (single device or mesh ctx)."""
+    """Slot-pooled continuous-batching driver (single device or mesh ctx).
+
+    ``paged=True`` switches the attention-cache substrate to the paged block
+    pool: ``num_blocks`` physical blocks of ``block_size`` tokens are shared
+    by all slots, the engine owns the free list, and per-request HBM is
+    proportional to tokens actually held. ``block_size`` must divide
+    ``max_seq`` so the paged logical capacity (and hence the selection
+    parameters) match the dense path exactly — that is the paged-vs-
+    contiguous parity contract.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Any, max_seq: int,
                  slots: int = 4, ctx: DecodeCtx | None = None,
-                 greedy: bool = True, seed: int = 0):
+                 greedy: bool = True, seed: int = 0, paged: bool = False,
+                 block_size: int = 32, num_blocks: int | None = None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -103,6 +144,7 @@ class ServingEngine:
         self.ctx = ctx
         self.greedy = greedy
         self.api = get_model(cfg)
+        self.paged = paged
         self.stats = ServeStats()
         self._rng = np.random.default_rng(seed)
         self._queue: deque[Request] = deque()
@@ -111,8 +153,33 @@ class ServingEngine:
         # Host-side per-slot buffers: next token to feed, and the mask.
         self._tokens = np.zeros((slots,), np.int32)
         self._mask = np.zeros((slots,), bool)
-        # The one persistent pooled decode state (slots × max_seq caches).
-        self._state = self.api.init_state(slots, max_seq)
+        donate = jax.default_backend() != "cpu"
+        dn = (0,) if donate else ()
+        if paged:
+            if self.api.init_paged_state is None:
+                raise ValueError(f"{cfg.name}: paged serving not supported "
+                                 "for this model family")
+            if max_seq % block_size != 0:
+                raise ValueError(
+                    f"block_size {block_size} must divide max_seq {max_seq} "
+                    "(paged-vs-contiguous parity contract)")
+            self.block_size = block_size
+            self.max_blocks = max_seq // block_size
+            # Default pool = dense-equivalent token budget (slots × max_seq);
+            # the point of paging is that callers pass much less.
+            self.num_blocks = num_blocks or slots * self.max_blocks
+            self.stats.block_pool_size = self.num_blocks
+            self._free_blocks: list[int] = list(range(self.num_blocks))
+            self._slot_blocks: dict[int, list[int]] = {}
+            self._slot_pos: dict[int, int] = {}     # next write position
+            self._state = self.api.init_paged_state(
+                slots, max_seq, block_size, self.num_blocks)
+            self._write = jax.jit(self.api.write_into_pages, donate_argnums=dn)
+            self._map_block = jax.jit(self.api.map_block, donate_argnums=dn)
+        else:
+            # The one persistent pooled decode state (slots × max_seq caches).
+            self._state = self.api.init_state(slots, max_seq)
+            self._write = jax.jit(self.api.write_into_slot, donate_argnums=dn)
 
         def _tick_fn(p, s, tok, act):
             logits, s2 = self.api.decode_step(p, s, tok, ctx, active=act)
@@ -121,17 +188,13 @@ class ServingEngine:
 
         # One fused program per tick. jax.jit caches by shape, so the mask
         # flipping values never retraces. The pooled state is donated into
-        # every consumer (decode / write / reset) so XLA updates the KV pool
-        # in place instead of copying slots × max_seq of cache per tick —
-        # except on CPU, where donation is unimplemented and only warns.
-        donate = jax.default_backend() != "cpu"
+        # every consumer (decode / write / reset / map_block) so XLA updates
+        # the KV pool in place instead of copying it per tick — except on
+        # CPU, where donation is unimplemented and only warns.
         self._decode = jax.jit(_tick_fn, donate_argnums=(1,) if donate else ())
         self._prefill = jax.jit(
             lambda p, toks: self.api.prefill(p, {"tokens": toks}, self.max_seq))
-        self._write = jax.jit(self.api.write_into_slot,
-                              donate_argnums=(0,) if donate else ())
-        self._reset = jax.jit(self.api.reset_slot,
-                              donate_argnums=(0,) if donate else ())
+        self._reset = jax.jit(self.api.reset_slot, donate_argnums=dn)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -139,7 +202,27 @@ class ServingEngine:
             raise ValueError(
                 f"request {req.rid}: prompt({len(req.prompt)}) + "
                 f"max_new_tokens({req.max_new_tokens}) exceeds max_seq={self.max_seq}")
+        if self.paged:
+            # Lifetime need: KV is written for prompt + (max_new - 1) tokens
+            # (the final sampled token's KV is never stored). A request that
+            # exceeds the whole pool can never complete even when alone —
+            # that is a config error, rejected here like the dense max_seq
+            # guard. Overflow stops remain for pool *contention*.
+            lifetime = len(req.prompt) + max(req.max_new_tokens - 1, 0)
+            if self._blocks_for(lifetime) > self.num_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {self._blocks_for(lifetime)} "
+                    f"blocks over its lifetime but the pool only has "
+                    f"{self.num_blocks}")
         self._queue.append(req)
+
+    def _blocks_for(self, tokens: int) -> int:
+        return max(1, -(-tokens // self.block_size))
+
+    def _note_block_usage(self) -> None:
+        used = self.num_blocks - len(self._free_blocks)
+        self.stats.blocks_in_use = used
+        self.stats.peak_blocks_in_use = max(self.stats.peak_blocks_in_use, used)
 
     def _sample(self, req: Request, logits_row: np.ndarray) -> int:
         """Per-slot sampling from a (V_pad,) logits row."""
@@ -152,9 +235,21 @@ class ServingEngine:
 
     def _admit(self) -> None:
         """FIFO-admit queued requests into free slots: per-request prefill,
-        then write the batch=1 state into the slot's pooled cache region."""
+        then write the batch=1 state into the slot's pooled cache region.
+        Paged mode first secures `ceil(prompt/block_size)` physical blocks
+        from the free list — if the pool can't cover the head-of-queue
+        request it waits (head-of-line), keeping admission FIFO."""
         while self._queue and self._free:
-            req = self._queue.popleft()
+            req = self._queue[0]
+            pages = None
+            if self.paged:
+                need = self._blocks_for(len(req.prompt))
+                if need > len(self._free_blocks):
+                    break                      # wait for blocks to free up
+                blocks = [self._free_blocks.pop() for _ in range(need)]
+                pages = np.full((self.max_blocks,), -1, np.int32)
+                pages[:need] = blocks
+            self._queue.popleft()
             slot = self._free.pop()
             t0 = time.time()
             req.admitted = t0
@@ -162,7 +257,14 @@ class ServingEngine:
                 self.params, jnp.asarray(req.prompt[None]))
             logits_row = np.asarray(logits)[0]          # blocks until ready
             self.stats.prefill_s += time.time() - t0
-            self._state = self._write(self._state, state1, jnp.int32(slot))
+            if self.paged:
+                self._slot_blocks[slot] = blocks
+                self._slot_pos[slot] = len(req.prompt)
+                self._note_block_usage()
+                self._state = self._write(self._state, state1, jnp.int32(slot),
+                                          jnp.asarray(pages))
+            else:
+                self._state = self._write(self._state, state1, jnp.int32(slot))
             tok = self._sample(req, logits_row)
             req.output.append(tok)
             req.first_token_time = time.time()
@@ -170,13 +272,17 @@ class ServingEngine:
             self._active[slot] = req
             self._tokens[slot] = tok
             self._mask[slot] = True
+            self.stats.peak_active_slots = max(self.stats.peak_active_slots,
+                                               int(self._mask.sum()))
             # The prefill-produced token may already satisfy the stop rule.
-            if (req.max_new_tokens <= 1
-                    or (req.stop_token is not None and tok == req.stop_token)):
-                self._finish(slot, req, time.time())
+            if req.stop_token is not None and tok == req.stop_token:
+                self._finish(slot, req, time.time(), "stop")
+            elif req.max_new_tokens <= 1:
+                self._finish(slot, req, time.time(), "length")
 
-    def _finish(self, slot: int, req: Request, now: float) -> None:
+    def _finish(self, slot: int, req: Request, now: float, reason: str) -> None:
         req.done_time = now
+        req.stop_reason = reason
         self.stats.completed += 1
         self.stats.queue_wait_s += req.queue_wait_s or 0.0
         self.stats.ttft_s += req.ttft_s or 0.0
@@ -184,10 +290,54 @@ class ServingEngine:
         self._mask[slot] = False
         self._free.append(slot)
         self._free.sort(reverse=True)
+        if self.paged:
+            self._free_blocks.extend(self._slot_blocks.pop(slot, ()))
+            self._slot_pos.pop(slot, None)
+            self._note_block_usage()
         self._state = self._reset(self._state, jnp.int32(slot))
+
+    def _grow_or_overflow(self) -> None:
+        """Before a tick, every active slot must have capacity for its next
+        KV write. Paged slots whose cursor crossed a block boundary take one
+        block from the free list (`map_block` updates every layer's page
+        table); if none is free — or a dense slot hit max_seq — the request
+        finishes with an ``overflow`` stop reason and the write that could
+        not be stored is counted, instead of `append_token`'s silent clip."""
+        now = time.time()
+        for slot, req in list(self._active.items()):
+            if self.paged:
+                pos = self._slot_pos[slot]
+                cap = len(self._slot_blocks[slot]) * self.block_size
+                if pos < cap:
+                    continue
+                if pos < self.max_seq and self._free_blocks:
+                    blk = self._free_blocks.pop()
+                    logical = pos // self.block_size
+                    self._slot_blocks[slot].append(blk)
+                    self._note_block_usage()
+                    self._state = self._map_block(
+                        self._state, jnp.int32(slot), jnp.int32(logical),
+                        jnp.int32(blk))
+                    continue
+            else:
+                if self._slot_written(slot) < self.max_seq:
+                    continue
+            self.stats.overflows += 1
+            self.stats.dropped_writes += 1
+            self._finish(slot, req, now, "overflow")
+
+    def _slot_written(self, slot: int) -> int:
+        """Tokens stored for a dense slot = prompt + decoded-and-written."""
+        req = self._active[slot]
+        return len(req.prompt) + len(req.output) - 1
 
     def _tick(self) -> None:
         """ONE fused decode call advancing every active slot."""
+        self._grow_or_overflow()
+        if not self._active:
+            return
+        self.stats.peak_active_slots = max(self.stats.peak_active_slots,
+                                           int(self._mask.sum()))
         t0 = time.time()
         nxt, logits, self._state = self._decode(
             self.params, self._state, jnp.asarray(self._tokens),
@@ -201,6 +351,8 @@ class ServingEngine:
         now = time.time()
         for slot in list(self._active):
             req = self._active[slot]
+            if self.paged:
+                self._slot_pos[slot] += 1
             if self.greedy or req.temperature <= 0.0:
                 tok = int(nxt_host[slot])
             else:
@@ -210,9 +362,10 @@ class ServingEngine:
             req.output.append(tok)
             self._tokens[slot] = tok
             self.stats.tokens_generated += 1
-            if (len(req.output) >= req.max_new_tokens
-                    or (req.stop_token is not None and tok == req.stop_token)):
-                self._finish(slot, req, now)
+            if req.stop_token is not None and tok == req.stop_token:
+                self._finish(slot, req, now, "stop")
+            elif len(req.output) >= req.max_new_tokens:
+                self._finish(slot, req, now, "length")
 
     def run(self, max_ticks: int = 10_000) -> ServeStats:
         ticks = 0

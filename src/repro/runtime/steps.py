@@ -24,7 +24,7 @@ from repro.models.transformer import LMState
 from repro.models.encdec import EncDecState
 from repro.models.rglru import RGLRUState
 from repro.models.ssm import SSMState
-from repro.core.cache import SalcaCache
+from repro.core.cache import PagedSalcaCache, SalcaCache
 from repro.runtime.optimizer import AdamWConfig, AdamWState, adamw_update, init_opt_state
 
 
@@ -90,8 +90,39 @@ def _cache_spec(mesh: Mesh, cache: SalcaCache, dp, seq, lead: int) -> SalcaCache
     )
 
 
+def _paged_cache_spec(mesh: Mesh, cache: PagedSalcaCache, dp, seq,
+                      lead: int) -> PagedSalcaCache:
+    """Placement specs for a paged pool inside a pooled decode state.
+
+    NOTE: sequence-sharded paged *decode* is not implemented yet —
+    `models.blocks._attn_decode` raises for a paged cache with `ctx.axis`
+    set (ROADMAP: sharded page pools). These specs exist so state-spec
+    construction doesn't crash on paged states and record the intended
+    layout for that follow-on: physical block dim over the decode sequence
+    axes, per-slot metadata over the batch/DP axes."""
+    ld = (None,) * lead
+
+    def fs(spec, leaf):
+        return fit_spec(mesh, P(*ld, *spec), leaf.shape)
+
+    return PagedSalcaCache(
+        k_codes=fs((seq, None, None, None), cache.k_codes),
+        k_scale=fs((seq, None, None), cache.k_scale),
+        v_codes=fs((seq, None, None, None), cache.v_codes),
+        v_scale=fs((seq, None, None), cache.v_scale),
+        feat_words=fs((seq, None, None, None), cache.feat_words),
+        feat_scale=fs((seq, None, None), cache.feat_scale),
+        feat_zero=fs((seq, None, None), cache.feat_zero),
+        heavy_idx=fs((dp, None, None), cache.heavy_idx),
+        length=fs((dp,), cache.length),
+        page_table=fs((dp, None), cache.page_table),
+    )
+
+
 def _substate_spec(mesh: Mesh, st, dp, seq, tp, lead: int):
     ld = (None,) * lead
+    if isinstance(st, PagedSalcaCache):
+        return _paged_cache_spec(mesh, st, dp, seq, lead)
     if isinstance(st, SalcaCache):
         return _cache_spec(mesh, st, dp, seq, lead)
     if isinstance(st, SSMState):

@@ -16,7 +16,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import empty_cache, prefill_cache, reset_slot, SalcaParams
+from repro.core import (append_token_masked, empty_cache, prefill_cache,
+                        reset_slot, SalcaParams)
 from repro.core.cache import write_prefill_into_slot
 from repro.models import get_model
 from repro.runtime.serve import Request, ServingEngine
@@ -72,6 +73,63 @@ def test_write_prefill_into_slot_validates_shapes(rng):
                           params=SalcaParams(feature_sparsity=0.5, k=8, k_cap=8))
     with pytest.raises(ValueError):
         write_prefill_into_slot(pool, small, 0)    # max_seq mismatch
+
+
+def test_slot_lifecycle_no_stale_leakage(api, params, rng):
+    """Roundtrip write_into_slot → decode → reset_slot → re-admit: the
+    recycled slot behaves exactly like a fresh pool (no stale tokens from
+    the previous occupant leak through the valid mask)."""
+    pa, pb = _prompt(rng, 20), _prompt(rng, 9)
+    _, sa = api.prefill(params, {"tokens": jnp.asarray(pa[None])}, MAX_SEQ)
+    _, sb = api.prefill(params, {"tokens": jnp.asarray(pb[None])}, MAX_SEQ)
+    active = jnp.asarray([True, False])
+    tok = jnp.asarray([4, 0], jnp.int32)
+    # occupy slot 0 with request A, decode a few steps, then free it
+    pool = api.init_state(2, MAX_SEQ)
+    pool = api.write_into_slot(pool, sa, 0)
+    for _ in range(3):
+        _, pool = api.decode_step(params, pool, tok, None, active=active)
+    pool = api.reset_slot(pool, 0)
+    assert int(pool.pos[0]) == 0
+    # re-admit request B into the recycled slot vs a never-used pool
+    pool = api.write_into_slot(pool, sb, 0)
+    fresh = api.write_into_slot(api.init_state(2, MAX_SEQ), sb, 0)
+    for t in (7, 11, 2):
+        tk = jnp.asarray([t, 0], jnp.int32)
+        lr, pool = api.decode_step(params, pool, tk, None, active=active)
+        lf, fresh = api.decode_step(params, fresh, tk, None, active=active)
+        np.testing.assert_allclose(np.asarray(lr[0]), np.asarray(lf[0]),
+                                   rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("length", [0, 1, 30, 31, 32])
+def test_append_token_masked_invariants(rng, length):
+    """Property-style over cursor positions near 0 and max_seq: active rows
+    append at their cursor and advance (clipped at max_seq); inactive rows
+    are bit-identical — under alternating active masks."""
+    max_seq = 32
+    cache = empty_cache(batch=4, max_seq=max_seq, kv_heads=2, head_dim=16, r=16)
+    cache = cache._replace(length=jnp.full((4,), length, jnp.int32))
+    lengths = np.full(4, length)               # host-tracked expectation
+    active = np.asarray([True, False, True, False])
+    for _ in range(3):                         # alternate the mask
+        before = [np.asarray(x) for x in cache]
+        k = jnp.asarray(rng.normal(size=(4, 2, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(4, 2, 16)), jnp.float32)
+        cache = append_token_masked(cache, k, v, jnp.asarray(active))
+        after = [np.asarray(x) for x in cache]
+        for row in range(4):
+            if active[row]:
+                cursor = lengths[row]
+                lengths[row] = min(cursor + 1, max_seq)
+                assert int(cache.length[row]) == lengths[row]
+                if cursor < max_seq:           # in-range write landed
+                    assert float(cache.k_scale[row, cursor, 0]) > 0.0
+            else:                              # untouched, bit-identical
+                assert int(cache.length[row]) == lengths[row]
+                for b, a in zip(before, after):
+                    np.testing.assert_array_equal(b[row], a[row])
+        active = ~active
 
 
 # ---------------------------------------------------------------------------
