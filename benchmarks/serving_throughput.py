@@ -1,6 +1,6 @@
 """Serving throughput: batching sublinearity + paged-pool admission wins.
 
-Two sweeps:
+Three sweeps:
 
 1. **Slots sweep** — the slot-pooled engine issues ONE fused decode per
    tick, so decode wall time per tick should stay ~flat as active slots grow
@@ -14,10 +14,21 @@ Two sweeps:
    requests and block-pool utilization for both, plus a paged-vs-contiguous
    greedy-output parity row (the correctness anchor: same prompts, same
    tokens, block-granular pool vs dense stripes).
+
+3. **Shared-system-prompt sweep** — N requests whose prompts share a
+   75%-of-length system prefix, at the same fixed block pool. Prefix-shared
+   admission maps the prefix blocks by reference and charges only the
+   divergent tail, so admitted concurrency should be ≥ 2x the unshared
+   paged engine — with bit-identical greedy outputs (parity row; the sweep
+   RAISES on a mismatch or a gain shortfall so CI fails loudly). Uses the
+   static weight-derived heavy-channel set (`salca_static_channels`), the
+   request-independent mode that makes feature blocks shareable across
+   divergent tails.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -130,6 +141,69 @@ def _mixed_sweep(cfg, params, smoke: bool):
     yield f"serving_mixed_parity,paged_vs_dense_outputs,{'ok' if match else 'MISMATCH'}"
 
 
+def _shared_workload(cfg, rng, n_requests: int):
+    """Prompts sharing a 48-token system prefix (3 full blocks = 75%) with
+    divergent 15-token tails. Lifetime (63 prompt + 1 stored decode token)
+    fills the 4th block exactly, so no request ever needs a growth block —
+    concurrency is set purely by admission, and a starved pool waits
+    head-of-line instead of overflow-truncating (which would make the
+    shared/unshared output comparison meaningless)."""
+    from repro.runtime.serve import Request
+    sys_prefix = rng.integers(0, cfg.vocab_size, 48).astype(np.int32)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prefix,
+                         rng.integers(0, cfg.vocab_size, 15).astype(np.int32)]),
+                    max_new_tokens=2)
+            for i in range(n_requests)]
+
+
+def _shared_sweep(cfg, params, smoke: bool):
+    from repro.runtime.serve import ServingEngine
+
+    # Static heavy channels: the request-independent set every request
+    # agrees on, so divergent-tail feature blocks alias safely. Parameter
+    # shapes don't depend on the flag, so the same params serve both modes.
+    scfg = dataclasses.replace(cfg, salca_static_channels=True)
+    # Pool sized so the unshared engine packs floor(num_blocks/4) requests
+    # while the shared engine pays 4 blocks once + 1 divergent-tail block
+    # per further request (no growth blocks — see _shared_workload).
+    n_requests = 5 if smoke else 12
+    num_blocks = 8 if smoke else 16
+    slots = 8 if smoke else 12
+    yield ("serving_shared,mode,slots,num_blocks,peak_concurrent,completed,"
+           "shared_blocks,cow_copies,memory_saved_tokens")
+    results = {}
+    for mode, share in (("unshared", False), ("shared", True)):
+        rng = np.random.default_rng(11)
+        reqs = _shared_workload(scfg, rng, n_requests)
+        eng = ServingEngine(scfg, params, max_seq=MAX_SEQ, slots=slots,
+                            paged=True, block_size=BLOCK_SIZE,
+                            num_blocks=num_blocks, prefix_sharing=share)
+        for r in reqs:
+            eng.submit(r)
+        st = eng.run()
+        results[mode] = (reqs, st)
+        saved = st.summary().get("memory_saved_tokens", 0)
+        yield (f"serving_shared,{mode},{slots},{num_blocks},"
+               f"{st.peak_active_slots},{st.completed},{st.shared_blocks},"
+               f"{st.cow_copies},{saved}")
+    (ru, su), (rs, ss) = results["unshared"], results["shared"]
+    gain = ss.peak_active_slots / max(su.peak_active_slots, 1)
+    yield (f"serving_shared_gain,shared_vs_unshared_concurrency,{gain:.2f},"
+           f"{'shared-admits-more' if gain >= 2.0 else 'BELOW-2X'}")
+    match = all(a.output == b.output for a, b in zip(ru, rs))
+    yield f"serving_shared_parity,shared_vs_unshared_outputs,{'ok' if match else 'MISMATCH'}"
+    # Correctness/acceptance gates — raise so benchmarks/run.py exits 1.
+    if not match:
+        raise RuntimeError("prefix sharing broke greedy-output parity")
+    if ss.shared_blocks == 0:
+        raise RuntimeError("shared sweep admitted no shared blocks")
+    if gain < 2.0:
+        raise RuntimeError(
+            f"shared-prefix admission gain {gain:.2f} < 2.0 acceptance bar")
+
+
 def run(smoke: bool = False):
     from repro.configs import get_config
     from repro.models import get_model
@@ -141,6 +215,7 @@ def run(smoke: bool = False):
 
     yield from _slots_sweep(cfg, params, rng, smoke)
     yield from _mixed_sweep(cfg, params, smoke)
+    yield from _shared_sweep(cfg, params, smoke)
 
 
 if __name__ == "__main__":

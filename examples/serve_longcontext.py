@@ -9,6 +9,7 @@ time — plus per-request latency.
 """
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -31,9 +32,19 @@ def main() -> None:
     ap.add_argument("--block-size", type=int, default=32)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="pool size in blocks (0 = dense-equivalent budget)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="refcounted copy-on-write prefix sharing (paged "
+                         "only); requests share a system prompt below")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of shared system prompt per request "
+                         "(default: 75%% of prompt-len when sharing)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if args.prefix_sharing:
+        # Static weight-derived heavy channels: the request-independent set
+        # that lets divergent-tail requests alias feature blocks.
+        cfg = dataclasses.replace(cfg, salca_static_channels=True)
     print(f"arch={args.arch} (reduced: {cfg.num_layers}L d={cfg.d_model}, "
           f"salca={'on' if cfg.salca else 'off — ' + cfg.family})")
     api = get_model(cfg)
@@ -45,12 +56,23 @@ def main() -> None:
     max_seq = ((args.prompt_len + args.new_tokens + 127) // 128) * 128
     engine = ServingEngine(cfg, params, max_seq=max_seq, slots=args.slots,
                            paged=args.paged, block_size=args.block_size,
-                           num_blocks=args.num_blocks or None)
+                           num_blocks=args.num_blocks or None,
+                           prefix_sharing=args.prefix_sharing)
     rng = np.random.default_rng(0)
+    shared_len = 0
+    shared = np.zeros((0,), np.int32)
+    if args.prefix_sharing:
+        shared_len = args.shared_prefix or (3 * args.prompt_len) // 4
+        if not 0 < shared_len < args.prompt_len:
+            ap.error(f"--shared-prefix {shared_len} must be in "
+                     f"(0, prompt-len {args.prompt_len}) — requests need a "
+                     "divergent tail")
+        shared = rng.integers(0, cfg.vocab_size, shared_len).astype(np.int32)
     for i in range(args.requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            args.prompt_len - shared_len).astype(np.int32)
         engine.submit(Request(
-            rid=i, prompt=rng.integers(0, cfg.vocab_size,
-                                       args.prompt_len).astype(np.int32),
+            rid=i, prompt=np.concatenate([shared, tail]),
             max_new_tokens=args.new_tokens))
     stats = engine.run()
     s = stats.summary()
@@ -65,6 +87,10 @@ def main() -> None:
         print(f"block pool: {s['peak_blocks_in_use']}/{s['block_pool_size']} "
               f"blocks at peak (utilization {s['block_utilization']}), "
               f"{s['overflows']} overflows")
+    if args.prefix_sharing:
+        print(f"prefix sharing: {s['shared_blocks']} blocks shared across "
+              f"{s['prefix_hits']} hits, {s['cow_copies']} CoW copies, "
+              f"{s['memory_saved_tokens']} tokens of HBM saved")
     print("decode/(prefill+decode) time share: "
           f"{s['decode_s']/(s['prefill_s']+s['decode_s']):.1%} "
           "(the paper's Fig.1 regime: decode dominates long-context serving)")

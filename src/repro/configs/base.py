@@ -89,6 +89,12 @@ class ModelConfig:
     salca_max_k: int = 4096          # retention cap for very long contexts
     salca_pool_window: int = 7
     salca_use_pool: bool = True
+    # Loki-style static heavy channels: derive the set from the key
+    # projection weights (request-independent) instead of per-input key
+    # statistics (paper §3.1). Trades selection adaptivity for a heavy set
+    # shared by ALL requests — which is what lets prefix-sharing admission
+    # alias feature blocks across requests with divergent prompt tails.
+    salca_static_channels: bool = False
 
     # dtype ------------------------------------------------------------
     dtype: str = "bfloat16"

@@ -13,7 +13,8 @@ from repro.core.cache import (
     SalcaCache, empty_cache, prefill_cache, append_token, append_token_masked,
     cache_bytes, write_prefill_into_slot, reset_slot,
     PagedSalcaCache, empty_paged_cache, prefill_into_pages, append_token_paged,
-    map_block, free_pages, gather_selected_paged, paged_cache_bytes)
+    map_block, free_pages, gather_selected_paged, paged_cache_bytes,
+    share_blocks, cow_block)
 from repro.core.attention import (
     salca_decode_attention,
     salca_decode_attention_paged,
@@ -49,7 +50,7 @@ __all__ = [
     "append_token_masked", "cache_bytes", "write_prefill_into_slot", "reset_slot",
     "PagedSalcaCache", "empty_paged_cache", "prefill_into_pages",
     "append_token_paged", "map_block", "free_pages", "gather_selected_paged",
-    "paged_cache_bytes",
+    "paged_cache_bytes", "share_blocks", "cow_block",
     "salca_select", "select_sparse_pattern", "select_sparse_pattern_blocked",
     "salca_decode_attention", "salca_decode_attention_paged",
     "dense_decode_attention", "dense_decode_from_cache", "dense_decode_from_paged",

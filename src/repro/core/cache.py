@@ -89,18 +89,22 @@ def _encode_tokens(k: jax.Array, v: jax.Array, heavy_idx: jax.Array):
 
 
 def prefill_cache(k: jax.Array, v: jax.Array, max_seq: int,
-                  params: SalcaParams) -> SalcaCache:
+                  params: SalcaParams,
+                  heavy_idx: jax.Array | None = None) -> SalcaCache:
     """Build a cache from prefill K/V.
 
     k, v: (B, T, KV, HD) full-precision prefill keys/values. Heavy channels
     are identified here (once per input, per kv head — paper §3.1) and then
-    frozen for the whole decode.
+    frozen for the whole decode. Pass `heavy_idx` (B, KV, R) to override
+    with a precomputed (e.g. static weight-derived) channel set — required
+    request-independent for prefix-shared feature blocks.
     """
     b, t, kv, hd = k.shape
     r = params.r(hd)
-    # Per-kv-head salience over tokens: reduce |K| along T.
-    heavy_idx = hc.heavy_channel_indices(
-        k.transpose(0, 2, 1, 3).reshape(b, kv, t, hd), r)       # (B, KV, R)
+    if heavy_idx is None:
+        # Per-kv-head salience over tokens: reduce |K| along T.
+        heavy_idx = hc.heavy_channel_indices(
+            k.transpose(0, 2, 1, 3).reshape(b, kv, t, hd), r)   # (B, KV, R)
     k8, v8, words, fs, fz = _encode_tokens(k, v, heavy_idx)
     pad = max_seq - t
     assert pad >= 0, f"prefill length {t} exceeds cache capacity {max_seq}"
@@ -208,6 +212,17 @@ def cache_bytes(cache: SalcaCache) -> dict[str, int]:
 # maps directly onto page order; the exact-attention gather resolves logical
 # token indices to physical rows (page * block_size + offset) before fetching
 # K/V. All shapes are static, all ops jit-safe with traced slots/pages.
+#
+# Prefix sharing: identical prompt prefixes map the SAME physical blocks from
+# multiple page tables. A per-block `refcount` tracks how many page-table
+# entries reference each block; every mapping op maintains it (`map_block` /
+# `share_blocks` / `prefill_into_pages` incref, `free_pages` / `cow_block`
+# decref). Shared blocks are copy-on-write: `append_token_paged` treats a
+# write into a block with refcount > 1 as a write fault (the write is DROPPED
+# and the cursor held — a shared block is never mutated in place); the engine
+# services the fault by allocating a fresh block and calling `cow_block`,
+# which copies all seven cache fields of the block, remaps only the writer's
+# page-table entry, and moves one reference from the old block to the copy.
 # ---------------------------------------------------------------------------
 
 PAGE_UNMAPPED = -1
@@ -226,6 +241,8 @@ class PagedSalcaCache(NamedTuple):
     heavy_idx: jax.Array   # (S, KV, R) int32 — frozen heavy-channel set
     length: jax.Array      # (S,) int32 — tokens currently stored
     page_table: jax.Array  # (S, MB) int32 — logical block → physical block, -1 unmapped
+    # Per-block sharing state:
+    refcount: jax.Array    # (P,) int32 — page-table entries referencing each block
 
     # Shape properties use negative indices so they stay correct on stacked
     # (n_periods-leading) instances inside scanned model states.
@@ -288,11 +305,23 @@ def empty_paged_cache(num_blocks: int, block_size: int, slots: int,
         heavy_idx=zeros((slots, kv_heads, r), jnp.int32),
         length=zeros((slots,), jnp.int32),
         page_table=jnp.full((slots, max_blocks), PAGE_UNMAPPED, jnp.int32),
+        refcount=zeros((num_blocks,), jnp.int32),
     )
 
 
+def _refcount_add(refcount: jax.Array, pages: jax.Array, delta: int,
+                  valid: jax.Array | None = None) -> jax.Array:
+    """Scatter `delta` onto `refcount` at every valid page id. Unmapped (-1)
+    entries — and entries where `valid` is False — are redirected out of
+    bounds and dropped, so the op is safe (and idempotent for -1 rows)."""
+    p = refcount.shape[-1]
+    ok = pages >= 0 if valid is None else (pages >= 0) & valid
+    tgt = jnp.where(ok, pages, p)
+    return refcount.at[tgt].add(jnp.int32(delta), mode="drop")
+
+
 def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
-                       pages: jax.Array) -> PagedSalcaCache:
+                       pages: jax.Array, n_shared=0) -> PagedSalcaCache:
     """Write a batch=1 contiguous prefilled cache into the physical blocks
     named by `pages` and install the page table for `slot`.
 
@@ -302,6 +331,13 @@ def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
     the engine compiles this once. Unallocated physical blocks keep whatever
     stale data a freed request left — every read path is gated to
     pos < length, so reuse is safe.
+
+    Prefix sharing: the first `n_shared` entries of `pages` name blocks that
+    ALREADY hold this prompt's prefix (another request wrote them). Those
+    blocks are mapped — installed in the page table and refcounted — but NOT
+    written: the divergent tail is the only data transfer. `n_shared` may be
+    traced. The slot must be unmapped (fresh or freed) before this call, or
+    the refcount bookkeeping double-counts.
     """
     if src.k_codes.shape[0] != 1:
         raise ValueError(f"src cache must have batch 1, got {src.k_codes.shape[0]}")
@@ -315,7 +351,10 @@ def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
             f"{pool.max_seq} (= {pool.max_blocks} blocks × {pool.block_size})")
     bs, mb, p = pool.block_size, pool.max_blocks, pool.num_blocks
     pad = pool.max_seq - src.max_seq
-    safe_pages = jnp.where(pages >= 0, pages, p)     # -1 → OOB → dropped
+    # Shared-prefix blocks are mapped but never (re)written — their content
+    # is the prefix by construction; rewriting would race the other owners.
+    writable = jnp.arange(mb) >= jnp.asarray(n_shared, jnp.int32)
+    safe_pages = jnp.where((pages >= 0) & writable, pages, p)  # → OOB → dropped
 
     def upd(buf, val):  # val: (1, src_seq, KV, ·) → blocks → scatter rows
         v = jnp.pad(val[0], ((0, pad),) + ((0, 0),) * (val.ndim - 2))
@@ -333,6 +372,7 @@ def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
         heavy_idx=pool.heavy_idx.at[slot].set(src.heavy_idx[0]),
         length=pool.length.at[slot].set(src.length[0]),
         page_table=pool.page_table.at[slot].set(pages.astype(jnp.int32)),
+        refcount=_refcount_add(pool.refcount, pages, +1),
     )
 
 
@@ -346,6 +386,13 @@ def append_token_paged(pool: PagedSalcaCache, k: jax.Array,
     cursor does not advance — there is no silent clip; the engine is
     responsible for growing the slot's page list (or finishing the request
     with an overflow stop) before the write lands.
+
+    Copy-on-write fault: a write into a block with refcount > 1 is likewise
+    DROPPED with the cursor held — a shared block is never mutated in place.
+    The engine services the fault before the tick by allocating a fresh block
+    and calling `cow_block` (copy all seven fields, remap only the writer's
+    page-table entry, move one reference), after which the write is private
+    and lands normally.
     """
     s = k.shape[0]
     bs, mb, p = pool.block_size, pool.max_blocks, pool.num_blocks
@@ -353,7 +400,8 @@ def append_token_paged(pool: PagedSalcaCache, k: jax.Array,
     blk = jnp.clip(cur // bs, 0, mb - 1)
     sidx = jnp.arange(s)
     page = pool.page_table[sidx, blk]                          # (S,)
-    ok = (cur >= 0) & (cur < pool.max_seq) & (page >= 0)
+    rc = pool.refcount[jnp.where(page >= 0, page, 0)]          # (S,)
+    ok = (cur >= 0) & (cur < pool.max_seq) & (page >= 0) & (rc <= 1)
     phys = jnp.where(ok, page * bs + cur % bs, p * bs)         # OOB → drop
     k8, v8, words, fs, fz = _encode_tokens(k[:, None], v[:, None], pool.heavy_idx)
 
@@ -374,20 +422,84 @@ def append_token_paged(pool: PagedSalcaCache, k: jax.Array,
 def map_block(pool: PagedSalcaCache, slot, logical_block, page) -> PagedSalcaCache:
     """Map one logical block of `slot` to physical block `page` (on-demand
     growth: the engine allocates a block from its free list when a slot's
-    cursor crosses a block boundary). All args may be traced."""
+    cursor crosses a block boundary). All args may be traced.
+
+    Refcounts move with the mapping: the new page gains a reference, and a
+    previously mapped entry (remap) releases one."""
+    page = jnp.asarray(page, jnp.int32)
+    old = pool.page_table[slot, logical_block]
+    rc = _refcount_add(pool.refcount, page[None], +1)
+    rc = _refcount_add(rc, old[None], -1)
     return pool._replace(
+        page_table=pool.page_table.at[slot, logical_block].set(page),
+        refcount=rc)
+
+
+def share_blocks(pool: PagedSalcaCache, src_slot, n_blocks,
+                 dst_slot) -> PagedSalcaCache:
+    """Map the first `n_blocks` logical blocks of `src_slot` into `dst_slot`
+    — the prefix-sharing primitive. No data moves: `dst_slot`'s page table
+    aliases `src_slot`'s physical blocks and each gains a reference, making
+    them copy-on-write for BOTH slots. `dst_slot` also adopts `src_slot`'s
+    frozen heavy-channel set (the shared feature blocks are encoded with it)
+    and a length covering the shared tokens (min(src length, n_blocks·BS)).
+    `dst_slot` must be unmapped beforehand. All args may be traced.
+    """
+    mb, bs = pool.max_blocks, pool.block_size
+    take = jnp.arange(mb) < jnp.asarray(n_blocks, jnp.int32)
+    src_row = pool.page_table[src_slot]
+    dst_row = jnp.where(take, src_row, pool.page_table[dst_slot])
+    shared_len = jnp.minimum(pool.length[src_slot],
+                             jnp.asarray(n_blocks, jnp.int32) * bs)
+    return pool._replace(
+        page_table=pool.page_table.at[dst_slot].set(dst_row),
+        heavy_idx=pool.heavy_idx.at[dst_slot].set(pool.heavy_idx[src_slot]),
+        length=pool.length.at[dst_slot].set(shared_len),
+        refcount=_refcount_add(pool.refcount, src_row, +1, valid=take),
+    )
+
+
+def cow_block(pool: PagedSalcaCache, slot, logical_block,
+              new_page) -> PagedSalcaCache:
+    """Copy-on-write service: copy ALL SEVEN cache fields of the block
+    currently mapped at (`slot`, `logical_block`) into the fresh physical
+    block `new_page`, remap ONLY this slot's page-table entry, and move one
+    reference from the source block to the copy (the source stays alive for
+    its remaining owners). A no-op if the entry is unmapped. All args may be
+    traced — the engine compiles this once.
+    """
+    p = pool.num_blocks
+    old = pool.page_table[slot, logical_block]
+    mapped = old >= 0
+    src = jnp.where(mapped, old, 0)
+    tgt = jnp.where(mapped, jnp.asarray(new_page, jnp.int32), p)  # OOB → drop
+
+    def copy(buf):
+        return buf.at[tgt].set(buf[src], mode="drop")
+
+    rc = _refcount_add(pool.refcount, old[None], -1)
+    rc = _refcount_add(rc, jnp.where(mapped, tgt, -1)[None], +1)
+    return pool._replace(
+        k_codes=copy(pool.k_codes), k_scale=copy(pool.k_scale),
+        v_codes=copy(pool.v_codes), v_scale=copy(pool.v_scale),
+        feat_words=copy(pool.feat_words), feat_scale=copy(pool.feat_scale),
+        feat_zero=copy(pool.feat_zero),
         page_table=pool.page_table.at[slot, logical_block].set(
-            jnp.asarray(page, jnp.int32)))
+            jnp.where(mapped, jnp.asarray(new_page, jnp.int32), old)),
+        refcount=rc)
 
 
 def free_pages(pool: PagedSalcaCache, slot) -> PagedSalcaCache:
-    """Release a slot: unmap its page table row and zero its length. The
-    physical blocks return to the engine's free list (host side); their data
-    rows are left in place — every read is gated by the valid mask, and the
-    next owner overwrites them."""
+    """Release a slot: decrement the refcount of every block it maps, unmap
+    its page table row and zero its length. Blocks whose refcount reaches 0
+    return to the engine's free list (host side); their data rows are left
+    in place — every read is gated by the valid mask, and the next owner
+    overwrites them. Freeing an already-freed slot is a no-op (its row is
+    all -1, so no refcount moves) — the double-free hazard lives here."""
     return pool._replace(
         length=pool.length.at[slot].set(0),
         page_table=pool.page_table.at[slot].set(jnp.int32(PAGE_UNMAPPED)),
+        refcount=_refcount_add(pool.refcount, pool.page_table[slot], -1),
     )
 
 
@@ -460,13 +572,13 @@ def gather_selected_paged(pool: PagedSalcaCache, sel) -> tuple:
 
 
 def paged_cache_bytes(pool: PagedSalcaCache) -> dict[str, int]:
-    """Physical bytes by region, plus the page-table overhead."""
+    """Physical bytes by region, plus the page-table + refcount overhead."""
     def nbytes(x):
         return int(x.size) * x.dtype.itemsize
     kv = (nbytes(pool.k_codes) + nbytes(pool.v_codes)
           + nbytes(pool.k_scale) + nbytes(pool.v_scale))
     feats = (nbytes(pool.feat_words) + nbytes(pool.feat_scale)
              + nbytes(pool.feat_zero))
-    table = nbytes(pool.page_table)
+    table = nbytes(pool.page_table) + nbytes(pool.refcount)
     return {"kv_region": kv, "feature_region": feats, "page_table": table,
             "total": kv + feats + table}

@@ -157,6 +157,22 @@ def ring_size(cfg: ModelConfig, kind: str, max_seq: int) -> int:
     return max_seq
 
 
+def static_heavy_idx(attn_params: dict, cfg: ModelConfig, sp: SalcaParams,
+                     batch: int) -> jax.Array | None:
+    """Request-independent heavy-channel set (cfg.salca_static_channels):
+    per-kv-head top-r channels by key-projection weight mass Σ_d |W_k[d,·,j]|
+    — the Loki-style offline selection. Returns (B, KV, R) broadcast over
+    the batch, or None to keep the paper's per-input identification. A
+    static set is what makes prefix-shared feature blocks valid across
+    requests whose prompts (and hence per-input sets) diverge."""
+    if not cfg.salca_static_channels:
+        return None
+    sal = jnp.sum(jnp.abs(attn_params["wk"].astype(jnp.float32)), axis=0)
+    _, idx = jax.lax.top_k(sal, sp.r(cfg.resolved_head_dim))    # (KV, R)
+    idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+    return jnp.broadcast_to(idx[None], (batch,) + idx.shape)
+
+
 def block_prefill(params: dict, kind: str, x: jax.Array, cfg: ModelConfig,
                   max_seq: int, attn_impl: str = "xla"):
     """Returns (x_out, state) where state feeds block_decode."""
@@ -179,7 +195,9 @@ def block_prefill(params: dict, kind: str, x: jax.Array, cfg: ModelConfig,
             slot_tok = base + ((jnp.arange(w_ring) - base) % w_ring)
             k, v = k[:, slot_tok], v[:, slot_tok]
         cache = prefill_cache(k, v, max_seq=w_ring if w_ring < max_seq else max_seq,
-                              params=sp)
+                              params=sp,
+                              heavy_idx=static_heavy_idx(params["attn"], cfg, sp,
+                                                         x.shape[0]))
         return x + f, cache
     if kind == "S":
         h, st = ssm.ssd_train(params["ssd"], rmsnorm(params["ln1"], x, cfg.norm_eps),

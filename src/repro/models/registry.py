@@ -35,9 +35,14 @@ class ModelAPI(NamedTuple):
     init_paged_state: Callable[..., Any] | None = None
     #   (slots, max_seq, block_size, num_blocks) -> state
     write_into_pages: Callable[..., Any] | None = None
-    #   (pool_state, src_state, slot, pages) -> pool_state
+    #   (pool_state, src_state, slot, pages, n_shared) -> pool_state
     map_block: Callable[..., Any] | None = None
     #   (pool_state, slot, logical_block, page) -> pool_state
+    # Prefix sharing / copy-on-write (refcounted block aliasing):
+    share_blocks: Callable[..., Any] | None = None
+    #   (pool_state, src_slot, n_blocks, dst_slot) -> pool_state
+    cow_block: Callable[..., Any] | None = None
+    #   (pool_state, slot, logical_block, new_page) -> pool_state
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -90,14 +95,17 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         return transformer.lm_init_paged_state(cfg, slots, max_seq,
                                                block_size, num_blocks)
 
-    def write_into_pages(pool, src, slot, pages):
-        return transformer.lm_write_into_slot(pool, src, slot, pages=pages)
+    def write_into_pages(pool, src, slot, pages, n_shared=0):
+        return transformer.lm_write_into_slot(pool, src, slot, pages=pages,
+                                              n_shared=n_shared)
 
     return ModelAPI(init, loss, prefill, decode_step, init_state,
                     transformer.lm_write_into_slot, transformer.lm_reset_slot,
                     init_paged_state=init_paged_state,
                     write_into_pages=write_into_pages,
-                    map_block=transformer.lm_map_block)
+                    map_block=transformer.lm_map_block,
+                    share_blocks=transformer.lm_share_blocks,
+                    cow_block=transformer.lm_cow_block)
 
 
 __all__ = ["ModelAPI", "get_model", "DecodeCtx"]

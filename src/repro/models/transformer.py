@@ -201,13 +201,13 @@ def lm_init_paged_state(cfg: ModelConfig, slots: int, max_seq: int,
 # jit-safe with a traced slot index — the serving engine compiles each once.
 # ---------------------------------------------------------------------------
 
-def _write_substate_into_slot(pool_st, src_st, slot, pages=None):
+def _write_substate_into_slot(pool_st, src_st, slot, pages=None, n_shared=0):
     from repro.core.cache import prefill_into_pages, write_prefill_into_slot
     if isinstance(pool_st, B.PagedSalcaCache):
         if pages is None:
             raise ValueError("paged cache substate requires a pages array "
                              "(use write_into_pages)")
-        return prefill_into_pages(pool_st, src_st, slot, pages)
+        return prefill_into_pages(pool_st, src_st, slot, pages, n_shared)
     if isinstance(pool_st, B.SalcaCache):
         return write_prefill_into_slot(pool_st, src_st, slot)
     # Recurrent states (SSM / RG-LRU): batch-leading leaves, plain row write.
@@ -224,7 +224,8 @@ def _reset_substate_slot(st, slot):
     return jax.tree.map(lambda x: x.at[slot].set(jnp.zeros((), x.dtype)), st)
 
 
-def lm_write_into_slot(pool: LMState, src: LMState, slot, pages=None) -> LMState:
+def lm_write_into_slot(pool: LMState, src: LMState, slot, pages=None,
+                       n_shared=0) -> LMState:
     """Install a batch=1 prefilled `src` state into row `slot` of `pool`.
 
     Period states carry a leading n_periods axis; the per-cache write is
@@ -233,12 +234,15 @@ def lm_write_into_slot(pool: LMState, src: LMState, slot, pages=None) -> LMState
     semantics. `pages` (max_blocks,) int32 names the physical blocks the
     engine allocated for this request — required when the pool's attention
     caches are paged (the same block ids apply to every layer's pool), and
-    must be None for dense pools.
+    must be None for dense pools. `n_shared` marks the leading entries of
+    `pages` as prefix-shared: mapped and refcounted in every paged layer,
+    but not written (see `core.cache.prefill_into_pages`).
     """
     periods = tuple(
-        jax.vmap(lambda p, s: _write_substate_into_slot(p, s, slot, pages))(pp, sp)
+        jax.vmap(lambda p, s: _write_substate_into_slot(p, s, slot, pages,
+                                                        n_shared))(pp, sp)
         for pp, sp in zip(pool.period_states, src.period_states))
-    tails = tuple(_write_substate_into_slot(p, s, slot, pages)
+    tails = tuple(_write_substate_into_slot(p, s, slot, pages, n_shared)
                   for p, s in zip(pool.tail_states, src.tail_states))
     return LMState(periods, tails, pool.pos.at[slot].set(src.pos[0]))
 
@@ -253,23 +257,48 @@ def lm_reset_slot(pool: LMState, slot) -> LMState:
     return LMState(periods, tails, pool.pos.at[slot].set(0))
 
 
+def _map_paged_substates(pool: LMState, fn) -> LMState:
+    """Apply `fn` to every paged attention cache in the state (vmapped over
+    the period axis); every other substate passes through unchanged."""
+    def sub(st):
+        return fn(st) if isinstance(st, B.PagedSalcaCache) else st
+
+    periods = tuple(
+        jax.vmap(fn)(pp) if isinstance(pp, B.PagedSalcaCache) else pp
+        for pp in pool.period_states)
+    tails = tuple(sub(st) for st in pool.tail_states)
+    return LMState(periods, tails, pool.pos)
+
+
 def lm_map_block(pool: LMState, slot, logical_block, page) -> LMState:
     """On-demand growth: map `logical_block` of `slot` to physical block
     `page` in every layer's paged pool (the engine allocates one block id
     from its free list and it applies to all layers). Non-paged substates
     pass through unchanged."""
     from repro.core.cache import map_block
+    return _map_paged_substates(
+        pool, lambda st: map_block(st, slot, logical_block, page))
 
-    def sub(st):
-        if isinstance(st, B.PagedSalcaCache):
-            return map_block(st, slot, logical_block, page)
-        return st
 
-    periods = tuple(
-        jax.vmap(sub)(pp) if isinstance(pp, B.PagedSalcaCache) else pp
-        for pp in pool.period_states)
-    tails = tuple(sub(st) for st in pool.tail_states)
-    return LMState(periods, tails, pool.pos)
+def lm_share_blocks(pool: LMState, src_slot, n_blocks, dst_slot) -> LMState:
+    """Prefix sharing: alias the first `n_blocks` logical blocks of
+    `src_slot` into `dst_slot` in every layer's paged pool (same block ids
+    in every layer — the engine's free list is layer-agnostic). Dense
+    substates (sliding-window rings, recurrent states) pass through
+    unchanged: they are per-slot O(window)/O(state) and are populated by the
+    admission prefill write, not by sharing."""
+    from repro.core.cache import share_blocks
+    return _map_paged_substates(
+        pool, lambda st: share_blocks(st, src_slot, n_blocks, dst_slot))
+
+
+def lm_cow_block(pool: LMState, slot, logical_block, new_page) -> LMState:
+    """Copy-on-write service for every layer's paged pool: copy the shared
+    block mapped at (`slot`, `logical_block`) into `new_page` and remap only
+    this slot's page-table entry (see `core.cache.cow_block`)."""
+    from repro.core.cache import cow_block
+    return _map_paged_substates(
+        pool, lambda st: cow_block(st, slot, logical_block, new_page))
 
 
 # ---------------------------------------------------------------------------

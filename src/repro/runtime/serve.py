@@ -20,6 +20,23 @@ SparseAccelerate argument). If the free list is empty when a slot must grow,
 the request is finished with an ``overflow`` stop reason (the dropped write
 is counted — never silently clipped).
 
+Prefix sharing (``prefix_sharing=True``, paged mode only) maps identical
+prompt prefixes — system prompts, few-shot headers — onto the SAME physical
+blocks. The engine keeps a radix map from cumulative token-id hashes of
+full-block prefixes (plus exact-full-prompt partial blocks) to the physical
+block holding them; admission matches the longest shared prefix, charges
+only the divergent tail against the free list, and installs the shared
+blocks by reference (`prefill_into_pages(..., n_shared)` maps without
+writing). Blocks are refcounted; completion decrements and only a count of
+zero returns a block to the free list. Shared blocks are copy-on-write:
+before a tick, any slot whose cursor points into a block with refcount > 1
+gets a private copy (`cow_block`) so the shared bytes are never mutated.
+Sharing is disabled per request when its prefill derives a different
+heavy-channel set than the prefix owner's (the packed feature stream is
+encoded against that set, so aliasing would corrupt selection) — the
+request falls back to private blocks, keeping outputs bit-identical to an
+unshared run in every case.
+
 Latency accounting separates queue wait (submit→admit), TTFT
 (submit→first token, i.e. queue wait + prefill), and decode (per tick and
 per token).
@@ -27,6 +44,7 @@ per token).
 
 from __future__ import annotations
 
+import hashlib
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -54,6 +72,12 @@ class Request:
     done_time: float | None = None
     stop_reason: str | None = None     # "length" | "stop" | "overflow"
     output: list = field(default_factory=list)
+    shared_blocks: int = 0             # blocks admitted by prefix sharing
+    # Engine-internal stashes, kept across head-of-line retries and cleared
+    # at admission: prefill result, prompt prefix digests, heavy-set bytes.
+    _prefill: Any = field(default=None, repr=False, compare=False)
+    _digests: Any = field(default=None, repr=False, compare=False)
+    _heavy: Any = field(default=None, repr=False, compare=False)
 
     @property
     def queue_wait_s(self) -> float | None:
@@ -93,8 +117,13 @@ class ServeStats:
     dropped_writes: int = 0    # KV writes that could not be stored
     # Paged-pool bookkeeping (zero in dense mode):
     block_pool_size: int = 0
+    block_size: int = 0
     blocks_in_use: int = 0
     peak_blocks_in_use: int = 0
+    # Prefix sharing (zero unless prefix_sharing=True):
+    shared_blocks: int = 0     # blocks admitted by reference instead of copy
+    cow_copies: int = 0        # shared blocks privatized on first write
+    prefix_hits: int = 0       # requests that shared ≥ 1 block
 
     def summary(self) -> dict:
         out = {
@@ -118,6 +147,14 @@ class ServeStats:
             out["peak_blocks_in_use"] = self.peak_blocks_in_use
             out["block_utilization"] = round(
                 self.peak_blocks_in_use / self.block_pool_size, 3)
+            out["shared_blocks"] = self.shared_blocks
+            out["cow_copies"] = self.cow_copies
+            out["prefix_hits"] = self.prefix_hits
+            # Effective memory saved: every shared admission avoided one
+            # block allocation; every CoW later paid one back.
+            saved = self.shared_blocks - self.cow_copies
+            out["effective_blocks_saved"] = saved
+            out["memory_saved_tokens"] = saved * self.block_size
         return out
 
 
@@ -131,12 +168,18 @@ class ServingEngine:
     ``max_seq`` so the paged logical capacity (and hence the selection
     parameters) match the dense path exactly — that is the paged-vs-
     contiguous parity contract.
+
+    ``prefix_sharing=True`` (paged only) admits identical prompt prefixes by
+    reference: matched full blocks are mapped, refcounted and not rewritten;
+    only the divergent tail is charged against the free list. Completion is
+    decref-based and shared blocks are copy-on-write (see module docstring).
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, max_seq: int,
                  slots: int = 4, ctx: DecodeCtx | None = None,
                  greedy: bool = True, seed: int = 0, paged: bool = False,
-                 block_size: int = 32, num_blocks: int | None = None):
+                 block_size: int = 32, num_blocks: int | None = None,
+                 prefix_sharing: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -155,6 +198,9 @@ class ServingEngine:
         self._mask = np.zeros((slots,), bool)
         donate = jax.default_backend() != "cpu"
         dn = (0,) if donate else ()
+        if prefix_sharing and not paged:
+            raise ValueError("prefix_sharing requires paged=True")
+        self.prefix_sharing = prefix_sharing
         if paged:
             if self.api.init_paged_state is None:
                 raise ValueError(f"{cfg.name}: paged serving not supported "
@@ -169,13 +215,23 @@ class ServingEngine:
             # the point of paging is that callers pass much less.
             self.num_blocks = num_blocks or slots * self.max_blocks
             self.stats.block_pool_size = self.num_blocks
+            self.stats.block_size = block_size
             self._free_blocks: list[int] = list(range(self.num_blocks))
             self._slot_blocks: dict[int, list[int]] = {}
             self._slot_pos: dict[int, int] = {}     # next write position
+            # Host mirror of the per-block refcount (the device arrays carry
+            # the same counts; the mirror drives scheduling without a sync).
+            self._refcount = np.zeros((self.num_blocks,), np.int64)
+            # Radix map: sha1 of the token-id bytes of a full-block prefix
+            # (or an exact full prompt ending in a partial block) → the
+            # physical block holding it + the owner's heavy-channel bytes.
+            self._prefix_nodes: dict[bytes, tuple[int, bytes]] = {}
+            self._block_keys: dict[int, bytes] = {}  # block → its radix key
             self._state = self.api.init_paged_state(
                 slots, max_seq, block_size, self.num_blocks)
             self._write = jax.jit(self.api.write_into_pages, donate_argnums=dn)
             self._map_block = jax.jit(self.api.map_block, donate_argnums=dn)
+            self._cow_block = jax.jit(self.api.cow_block, donate_argnums=dn)
         else:
             # The one persistent pooled decode state (slots × max_seq caches).
             self._state = self.api.init_state(slots, max_seq)
@@ -233,38 +289,173 @@ class ServingEngine:
         g = self._rng.gumbel(size=z.shape)
         return int(np.argmax(z + g))
 
-    def _admit(self) -> None:
-        """FIFO-admit queued requests into free slots: per-request prefill,
-        then write the batch=1 state into the slot's pooled cache region.
-        Paged mode first secures `ceil(prompt/block_size)` physical blocks
-        from the free list — if the pool can't cover the head-of-queue
-        request it waits (head-of-line), keeping admission FIFO."""
-        while self._queue and self._free:
-            req = self._queue[0]
-            pages = None
-            if self.paged:
-                need = self._blocks_for(len(req.prompt))
-                if need > len(self._free_blocks):
-                    break                      # wait for blocks to free up
-                blocks = [self._free_blocks.pop() for _ in range(need)]
-                pages = np.full((self.max_blocks,), -1, np.int32)
-                pages[:need] = blocks
-            self._queue.popleft()
-            slot = self._free.pop()
+    # -- prefix sharing helpers ----------------------------------------
+
+    def _request_digests(self, req: Request):
+        """Cumulative SHA-1 digests of the prompt's token-id bytes — one per
+        full block, plus one for the whole prompt when it ends in a partial
+        block. Computed incrementally (O(prompt) total, vs O(blocks²) for
+        per-prefix re-hashing) and memoized on the request across
+        head-of-line retries. digest j == sha1(prompt[:(j+1)·BS]) exactly.
+        """
+        if req._digests is None:
+            bs, prompt = self.block_size, req.prompt
+            buf = np.ascontiguousarray(prompt, np.int32).tobytes()
+            h = hashlib.sha1()
+            full_keys = []
+            for j in range(len(prompt) // bs):
+                h.update(buf[j * bs * 4:(j + 1) * bs * 4])
+                full_keys.append(h.copy().digest())
+            partial_key = None
+            if len(prompt) % bs:
+                h.update(buf[len(full_keys) * bs * 4:])
+                partial_key = h.digest()
+            req._digests = (full_keys, partial_key)
+        return req._digests
+
+    def _ensure_prefill(self, req: Request):
+        """Prefill once per request; stash the result so head-of-line
+        retries (waiting on blocks) and the heavy-channel gate don't pay
+        it twice."""
+        if req._prefill is None:
             t0 = time.time()
-            req.admitted = t0
             logits, state1 = self._prefill(
                 self.params, jnp.asarray(req.prompt[None]))
             logits_row = np.asarray(logits)[0]          # blocks until ready
             self.stats.prefill_s += time.time() - t0
+            req._prefill = (logits_row, state1)
+        return req._prefill
+
+    def _heavy_bytes(self, state1) -> bytes:
+        """Concatenated heavy-channel index bytes of every attention cache
+        in a batch=1 prefill state — the sharing gate's identity. The packed
+        feature blocks are encoded against these sets, so two requests may
+        alias blocks only when every layer's set matches bit-exactly."""
+        from repro.core.cache import SalcaCache
+        parts = []
+        for st in list(state1.period_states) + list(state1.tail_states):
+            if isinstance(st, SalcaCache):
+                parts.append(np.asarray(st.heavy_idx).tobytes())
+        return b"".join(parts)
+
+    def _match_tokens(self, req: Request) -> list[tuple[bytes, int, bytes]]:
+        """Longest-prefix radix match on token ids alone (the cheap gate,
+        run before prefill): full blocks first, then — only when every full
+        block matched — an exact-full-prompt partial block. Returns
+        [(key, block_id, owner_heavy_bytes), ...]."""
+        full_keys, partial_key = self._request_digests(req)
+        out = []
+        for key in full_keys:
+            node = self._prefix_nodes.get(key)
+            if node is None:
+                return out
+            out.append((key,) + node)
+        if partial_key is not None:
+            node = self._prefix_nodes.get(partial_key)
+            if node is not None:
+                out.append((partial_key,) + node)
+        return out
+
+    def _register_blocks(self, req: Request, blocks: list[int],
+                         n_shared: int, heavy: bytes) -> None:
+        """Publish this request's PRIVATE blocks into the radix map so later
+        requests can share them. Shared blocks are already published."""
+        full_keys, partial_key = self._request_digests(req)
+        keys = full_keys + ([partial_key] if partial_key is not None else [])
+        for j in range(n_shared, self._blocks_for(len(req.prompt))):
+            key = keys[j]
+            if key not in self._prefix_nodes and blocks[j] not in self._block_keys:
+                self._prefix_nodes[key] = (blocks[j], heavy)
+                self._block_keys[blocks[j]] = key
+
+    def _release_blocks(self, slot: int) -> None:
+        """Decref every block the slot references; blocks reaching zero
+        return to the free list and leave the radix map. Releasing a slot
+        that holds nothing (double free: overflow finish racing a reset) is
+        a no-op — the free list is never corrupted."""
+        blocks = self._slot_blocks.pop(slot, None)
+        if blocks is None:
+            return
+        for b in blocks:
+            self._refcount[b] -= 1
+            assert self._refcount[b] >= 0, f"block {b} refcount underflow"
+            if self._refcount[b] == 0:
+                self._free_blocks.append(b)
+                key = self._block_keys.pop(b, None)
+                if key is not None:
+                    self._prefix_nodes.pop(key, None)
+        self._slot_pos.pop(slot, None)
+        self._note_block_usage()
+
+    # -- admission -----------------------------------------------------
+
+    def _admit(self) -> None:
+        """FIFO-admit queued requests into free slots: per-request prefill,
+        then write the batch=1 state into the slot's pooled cache region.
+        Paged mode first secures `ceil(prompt/block_size)` physical blocks
+        from the free list — minus any prefix-shared blocks, which are
+        mapped by reference — and waits head-of-line if the pool can't
+        cover the divergent tail, keeping admission FIFO."""
+        while self._queue and self._free:
+            req = self._queue[0]
+            pages = None
+            n_shared = 0
+            # Admission-processing start: `admitted` is stamped at the FIRST
+            # attempt that starts work on this request (the gate prefill may
+            # run on an attempt that then waits for blocks), so queue_wait
+            # and prefill stay disjoint segments of TTFT — nothing is
+            # counted in both.
+            t0 = time.time()
             if self.paged:
-                self._slot_blocks[slot] = blocks
+                plen = len(req.prompt)
+                need_full = self._blocks_for(plen)
+                shared_ids: list[int] = []
+                if self.prefix_sharing:
+                    cand = self._match_tokens(req)
+                    if need_full - len(cand) > len(self._free_blocks):
+                        break              # can't cover even if fully gated in
+                    if req.admitted is None:
+                        req.admitted = t0  # gate prefill follows: work begins
+                    _, state1 = self._ensure_prefill(req)
+                    if req._heavy is None:
+                        req._heavy = self._heavy_bytes(state1)
+                    heavy = req._heavy
+                    # Heavy-channel gate: alias only while the owner's sets
+                    # match; the first mismatch truncates the share.
+                    for _, block, owner_heavy in cand:
+                        if owner_heavy != heavy:
+                            break
+                        shared_ids.append(block)
+                need = need_full - len(shared_ids)
+                if need > len(self._free_blocks):
+                    break                  # wait for blocks to free up
+                n_shared = len(shared_ids)
+                blocks = shared_ids + [self._free_blocks.pop()
+                                       for _ in range(need)]
+                pages = np.full((self.max_blocks,), -1, np.int32)
+                pages[:need_full] = blocks
+            self._queue.popleft()
+            slot = self._free.pop()
+            if req.admitted is None:
+                req.admitted = t0
+            logits_row, state1 = self._ensure_prefill(req)
+            if self.paged:
+                for b in blocks:           # shared: n → n+1; fresh: 0 → 1
+                    self._refcount[b] += 1
+                self._slot_blocks[slot] = list(blocks)
                 self._slot_pos[slot] = len(req.prompt)
                 self._note_block_usage()
                 self._state = self._write(self._state, state1, jnp.int32(slot),
-                                          jnp.asarray(pages))
+                                          jnp.asarray(pages),
+                                          jnp.int32(n_shared))
+                if self.prefix_sharing:
+                    req.shared_blocks = n_shared
+                    self.stats.shared_blocks += n_shared
+                    self.stats.prefix_hits += 1 if n_shared else 0
+                    self._register_blocks(req, blocks, n_shared, req._heavy)
             else:
                 self._state = self._write(self._state, state1, jnp.int32(slot))
+            req._prefill = req._digests = req._heavy = None  # free stashes
             tok = self._sample(req, logits_row)
             req.output.append(tok)
             req.first_token_time = time.time()
@@ -281,6 +472,8 @@ class ServingEngine:
                 self._finish(slot, req, time.time(), "length")
 
     def _finish(self, slot: int, req: Request, now: float, reason: str) -> None:
+        if self._active.get(slot) is not req:
+            return                      # already finished (racing finishers)
         req.done_time = now
         req.stop_reason = reason
         self.stats.completed += 1
@@ -291,33 +484,45 @@ class ServingEngine:
         self._free.append(slot)
         self._free.sort(reverse=True)
         if self.paged:
-            self._free_blocks.extend(self._slot_blocks.pop(slot, ()))
-            self._slot_pos.pop(slot, None)
-            self._note_block_usage()
+            self._release_blocks(slot)  # decref; 0 → free list + radix prune
         self._state = self._reset(self._state, jnp.int32(slot))
 
     def _grow_or_overflow(self) -> None:
-        """Before a tick, every active slot must have capacity for its next
-        KV write. Paged slots whose cursor crossed a block boundary take one
-        block from the free list (`map_block` updates every layer's page
-        table); if none is free — or a dense slot hit max_seq — the request
-        finishes with an ``overflow`` stop reason and the write that could
-        not be stored is counted, instead of `append_token`'s silent clip."""
+        """Before a tick, every active slot must be able to land its next KV
+        write privately. Paged slots whose cursor crossed a block boundary
+        take one block from the free list (`map_block` updates every layer's
+        page table); slots whose cursor points into a SHARED block (refcount
+        > 1) take one block and get a private copy (`cow_block`) — the
+        copy-on-write fault `append_token_paged` would otherwise drop. If no
+        block is free — or a dense slot hit max_seq — the request finishes
+        with an ``overflow`` stop reason and the write that could not be
+        stored is counted, instead of `append_token`'s silent clip."""
         now = time.time()
         for slot, req in list(self._active.items()):
             if self.paged:
                 pos = self._slot_pos[slot]
-                cap = len(self._slot_blocks[slot]) * self.block_size
-                if pos < cap:
-                    continue
+                held = self._slot_blocks[slot]
+                logical = pos // self.block_size
+                if pos < self.max_seq and logical < len(held) \
+                        and self._refcount[held[logical]] <= 1:
+                    continue                       # private capacity in place
                 if pos < self.max_seq and self._free_blocks:
                     blk = self._free_blocks.pop()
-                    logical = pos // self.block_size
-                    self._slot_blocks[slot].append(blk)
+                    self._refcount[blk] += 1       # 0 → 1
+                    if logical == len(held):       # growth: map a fresh block
+                        held.append(blk)
+                        self._state = self._map_block(
+                            self._state, jnp.int32(slot), jnp.int32(logical),
+                            jnp.int32(blk))
+                    else:                          # CoW: privatize the block
+                        old = held[logical]
+                        self._refcount[old] -= 1
+                        held[logical] = blk
+                        self.stats.cow_copies += 1
+                        self._state = self._cow_block(
+                            self._state, jnp.int32(slot), jnp.int32(logical),
+                            jnp.int32(blk))
                     self._note_block_usage()
-                    self._state = self._map_block(
-                        self._state, jnp.int32(slot), jnp.int32(logical),
-                        jnp.int32(blk))
                     continue
             else:
                 if self._slot_written(slot) < self.max_seq:

@@ -116,6 +116,7 @@ def _paged_cache_spec(mesh: Mesh, cache: PagedSalcaCache, dp, seq,
         heavy_idx=fs((dp, None, None), cache.heavy_idx),
         length=fs((dp,), cache.length),
         page_table=fs((dp, None), cache.page_table),
+        refcount=fs((seq,), cache.refcount),
     )
 
 

@@ -23,7 +23,8 @@ from repro.core import (
     SalcaParams, append_token, append_token_paged, empty_paged_cache,
     free_pages, histogram_topk, histogram_topk_blocked, map_block,
     maxpool1d_blocked, maxpool1d_reuse, paged_cache_bytes, prefill_cache,
-    prefill_into_pages, salca_decode_attention, salca_decode_attention_paged)
+    prefill_into_pages, salca_decode_attention, salca_decode_attention_paged,
+    select_sparse_pattern, select_sparse_pattern_blocked, share_blocks)
 from repro.models import get_model
 from repro.runtime.serve import Request, ServingEngine
 
@@ -65,6 +66,48 @@ def test_histogram_topk_blocked_matches_flat(rng):
     bins = jnp.asarray(rng.integers(0, 256, (2, 2, 4, 16)), jnp.uint8)
     flat_sel = histogram_topk(bins.reshape(2, 2, 64), 10, 16)
     blk_sel = histogram_topk_blocked(bins, 10, 16)
+    for a, b in zip(flat_sel, blk_sel):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("k", [0, 64, 200])     # k=0, k == n, k > n
+def test_histogram_topk_blocked_edge_k(rng, k):
+    """Degenerate targets (nothing / everything requested) stay bit-identical
+    between the additive per-block merge and the flat histogram."""
+    bins = jnp.asarray(rng.integers(0, 256, (2, 2, 4, 16)), jnp.uint8)
+    flat_sel = histogram_topk(bins.reshape(2, 2, 64), k, 64)
+    blk_sel = histogram_topk_blocked(bins, k, 64)
+    for a, b in zip(flat_sel, blk_sel):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_histogram_topk_blocked_all_equal_scores(rng):
+    """All-equal scores: the threshold ties on every element; blocked and
+    flat must tie-break identically (they share the compaction)."""
+    bins = jnp.full((2, 2, 4, 16), 113, jnp.uint8)
+    flat_sel = histogram_topk(bins.reshape(2, 2, 64), 10, 16)
+    blk_sel = histogram_topk_blocked(bins, 10, 16)
+    for a, b in zip(flat_sel, blk_sel):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("k,k_cap", [(0, 16), (64, 64), (200, 64)])
+def test_select_sparse_pattern_blocked_edge_k(rng, k, k_cap):
+    scores = jnp.asarray(rng.normal(size=(2, 2, 64)), jnp.float32)
+    valid = jnp.asarray(rng.integers(0, 2, (2, 1, 64)), bool)
+    p = SalcaParams(feature_sparsity=0.5, k=k, k_cap=k_cap, pool_window=7)
+    flat_sel = select_sparse_pattern(scores, p, valid)
+    blk_sel = select_sparse_pattern_blocked(scores, p, valid, block_size=16)
+    for a, b in zip(flat_sel, blk_sel):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_select_sparse_pattern_blocked_all_equal(rng):
+    scores = jnp.full((2, 2, 64), 0.25, jnp.float32)
+    valid = jnp.ones((2, 1, 64), bool)
+    p = SalcaParams(feature_sparsity=0.5, k=10, k_cap=16, pool_window=7)
+    flat_sel = select_sparse_pattern(scores, p, valid)
+    blk_sel = select_sparse_pattern_blocked(scores, p, valid, block_size=16)
     for a, b in zip(flat_sel, blk_sel):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -155,6 +198,43 @@ def test_paged_attention_parity_scrambled_pages(rng):
     np.testing.assert_array_equal(np.asarray(sel_p.indices[1]),
                                   np.asarray(sel_d.indices[0]))
     np.testing.assert_allclose(np.asarray(o_paged[1]), np.asarray(o_dense[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_shared_prefix_block_selection_matches_flat(rng):
+    """A prefix block referenced by multiple slots: blocked selection and
+    paged attention for BOTH the sharer and the donor are bit-identical /
+    fp32-close to their flat single-owner forms — sharing is invisible to
+    the read path."""
+    t = 40
+    k = jnp.asarray(rng.normal(size=(1, t, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, t, 2, 32)), jnp.float32)
+    dense = prefill_cache(k, v, max_seq=MAX_SEQ, params=PARAMS)
+    pool = empty_paged_cache(20, BS, 3, MB, kv_heads=2, head_dim=32, r=16)
+    pages = np.full(MB, -1, np.int32)
+    pages[:3] = [13, 2, 7]
+    pool = prefill_into_pages(pool, dense, 1, jnp.asarray(pages))
+    pool = share_blocks(pool, 1, 2, 0)      # slot 0 aliases blocks 13 and 2
+    assert int(pool.refcount[13]) == 2 and int(pool.refcount[2]) == 2
+    # Flat reference for the sharer: the first 32 tokens, encoded with the
+    # donor's heavy-channel set (what the shared feature blocks hold).
+    ref = prefill_cache(k[:, :32], v[:, :32], max_seq=MAX_SEQ, params=PARAMS,
+                        heavy_idx=dense.heavy_idx)
+    q = jnp.asarray(rng.normal(size=(1, 4, 32)), jnp.float32)
+    q3 = jnp.zeros((3, 4, 32), jnp.float32).at[0].set(q[0]).at[1].set(q[0])
+    o_flat, sel_f = salca_decode_attention(q, ref, PARAMS,
+                                           return_selection=True)
+    o_paged, sel_p = salca_decode_attention_paged(q3, pool, PARAMS,
+                                                  return_selection=True)
+    np.testing.assert_array_equal(np.asarray(sel_p.indices[0]),
+                                  np.asarray(sel_f.indices[0]))
+    np.testing.assert_allclose(np.asarray(o_paged[0]), np.asarray(o_flat[0]),
+                               rtol=1e-5, atol=1e-6)
+    o_d, sel_d = salca_decode_attention(q, dense, PARAMS,
+                                        return_selection=True)
+    np.testing.assert_array_equal(np.asarray(sel_p.indices[1]),
+                                  np.asarray(sel_d.indices[0]))
+    np.testing.assert_allclose(np.asarray(o_paged[1]), np.asarray(o_d[0]),
                                rtol=1e-5, atol=1e-6)
 
 
