@@ -20,7 +20,144 @@ from repro.kernels.flash_decode.ref import sparse_flash_decode_ref
 from repro.kernels.score_est.ref import score_estimate_ref
 
 
-def run(n: int = 32768, bh: int = 8, r: int = 64, k: int = 1024) -> list[str]:
+def _paged_decode_rows(rng, n: int, k: int, pool_factor: int = 64,
+                       gate: bool = False) -> list[str]:
+    """Paged decode tick: PR 3 pool-wide gather vs the paged-native path.
+
+    One slot holds ``n`` active tokens (logical capacity 2n) inside a pool
+    ``pool_factor``·n tokens large — the serving regime, where the shared
+    pool backs many other resident requests and dwarfs any one slot's
+    context. Three full ticks (scoring + selection + exact attention):
+
+    * ``pr3_gather``  — the shipped PR 3 path, reconstructed inline: the
+      exact-attention fetch transposes all four (P·BS, KV, ·) pool buffers
+      every tick, so its cost grows with the POOL, not the request;
+    * ``gather``      — the cleaned-up fallback (single advanced-index
+      row gather, no pool transpose — O(selected) rows moved);
+    * ``fused``       — the paged-native path (physical-block streaming on
+      TPU; blocked scoring + the row gather on CPU).
+
+    The derived column is the bytes-moved model for the exact-attention
+    fetch: pool bytes touched (pr3) vs selected-block bytes (fused) — the
+    structural claim; on TPU the transposes are physical data movement. On
+    CPU, XLA folds the pr3 transposes into the gather, so tick wall-clock
+    mostly reflects how well each whole graph fuses, not bytes. ``gate=True``
+    (the --smoke CI run) hard-fails when the fused tick exceeds the pr3 tick
+    by >50% at the smoke shapes — a regression tripwire for the fused path
+    (it caught two real 6–20× blowups during development), with headroom for
+    XLA fusion drift and scheduler noise; the non-smoke run just reports.
+    """
+    from repro.core import (SalcaParams, empty_paged_cache, prefill_cache,
+                            prefill_into_pages)
+    from repro.core.attention import (exact_sparse_attention,
+                                      salca_decode_attention_paged)
+    from repro.core.cache import paged_logical_features, resolve_logical_rows
+    from repro.core.selection import (estimate_relevance,
+                                      estimate_relevance_paged,
+                                      select_sparse_pattern_blocked)
+    from repro.kernels.flash_decode.ops import _selected_block_plan
+
+    bsz, kv, hd = 64, 2, 128
+    params = SalcaParams(k=k, k_cap=max(((int(k * 1.25) + 127) // 128) * 128, 128),
+                         pool_window=7)
+    num_blocks = pool_factor * n // bsz
+    mb_slot = 2 * n // bsz                 # per-slot logical capacity: 2n
+    kk = jnp.asarray(rng.normal(size=(1, n, kv, hd)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(1, n, kv, hd)), jnp.float32)
+    dense = prefill_cache(kk, vv, max_seq=mb_slot * bsz, params=params)
+    pool = empty_paged_cache(num_blocks, bsz, 1, mb_slot, kv, hd,
+                             params.r(hd))
+    need = n // bsz
+    pages = np.full(mb_slot, -1, np.int32)
+    pages[:need] = rng.choice(num_blocks, need, replace=False)
+    pool = prefill_into_pages(pool, dense, 0, jnp.asarray(pages))
+    q = jnp.asarray(rng.normal(size=(1, 2 * kv, hd)), jnp.float32)
+
+    def pr3_gather(pool, sel):  # the four pool-wide transposes, verbatim
+        phys = resolve_logical_rows(pool, sel.indices)
+
+        def take_codes(codes):
+            flat = codes.reshape((-1,) + codes.shape[2:])
+            f = flat.transpose(1, 0, 2)
+            return jnp.take_along_axis(f[None], phys[..., None], axis=2)
+
+        def take_scale(scale):
+            flat = scale.reshape((-1,) + scale.shape[2:])
+            f = flat.transpose(1, 0)
+            return jnp.take_along_axis(f[None], phys, axis=2)
+
+        return (take_codes(pool.k_codes), take_scale(pool.k_scale),
+                take_codes(pool.v_codes), take_scale(pool.v_scale))
+
+    def pr3_tick(q, pool):
+        b, h, _ = q.shape
+        groups = h // pool.num_kv_heads
+        r_ = pool.heavy_idx.shape[-1]
+        idx = jnp.broadcast_to(pool.heavy_idx[:, :, None, :],
+                               (b, pool.num_kv_heads, groups, r_))
+        qg = q.reshape(b, pool.num_kv_heads, groups, hd).astype(jnp.float32)
+        q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r_)
+        fw, fs, fz = paged_logical_features(pool)
+        scores = estimate_relevance(q_feat, fw, fs, fz, groups)
+        sel = select_sparse_pattern_blocked(scores, params,
+                                            pool.valid_mask()[:, None, :],
+                                            pool.block_size)
+        kc, ks, vc, vs = pr3_gather(pool, sel)
+        return exact_sparse_attention(q, kc, ks, vc, vs, sel.mask)
+
+    ticks = {
+        "paged_decode_pr3_gather": jax.jit(pr3_tick),
+        "paged_decode_gather": jax.jit(
+            lambda q, p: salca_decode_attention_paged(q, p, params, fused=False)),
+        "paged_decode_fused": jax.jit(
+            lambda q, p: salca_decode_attention_paged(q, p, params, fused=True)),
+    }
+    # Bytes-moved model for the exact-attention fetch (codes + scales, K+V):
+    pool_bytes = (pool.k_codes.size + pool.v_codes.size
+                  + 4 * pool.k_scale.size + 4 * pool.v_scale.size)
+
+    @jax.jit
+    def selection_only(q, pool):  # scoring + selection, no attention
+        b, h, _ = q.shape
+        groups = h // pool.num_kv_heads
+        r_ = pool.heavy_idx.shape[-1]
+        idx = jnp.broadcast_to(pool.heavy_idx[:, :, None, :],
+                               (b, pool.num_kv_heads, groups, r_))
+        qg = q.reshape(b, pool.num_kv_heads, groups, hd).astype(jnp.float32)
+        q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r_)
+        scores = estimate_relevance_paged(q_feat, pool, groups)
+        return select_sparse_pattern_blocked(scores, params,
+                                             pool.valid_mask()[:, None, :],
+                                             pool.block_size)
+
+    sel = selection_only(q, pool)
+    _, counts, _ = _selected_block_plan(pool, sel)
+    sel_blocks = int(np.asarray(counts).sum())
+    sel_bytes = sel_blocks * bsz * (2 * hd + 8)    # per-head block K+V bytes
+    model = {"paged_decode_pr3_gather": f"{pool_bytes/1e6:.1f}MB_pool_fetch",
+             "paged_decode_gather": "O(selected)_row_fetch",
+             "paged_decode_fused":
+                 f"{sel_bytes/1e6:.2f}MB_selected({pool_bytes/max(sel_bytes,1):.0f}x_less)"}
+    rows, us = [], {}
+    for name, fn in ticks.items():
+        us[name] = time_call(fn, q, pool)
+        rows.append(f"kernel_bench,{name},{us[name]:.1f},{model[name]}")
+    # Ratio gate with an absolute-delta floor: a loaded CI runner can stretch
+    # a ~2ms median by tens of percent, but a real fused-path regression (the
+    # 6–20× class this tripwire caught in development) blows past both.
+    if gate and (us["paged_decode_fused"] > 1.5 * us["paged_decode_pr3_gather"]
+                 and us["paged_decode_fused"]
+                 > us["paged_decode_pr3_gather"] + 2000):
+        raise RuntimeError(
+            f"paged-native decode tick ({us['paged_decode_fused']:.0f}us) is "
+            f"slower than the pool-wide gather tick "
+            f"({us['paged_decode_pr3_gather']:.0f}us) at pool="
+            f"{num_blocks * bsz} tokens — the fusion regressed")
+    return rows
+
+
+def run(n: int = 32768, bh: int = 8, r: int = 64, k: int = 1024,
+        paged_gate: bool = False) -> list[str]:
     rng = np.random.default_rng(0)
     rows = ["kernel_bench,name,us_per_call,derived"]
 
@@ -69,6 +206,11 @@ def run(n: int = 32768, bh: int = 8, r: int = 64, k: int = 1024) -> list[str]:
     us_d = time_call(f_dense, q, cache)
     rows.append(f"kernel_bench,salca_decode_e2e,{us_s:.1f},{us_d/us_s:.2f}x_vs_dense")
     rows.append(f"kernel_bench,dense_decode_e2e,{us_d:.1f},1.00x")
+
+    # paged decode tick: PR 3 pool-wide gather vs the paged-native fused path
+    # (paged_gate=True — the --smoke CI run — hard-fails if the fused tick
+    # regresses past the pool-wide gather tick)
+    rows.extend(_paged_decode_rows(rng, n=min(n, 4096), k=k, gate=paged_gate))
     return rows
 
 

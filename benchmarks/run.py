@@ -24,7 +24,7 @@ SMOKE_KWARGS = {
     "table7_quant": {"T": 256},
     "fig9_throughput": {"n": 4096},
     "serving_throughput": {"smoke": True},
-    "kernel_bench": {"n": 2048, "bh": 2, "k": 128},
+    "kernel_bench": {"n": 2048, "bh": 2, "k": 128, "paged_gate": True},
 }
 
 

@@ -24,6 +24,15 @@ Three sweeps:
    static weight-derived heavy-channel set (`salca_static_channels`), the
    request-independent mode that makes feature blocks shareable across
    divergent tails.
+
+4. **Fused-decode sweep** — the same mixed workload through a paged engine
+   with the page-table walk fused into the decode kernels
+   (``fused_decode=True``) vs the PR 3 gather path (``False``). Greedy
+   outputs must be bit-identical (the sweep RAISES on mismatch); the
+   ms/tick rows record the decode-tick cost of each data path. On TPU the
+   fused tick's pool traffic is O(active + selected) instead of O(pool);
+   on CPU the two land within noise of each other (XLA folds the gather
+   path's transposes), so the timing rows are informational there.
 """
 
 from __future__ import annotations
@@ -204,6 +213,43 @@ def _shared_sweep(cfg, params, smoke: bool):
             f"shared-prefix admission gain {gain:.2f} < 2.0 acceptance bar")
 
 
+def _fused_sweep(cfg, params, smoke: bool):
+    from repro.runtime.serve import ServingEngine
+
+    dense_slots = 2 if smoke else 4
+    budget_tokens = dense_slots * MAX_SEQ
+    slots = 6 if smoke else 12
+    num_blocks = budget_tokens // BLOCK_SIZE
+    yield "serving_fused,mode,ticks,decode_ms_per_tick,decode_ms_per_token"
+    results = {}
+    for mode, fused in (("gather", False), ("fused", True)):
+        eng = ServingEngine(cfg, params, max_seq=MAX_SEQ, slots=slots,
+                            paged=True, block_size=BLOCK_SIZE,
+                            num_blocks=num_blocks, fused_decode=fused)
+        rng = np.random.default_rng(7)
+        warm = _mixed_workload(cfg, rng, smoke)      # compiles prefill+decode
+        for r in warm:
+            eng.submit(r)
+        eng.run()
+        s0_decode, s0_ticks, s0_steps = (eng.stats.decode_s, eng.stats.ticks,
+                                         eng.stats.decode_steps)
+        rng = np.random.default_rng(11)
+        reqs = _mixed_workload(cfg, rng, smoke)      # measured: steady-state
+        for r in reqs:
+            eng.submit(r)
+        st = eng.run()
+        ticks = st.ticks - s0_ticks
+        ms_tick = 1e3 * (st.decode_s - s0_decode) / max(ticks, 1)
+        ms_tok = 1e3 * (st.decode_s - s0_decode) / max(st.decode_steps - s0_steps, 1)
+        results[mode] = reqs
+        yield f"serving_fused,{mode},{ticks},{ms_tick:.3f},{ms_tok:.3f}"
+    match = all(a.output == b.output
+                for a, b in zip(results["gather"], results["fused"]))
+    yield f"serving_fused_parity,fused_vs_gather_outputs,{'ok' if match else 'MISMATCH'}"
+    if not match:
+        raise RuntimeError("fused paged decode broke greedy-output parity")
+
+
 def run(smoke: bool = False):
     from repro.configs import get_config
     from repro.models import get_model
@@ -216,6 +262,7 @@ def run(smoke: bool = False):
     yield from _slots_sweep(cfg, params, rng, smoke)
     yield from _mixed_sweep(cfg, params, smoke)
     yield from _shared_sweep(cfg, params, smoke)
+    yield from _fused_sweep(cfg, params, smoke)
 
 
 if __name__ == "__main__":

@@ -7,8 +7,8 @@ Public API:
 """
 
 from repro.core.selection import (
-    SalcaParams, salca_select, select_sparse_pattern,
-    select_sparse_pattern_blocked)
+    SalcaParams, estimate_relevance, estimate_relevance_paged, salca_select,
+    select_sparse_pattern, select_sparse_pattern_blocked)
 from repro.core.cache import (
     SalcaCache, empty_cache, prefill_cache, append_token, append_token_masked,
     cache_bytes, write_prefill_into_slot, reset_slot,
@@ -52,6 +52,7 @@ __all__ = [
     "append_token_paged", "map_block", "free_pages", "gather_selected_paged",
     "paged_cache_bytes", "share_blocks", "cow_block",
     "salca_select", "select_sparse_pattern", "select_sparse_pattern_blocked",
+    "estimate_relevance", "estimate_relevance_paged",
     "salca_decode_attention", "salca_decode_attention_paged",
     "dense_decode_attention", "dense_decode_from_cache", "dense_decode_from_paged",
     "exact_sparse_attention", "gather_selected", "sp_salca_decode",

@@ -17,7 +17,8 @@ from repro.core.cache import (
     paged_logical_kv)
 from repro.core.histogram_topk import Selection
 from repro.core.selection import (
-    SalcaParams, estimate_relevance, salca_select, select_sparse_pattern_blocked)
+    SalcaParams, estimate_relevance, estimate_relevance_paged, salca_select,
+    select_sparse_pattern_blocked)
 
 NEG_INF = -1e30
 
@@ -99,15 +100,34 @@ def salca_decode_attention(q: jax.Array, cache: SalcaCache, params: SalcaParams,
 
 def salca_decode_attention_paged(q: jax.Array, pool: PagedSalcaCache,
                                  params: SalcaParams,
-                                 return_selection: bool = False):
+                                 return_selection: bool = False,
+                                 fused: bool | None = None,
+                                 impl: str | None = None,
+                                 interpret: bool | None = None):
     """Full Salca decode attention over a paged block pool.
 
-    Identical math to `salca_decode_attention` on the contiguous cache: the
-    feature stream is gathered into logical (page) order, relevance scoring
-    and the additive histogram run block-decomposed, and the exact-attention
-    gather resolves the selection's logical indices through the page table
-    before fetching K/V rows from the shared pool.
+    Identical math to `salca_decode_attention` on the contiguous cache, in
+    one of two data paths:
+
+    * **fused** (default, `flags.PERF.paged_fused_decode`): the page-table
+      walk is fused into the kernels — relevance scoring streams *physical*
+      feature blocks (`selection.estimate_relevance_paged`) and exact
+      attention fetches only the physical blocks the selection touches
+      (`kernels.flash_decode.sparse_flash_decode_paged`). No logical copy of
+      the pool and no pool-wide transpose exist in the tick; per-tick HBM
+      traffic is O(active tokens + selected blocks) instead of O(pool).
+    * **unfused** (the PR 3 path, kept as the baseline/fallback): the
+      feature stream is gathered into logical (page) order and the
+      exact-attention gather fetches each selected row individually.
+
+    Both paths share the query quantization, the blocked selection (additive
+    per-block histograms), and the page-table clamping rules, so the
+    selection — and hence the attended token set — is bit-identical between
+    them; outputs differ only by float summation order.
     """
+    from repro.flags import PERF
+    if fused is None:
+        fused = PERF.paged_fused_decode
     b, h, hd = q.shape
     kv = pool.num_kv_heads
     groups = h // kv
@@ -115,13 +135,22 @@ def salca_decode_attention_paged(q: jax.Array, pool: PagedSalcaCache,
     idx = jnp.broadcast_to(pool.heavy_idx[:, :, None, :], (b, kv, groups, r))
     qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
     q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r)
-    fw, fs, fz = paged_logical_features(pool)
-    scores = estimate_relevance(q_feat, fw, fs, fz, groups)
+    if fused:
+        scores = estimate_relevance_paged(q_feat, pool, groups, impl=impl,
+                                          interpret=interpret)
+    else:
+        fw, fs, fz = paged_logical_features(pool)
+        scores = estimate_relevance(q_feat, fw, fs, fz, groups)
     sel = select_sparse_pattern_blocked(scores, params,
                                         pool.valid_mask()[:, None, :],
                                         pool.block_size)
-    kc, ks, vc, vs = gather_selected_paged(pool, sel)
-    out = exact_sparse_attention(q, kc, ks, vc, vs, sel.mask)
+    if fused:
+        from repro.kernels.flash_decode.ops import sparse_flash_decode_paged
+        out = sparse_flash_decode_paged(q, pool, sel, impl=impl,
+                                        interpret=interpret)
+    else:
+        kc, ks, vc, vs = gather_selected_paged(pool, sel)
+        out = exact_sparse_attention(q, kc, ks, vc, vs, sel.mask)
     if return_selection:
         return out, sel
     return out

@@ -402,13 +402,13 @@ def append_token_paged(pool: PagedSalcaCache, k: jax.Array,
     page = pool.page_table[sidx, blk]                          # (S,)
     rc = pool.refcount[jnp.where(page >= 0, page, 0)]          # (S,)
     ok = (cur >= 0) & (cur < pool.max_seq) & (page >= 0) & (rc <= 1)
-    phys = jnp.where(ok, page * bs + cur % bs, p * bs)         # OOB → drop
+    pg = jnp.where(ok, page, p)                                # OOB → drop
+    off = cur % bs
     k8, v8, words, fs, fz = _encode_tokens(k[:, None], v[:, None], pool.heavy_idx)
 
-    def upd(buf, val):  # scatter each slot's row into the flat (P·BS, ·) pool
-        flat = buf.reshape((p * bs,) + buf.shape[2:])
-        flat = flat.at[phys].set(val[:, 0].astype(buf.dtype), mode="drop")
-        return flat.reshape(buf.shape)
+    def upd(buf, val):  # scatter each slot's row at (block, offset) directly —
+        # no flat (P·BS, ·) reshape of the pool enters the decode tick
+        return buf.at[pg, off].set(val[:, 0].astype(buf.dtype), mode="drop")
 
     return pool._replace(
         k_codes=upd(pool.k_codes, k8.codes), k_scale=upd(pool.k_scale, k8.scale),
@@ -535,17 +535,30 @@ def paged_logical_kv(pool: PagedSalcaCache):
     return k, v
 
 
-def resolve_logical_rows(pool: PagedSalcaCache, idx: jax.Array) -> jax.Array:
-    """Resolve logical token indices (S, ..., ) to physical rows in the flat
-    (P·BS) pool through the page table. Unmapped resolutions clamp to row 0
-    (callers mask them)."""
+def _resolve_pages(pool: PagedSalcaCache, idx: jax.Array):
+    """Walk the page table for logical token indices (S, ...).
+
+    Returns (page, offset, mapped): the physical block id, the within-block
+    row, and whether the entry was mapped. Unmapped resolutions clamp to
+    (block 0, offset 0) — callers mask them. The single definition of the
+    logical→physical rule for every gather path (and the local-resolution
+    primitive the sharded-pool ROADMAP item builds on)."""
     bs = pool.block_size
     blk = jnp.clip(idx // bs, 0, pool.max_blocks - 1)
     # page[s, ...] = page_table[s, blk[s, ...]]
     pt = pool.page_table.reshape(
         (pool.page_table.shape[0],) + (1,) * (idx.ndim - 2) + (pool.max_blocks,))
     page = jnp.take_along_axis(pt, blk, axis=-1)
-    return jnp.where(page >= 0, page * bs + idx % bs, 0)
+    mapped = page >= 0
+    return (jnp.where(mapped, page, 0), jnp.where(mapped, idx % bs, 0), mapped)
+
+
+def resolve_logical_rows(pool: PagedSalcaCache, idx: jax.Array) -> jax.Array:
+    """Resolve logical token indices (S, ..., ) to physical rows in the flat
+    (P·BS) pool through the page table. Unmapped resolutions clamp to row 0
+    (callers mask them)."""
+    page, off, _ = _resolve_pages(pool, idx)
+    return page * pool.block_size + off
 
 
 def gather_selected_paged(pool: PagedSalcaCache, sel) -> tuple:
@@ -554,21 +567,19 @@ def gather_selected_paged(pool: PagedSalcaCache, sel) -> tuple:
 
     sel.indices: (S, KV, C) logical. Returns int8 k/v codes (S, KV, C, HD)
     and scales (S, KV, C) — the same contract as `attention.gather_selected`.
+
+    The page-table resolution is computed ONCE and each field is fetched with
+    a single (block, offset, kv-head) advanced-index gather straight off the
+    `(P, BS, KV, ·)` pool — no `(P·BS, KV, ·)` flattening and no pool-wide
+    transpose ever materializes (the PR 3 form transposed all four pool
+    buffers every decode tick). Unmapped resolutions clamp to (block 0,
+    offset 0); callers mask them.
     """
-    phys = resolve_logical_rows(pool, sel.indices)              # (S, KV, C)
+    pg, off, _ = _resolve_pages(pool, sel.indices)              # (S, KV, C)
+    kvb = jnp.arange(pool.num_kv_heads)[None, :, None]          # (1, KV, 1)
 
-    def take_codes(codes):  # (P, BS, KV, HD) → (S, KV, C, HD)
-        flat = codes.reshape((-1,) + codes.shape[2:])           # (P·BS, KV, HD)
-        f = flat.transpose(1, 0, 2)                             # (KV, P·BS, HD)
-        return jnp.take_along_axis(f[None], phys[..., None], axis=2)
-
-    def take_scale(scale):  # (P, BS, KV) → (S, KV, C)
-        flat = scale.reshape((-1,) + scale.shape[2:])           # (P·BS, KV)
-        f = flat.transpose(1, 0)                                # (KV, P·BS)
-        return jnp.take_along_axis(f[None], phys, axis=2)
-
-    return (take_codes(pool.k_codes), take_scale(pool.k_scale),
-            take_codes(pool.v_codes), take_scale(pool.v_scale))
+    return (pool.k_codes[pg, off, kvb], pool.k_scale[pg, off, kvb],
+            pool.v_codes[pg, off, kvb], pool.v_scale[pg, off, kvb])
 
 
 def paged_cache_bytes(pool: PagedSalcaCache) -> dict[str, int]:

@@ -135,6 +135,34 @@ def estimate_scores(q3: SymQuant, k2: AsymQuant) -> jax.Array:
     return s_q * (a * int_dot.astype(jnp.float32) + z * qsum[..., None].astype(jnp.float32))
 
 
+def dequant_score_chain(q_scale: jax.Array, a: jax.Array, z: jax.Array,
+                        int_dot: jax.Array, q_sums: jax.Array,
+                        bf16: bool) -> jax.Array:
+    """Shared phase-1 dequant chain: ``s_q · (a · Σq̂ĉ + z · Σq̂)``.
+
+    All relevance-score producers (flat XLA, paged XLA, paged Pallas kernel)
+    run THIS function so their scores are bit-identical by construction.
+    When ``bf16`` (§Perf it-6) the chain emulates bf16 arithmetic in f32 via
+    ``lax.reduce_precision`` after every op: a plain bf16 dtype chain rounds
+    per-op in eager mode but XLA fusion may elide the intermediate rounding,
+    making numerics depend on the surrounding graph — reduce_precision is
+    never elided, so the rounding points are pinned no matter how each
+    caller's graph compiles. Operands must be pre-broadcast; returns f32.
+    """
+    d = int_dot.astype(jnp.float32)
+    qm = q_sums.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    qs = q_scale.astype(jnp.float32)
+    if not bf16:
+        return qs * (a * d + z * qm)
+
+    def rp(t):
+        return jax.lax.reduce_precision(t, exponent_bits=8, mantissa_bits=7)
+
+    return rp(rp(qs) * rp(rp(rp(a) * rp(d)) + rp(rp(z) * rp(qm))))
+
+
 def quantize_scores_uint8(scores: jax.Array, valid_mask: jax.Array | None = None,
                           axis: int = -1) -> jax.Array:
     """Map FP scores to INT8 bins [0,255] per row (paper §3.2 phase 1).

@@ -52,6 +52,30 @@ class SalcaParams:
         return SalcaParams(k=min(k, n), k_cap=min(k_cap, n), **kw)
 
 
+def _quantized_query_groups(q_feat: jax.Array, kv: int):
+    """Shared phase-1 prologue: group-fold (§Perf it-8) + 3-bit quantization.
+
+    q_feat: (B, H, r) query heavy-channel features. Returns
+    (codes (B, KV, G', r) int8, scale (B, KV, G') f32, code-sums (B, KV, G')
+    int32) where G' = 1 when the group-sum fold applies, else H // KV. Both
+    the flat and the paged scoring paths run through here so their quantized
+    operands — and hence their scores — are bit-identical by construction.
+    """
+    from repro.flags import PERF
+    b, h, r = q_feat.shape
+    groups = h // kv
+    if PERF.group_sum_query and groups > 1:
+        # §Perf it-8: Σ_g (q_g·k) == (Σ_g q_g)·k exactly, so sum the group's
+        # queries in fp BEFORE quantization — one 3-bit dot per kv head.
+        q_feat = jnp.sum(q_feat.reshape(b, kv, groups, r), axis=2)
+        groups = 1
+    q3 = qz.quantize_query_features(q_feat)
+    qc = q3.codes.reshape(b, kv, groups, r)
+    qs = q3.scale.reshape(b, kv, groups)
+    qsum = jnp.sum(qc, axis=-1, dtype=jnp.int32)
+    return qc, qs, qsum
+
+
 def estimate_relevance(q_feat: jax.Array, feat_words: jax.Array,
                        feat_scale: jax.Array, feat_zero: jax.Array,
                        groups: int) -> jax.Array:
@@ -66,32 +90,50 @@ def estimate_relevance(q_feat: jax.Array, feat_words: jax.Array,
     b, h, r = q_feat.shape
     kv = feat_words.shape[2]
     assert h == kv * groups
-    if PERF.group_sum_query and groups > 1:
-        # §Perf it-8: Σ_g (q_g·k) == (Σ_g q_g)·k exactly, so sum the group's
-        # queries in fp BEFORE quantization — one 3-bit dot per kv head.
-        q_feat = jnp.sum(q_feat.reshape(b, kv, groups, r), axis=2)
-        groups = 1
-        h = kv
-    q3 = qz.quantize_query_features(q_feat)                    # codes (B,H,r)
+    qc, qs, qsum = _quantized_query_groups(q_feat, kv)         # (B,KV,G',·)
     k_codes = qz.unpack2bit(feat_words, r)                     # (B,N,KV,r) int8
-    # Group the query heads with their kv head: (B, KV, G, r)
-    qc = q3.codes.reshape(b, kv, groups, r)
-    qs = q3.scale.reshape(b, kv, groups)
     # int8 operands, s32 accumulation (§Perf it-5): keeps the widest streamed
     # tensor at 1 byte/code — a 4× HBM-bytes cut vs materializing int32 codes
     # (on TPU this is also the native MXU int8 path).
     int_dot = jnp.einsum("bkgr,bnkr->bkgn", qc, k_codes,
                          preferred_element_type=jnp.int32)     # (B,KV,G,N)
-    qsum = jnp.sum(qc, axis=-1, dtype=jnp.int32)               # (B,KV,G)
     # §Perf it-6: the dequantized scores only feed an 8-bit binning, so the
-    # elementwise chain runs in bf16 (halves every (B,KV,N) temp's bytes);
-    # baseline keeps f32.
-    acc_dt = jnp.bfloat16 if PERF.bf16_collectives else jnp.float32
-    a = feat_scale.astype(acc_dt).transpose(0, 2, 1)[:, :, None, :]
-    z = feat_zero.astype(acc_dt).transpose(0, 2, 1)[:, :, None, :]
-    scores = qs.astype(acc_dt)[..., None] * (
-        a * int_dot.astype(acc_dt) + z * qsum[..., None].astype(acc_dt))
+    # elementwise chain runs at bf16 precision (emulated in f32 with pinned
+    # per-op rounding — see `quantization.dequant_score_chain` — so every
+    # scoring path lands on bit-identical values); baseline keeps f32.
+    a = feat_scale.transpose(0, 2, 1)[:, :, None, :]
+    z = feat_zero.transpose(0, 2, 1)[:, :, None, :]
+    scores = qz.dequant_score_chain(qs[..., None], a, z, int_dot,
+                                    qsum[..., None], PERF.bf16_collectives)
     return jnp.sum(scores, axis=2, dtype=jnp.float32)          # (B,KV,N)
+
+
+def estimate_relevance_paged(q_feat: jax.Array, pool, groups: int,
+                             impl: str | None = None,
+                             interpret: bool | None = None) -> jax.Array:
+    """Phase 1 over a paged block pool: per-PHYSICAL-block streaming.
+
+    Resolves the feature stream through the slot's page table block by block
+    (the Pallas kernel does it with a scalar-prefetched `index_map`, the XLA
+    reference with per-block gathers) — the logical-order copy of the
+    feature stream that `cache.paged_logical_features` builds never exists.
+    Unmapped pages clamp to block 0 exactly like the gather path, so the
+    scores — and everything downstream of them — are bit-identical to
+    `estimate_relevance` over the gathered logical view.
+
+    q_feat: (S, H, r); pool: `core.cache.PagedSalcaCache`.
+    Returns (S, KV, L) f32 group-summed scores in logical order.
+    """
+    from repro.flags import PERF
+    from repro.kernels.score_est.ops import paged_score_estimate
+    s, h, r = q_feat.shape
+    kv = pool.num_kv_heads
+    assert h == kv * groups
+    qc, qs, qsum = _quantized_query_groups(q_feat, kv)
+    return paged_score_estimate(
+        qc, qs, qsum, pool.feat_words, pool.feat_scale, pool.feat_zero,
+        pool.clamped_pages(), bf16=PERF.bf16_collectives,
+        impl=impl, interpret=interpret)
 
 
 def select_sparse_pattern(scores: jax.Array, params: SalcaParams,

@@ -41,6 +41,13 @@ class PerfFlags:
     # gemma3's 40 local layers were dequantizing the whole 32k cache per
     # step for a 1024-token window.
     ring_local_cache: bool = True
+    # it-11 (paged decode, memory term): fuse the page-table walk into the
+    # decode kernels — relevance scoring streams *physical* feature blocks
+    # through a scalar-prefetched page table and exact attention fetches only
+    # the physical blocks the selection touches, instead of transposing the
+    # whole block pool and re-materializing the logical feature stream every
+    # tick (baseline reproduces the PR 3 gather-everything path).
+    paged_fused_decode: bool = True
 
     def baseline(self) -> "PerfFlags":
         return replace(self, **{f.name: False for f in fields(self)})

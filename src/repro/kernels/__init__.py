@@ -3,21 +3,33 @@
 Each kernel ships as a subpackage: ``kernel.py`` (pl.pallas_call + explicit
 BlockSpec VMEM tiling), ``ops.py`` (jit'd dispatcher), ``ref.py`` (pure-jnp
 oracle). All validate on CPU via interpret=True; BlockSpecs target TPU v5e.
+
+The ``*_paged`` variants consume the paged block pool directly: a scalar-
+prefetched page table (or selected-block list) drives the BlockSpec
+index_map so each grid step streams one PHYSICAL block HBM→VMEM — no
+logical-order copy of the pool is ever materialized.
 """
 
-from repro.kernels.score_est import score_estimate, score_estimate_ref
+from repro.kernels.score_est import (paged_score_estimate,
+                                     paged_score_estimate_ref, score_estimate,
+                                     score_estimate_ref)
 from repro.kernels.hist_topk import hist_threshold, hist_threshold_ref
 from repro.kernels.maxpool import maxpool_int8, maxpool_int8_ref
-from repro.kernels.flash_decode import sparse_flash_decode, sparse_flash_decode_ref
+from repro.kernels.flash_decode import (sparse_flash_decode,
+                                        sparse_flash_decode_paged,
+                                        sparse_flash_decode_paged_ref,
+                                        sparse_flash_decode_ref)
 from repro.kernels.flash_prefill import flash_attention, flash_attention_ref
 from repro.kernels.selection_fused import (fused_bin_pool_threshold,
                                            fused_bin_pool_threshold_ref)
 
 __all__ = [
     "score_estimate", "score_estimate_ref",
+    "paged_score_estimate", "paged_score_estimate_ref",
     "hist_threshold", "hist_threshold_ref",
     "maxpool_int8", "maxpool_int8_ref",
     "sparse_flash_decode", "sparse_flash_decode_ref",
+    "sparse_flash_decode_paged", "sparse_flash_decode_paged_ref",
     "flash_attention", "flash_attention_ref",
     "fused_bin_pool_threshold", "fused_bin_pool_threshold_ref",
 ]

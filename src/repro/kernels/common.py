@@ -25,3 +25,15 @@ def interpret_default() -> bool:
 
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def paged_impl_default() -> str:
+    """Default implementation for the paged-native decode kernels.
+
+    On TPU the Pallas kernels own the hot path (the scalar-prefetched page
+    table drives the HBM→VMEM stream). Without a TPU the XLA reference —
+    which fetches the same per-block operands with plain gathers — is both
+    the correctness oracle and much faster than interpret-mode emulation,
+    so the serving engine defaults to it on CPU CI.
+    """
+    return "ref" if interpret_default() else "pallas"

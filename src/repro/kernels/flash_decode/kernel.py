@@ -104,3 +104,110 @@ def sparse_flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Ar
         ],
         interpret=interpret,
     )(q, k_codes, k_scale, v_codes, v_scale, mask.astype(jnp.int8))
+
+
+# ---------------------------------------------------------------------------
+# Paged-native variant: instead of consuming pre-gathered (BH, C, ·) rows,
+# the kernel walks a per-(slot, kv-head) list of PHYSICAL blocks — the
+# selection's logical indices resolved through the page table on the host
+# side of the trace — and the scalar-prefetched list drives the BlockSpec
+# index_map, so each grid step streams one physical K/V block HBM→VMEM.
+# The (P·BS, KV, ·) flat transpose of the pool that the gather path builds
+# never exists; per-tick exact-attention traffic is the selected blocks.
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(pblk_ref, cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                  mask_ref, out_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                  nsb: int):
+    del pblk_ref  # consumed by the index_maps
+    b = pl.program_id(0)
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Padded list entries (n ≥ count) revisit a clamped block; skip the math.
+    @pl.when(n < cnt_ref[b])
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                   # (G, HD)
+        k = kc_ref[0, :, 0].astype(jnp.float32)            # (BS, HD)
+        ks = ks_ref[0, :, 0]                               # (BS,)
+        mask = mask_ref[0, 0] != 0                         # (BS,)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, BS)
+        s = s * ks[None, :] * scale
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask[None, :], p, 0.0)
+        v = vc_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+
+    @pl.when(n == nsb - 1)
+    def _finalize():
+        out_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_kv", "interpret"))
+def sparse_flash_decode_paged_pallas(q: jax.Array, k_codes: jax.Array,
+                                     k_scale: jax.Array, v_codes: jax.Array,
+                                     v_scale: jax.Array, pblk: jax.Array,
+                                     counts: jax.Array, blk_mask: jax.Array,
+                                     *, num_kv: int,
+                                     interpret: bool | None = None) -> jax.Array:
+    """Exact sparse attention straight off the physical block pool.
+
+    q (BH, G, HD) with BH = slots·num_kv (kv-major rows, kv = row % num_kv);
+    k/v codes (P, BS, KV, HD) int8 + scales (P, BS, KV) f32 — the SHARED
+    pool; pblk (BH, NSB) int32 physical ids of the blocks the selection
+    touches (padded entries clamped, elided by the pipeline); counts (BH,)
+    int32 live-entry counts; blk_mask (BH, NSB, BS) selected-token masks per
+    listed block. Returns (BH, G, HD) f32. Grid = (BH, NSB); step (b, n)
+    streams the (BS, HD) K and V slices of physical block ``pblk[b, n]`` for
+    row b's kv head — the only pool bytes the tick touches.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    bh, g, hd = q.shape
+    bs = k_codes.shape[1]
+    nsb = pblk.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    kv = num_kv
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, nsb),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, n, pb, ct: (b, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, n, pb, ct: (pb[b, n], 0, b % kv, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, n, pb, ct: (pb[b, n], 0, b % kv)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, n, pb, ct: (pb[b, n], 0, b % kv, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, n, pb, ct: (pb[b, n], 0, b % kv)),
+            pl.BlockSpec((1, 1, bs), lambda b, n, pb, ct: (b, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, n, pb, ct: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, nsb=nsb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(pblk, counts, q, k_codes, k_scale, v_codes, v_scale,
+      blk_mask.astype(jnp.int8))

@@ -23,3 +23,29 @@ def sparse_flash_decode_ref(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array
     l = jnp.sum(p, axis=-1, keepdims=True)
     v = v_codes.astype(jnp.float32) * v_scale[..., None]
     return jnp.einsum("bgc,bcd->bgd", p, v) / jnp.maximum(l, 1e-20)
+
+
+def sparse_flash_decode_paged_ref(q: jax.Array, k_codes: jax.Array,
+                                  k_scale: jax.Array, v_codes: jax.Array,
+                                  v_scale: jax.Array, pblk: jax.Array,
+                                  blk_mask: jax.Array,
+                                  num_kv: int) -> jax.Array:
+    """Paged-native oracle: same contract as the scalar-prefetch kernel.
+
+    Fetches each row's listed physical blocks with one (block, token,
+    kv-head) advanced-index gather per field — O(selected blocks), never a
+    flat (P·BS, ·) view of the pool — then runs the flat oracle over the
+    flattened (BH, NSB·BS) block stream.
+    """
+    bh = q.shape[0]
+    bs = k_codes.shape[1]
+    nsb = pblk.shape[1]
+    kvb = (jnp.arange(bh) % num_kv)[:, None, None]             # (BH, 1, 1)
+    tok = jnp.arange(bs)[None, None, :]                        # (1, 1, BS)
+    pb = pblk[:, :, None]                                      # (BH, NSB, 1)
+    kc = k_codes[pb, tok, kvb].reshape(bh, nsb * bs, -1)
+    ks = k_scale[pb, tok, kvb].reshape(bh, nsb * bs)
+    vc = v_codes[pb, tok, kvb].reshape(bh, nsb * bs, -1)
+    vs = v_scale[pb, tok, kvb].reshape(bh, nsb * bs)
+    return sparse_flash_decode_ref(q, kc, ks, vc, vs,
+                                   blk_mask.reshape(bh, nsb * bs))

@@ -20,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import interpret_default
 
@@ -77,3 +78,78 @@ def score_estimate_pallas(q_codes: jax.Array, q_scale: jax.Array,
         out_shape=jax.ShapeDtypeStruct((bh, n), jnp.float32),
         interpret=interpret,
     )(q_codes, q_scale, words, feat_scale, feat_zero)
+
+
+# ---------------------------------------------------------------------------
+# Paged-native variant: the page table is scalar-prefetched and drives the
+# BlockSpec index_map, so each grid step streams one PHYSICAL feature block
+# HBM→VMEM — the logical-order copy of the feature stream never exists.
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(pt_ref, qc_ref, qs_ref, qsum_ref, words_ref, fs_ref, fz_ref,
+                  out_ref, *, r: int, bf16: bool):
+    # qc: (1, KV, G, r) int8; words: (1, BS, KV, r//16) uint32;
+    # fs/fz: (1, BS, KV) f32; out: (1, KV, BS) f32.
+    del pt_ref  # consumed by the index_maps
+    words = words_ref[0]                                       # (BS, KV, W)
+    shifts = 2 * jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 16), 3)
+    codes = (words[:, :, :, None] >> shifts) & jnp.uint32(0x3)
+    codes = codes.reshape(words.shape[0], words.shape[1], r)   # (BS, KV, r)
+    kt = codes.astype(jnp.int32).transpose(1, 0, 2)            # (KV, BS, r)
+    qc = qc_ref[0].astype(jnp.int32)                           # (KV, G, r)
+    int_dot = jax.lax.dot_general(
+        qc, kt, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)                      # (KV, G, BS)
+    # Shared dequant chain (pinned bf16 rounding) — bit-identical to the
+    # flat `selection.estimate_relevance` path by construction.
+    from repro.core.quantization import dequant_score_chain
+    a = fs_ref[0].transpose(1, 0)[:, None, :]                  # (KV, 1, BS)
+    z = fz_ref[0].transpose(1, 0)[:, None, :]
+    qs = qs_ref[0][..., None]                                  # (KV, G, 1)
+    qsum = qsum_ref[0][..., None]                              # (KV, G, 1)
+    scores = dequant_score_chain(qs, a, z, int_dot, qsum, bf16)
+    out_ref[0] = jnp.sum(scores, axis=1, dtype=jnp.float32)    # (KV, BS)
+
+
+@functools.partial(jax.jit, static_argnames=("bf16", "interpret"))
+def paged_score_estimate_pallas(q_codes: jax.Array, q_scale: jax.Array,
+                                q_sums: jax.Array, feat_words: jax.Array,
+                                feat_scale: jax.Array, feat_zero: jax.Array,
+                                pages: jax.Array, *, bf16: bool = True,
+                                interpret: bool | None = None) -> jax.Array:
+    """Relevance scores straight off the physical block pool.
+
+    q_codes (S, KV, G, r) int8 + q_scale (S, KV, G) f32 + q_sums (S, KV, G)
+    int32 (precomputed code sums); feat_words (P, BS, KV, r//16) uint32 with
+    feat_scale/zero (P, BS, KV) f32 — the SHARED pool, not a logical copy;
+    pages (S, MB) int32 page table with unmapped entries already clamped to
+    block 0 (`PagedSalcaCache.clamped_pages`). Returns (S, MB·BS, ·)-ordered
+    scores (S, KV, L) f32. Grid = (S, MB); step (s, j) streams physical
+    block ``pages[s, j]`` — per-tick feature traffic is the mapped blocks,
+    with repeated (clamped) indices coalesced by the pipeline.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    s, kv, g, r = q_codes.shape
+    bs, w = feat_words.shape[1], feat_words.shape[3]
+    mb = pages.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s, mb),
+        in_specs=[
+            pl.BlockSpec((1, kv, g, r), lambda i, j, pt: (i, 0, 0, 0)),
+            pl.BlockSpec((1, kv, g), lambda i, j, pt: (i, 0, 0)),
+            pl.BlockSpec((1, kv, g), lambda i, j, pt: (i, 0, 0)),
+            pl.BlockSpec((1, bs, kv, w), lambda i, j, pt: (pt[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, kv), lambda i, j, pt: (pt[i, j], 0, 0)),
+            pl.BlockSpec((1, bs, kv), lambda i, j, pt: (pt[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kv, bs), lambda i, j, pt: (i, 0, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, r=r, bf16=bf16),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, kv, mb * bs), jnp.float32),
+        interpret=interpret,
+    )(pages, q_codes, q_scale, q_sums, feat_words, feat_scale, feat_zero)

@@ -8,8 +8,11 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.score_est.kernel import score_estimate_pallas
-from repro.kernels.score_est.ref import score_estimate_ref
+from repro.kernels.common import paged_impl_default
+from repro.kernels.score_est.kernel import (
+    paged_score_estimate_pallas, score_estimate_pallas)
+from repro.kernels.score_est.ref import (
+    paged_score_estimate_ref, score_estimate_ref)
 
 
 def score_estimate(q_codes: jax.Array, q_scale: jax.Array, words: jax.Array,
@@ -23,3 +26,29 @@ def score_estimate(q_codes: jax.Array, q_scale: jax.Array, words: jax.Array,
         return score_estimate_pallas(q_codes, q_scale, words, feat_scale,
                                      feat_zero, interpret=interpret)
     return score_estimate_ref(q_codes, q_scale, words, feat_scale, feat_zero)
+
+
+def paged_score_estimate(q_codes: jax.Array, q_scale: jax.Array,
+                         q_sums: jax.Array, feat_words: jax.Array,
+                         feat_scale: jax.Array, feat_zero: jax.Array,
+                         pages: jax.Array, *, bf16: bool = True,
+                         impl: str | None = None,
+                         interpret: bool | None = None) -> jax.Array:
+    """Relevance scores (S, KV, L) streamed per PHYSICAL block through the
+    page table — the paged-native phase 1. ``pages`` must be the clamped
+    page table (`PagedSalcaCache.clamped_pages`). impl: "pallas" (scalar-
+    prefetched index_map kernel) or "ref" (per-block XLA gathers); "gather"
+    aliases "ref" so one impl string can steer a whole fused decode tick.
+    Default picks pallas on TPU, ref elsewhere."""
+    if impl is None:
+        impl = paged_impl_default()
+    elif impl == "gather":
+        impl = "ref"
+    if impl == "pallas":
+        return paged_score_estimate_pallas(
+            q_codes, q_scale, q_sums, feat_words, feat_scale, feat_zero,
+            pages, bf16=bf16, interpret=interpret)
+    if impl != "ref":
+        raise ValueError(f"unknown impl {impl!r} (expected 'pallas' or 'ref')")
+    return paged_score_estimate_ref(q_codes, q_scale, q_sums, feat_words,
+                                    feat_scale, feat_zero, pages, bf16=bf16)

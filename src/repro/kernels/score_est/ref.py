@@ -21,3 +21,33 @@ def score_estimate_ref(q_codes: jax.Array, q_scale: jax.Array, words: jax.Array,
     s = q_scale[..., None] * (a * int_dot.astype(jnp.float32)
                               + z * qsum[..., None].astype(jnp.float32))
     return jnp.sum(s, axis=1)                                 # (BH, N)
+
+
+def paged_score_estimate_ref(q_codes: jax.Array, q_scale: jax.Array,
+                             q_sums: jax.Array, feat_words: jax.Array,
+                             feat_scale: jax.Array, feat_zero: jax.Array,
+                             pages: jax.Array, bf16: bool = True) -> jax.Array:
+    """Same contract as `paged_score_estimate_pallas`, from jnp primitives.
+
+    The feature stream is fetched block-decomposed through the (clamped)
+    page table — one gather per field keyed on physical block ids; the
+    widest temporaries carry the (S, MB, BS, ·) block axes, never a flat
+    `(S, L, ·)` logical copy. The elementwise dequant chain mirrors
+    `selection.estimate_relevance` op for op (same acc dtype, same
+    expression tree), so the scores are bit-identical to running it over
+    `cache.paged_logical_features`.
+    """
+    s, kv, g, r = q_codes.shape
+    mb = pages.shape[1]
+    bs = feat_words.shape[1]
+    fw = feat_words[pages]                                    # (S, MB, BS, KV, W)
+    # kv-head leading on both operands → a clean batched int matmul (the
+    # mixed-order contraction lowers ~3× slower on CPU).
+    codes = qz.unpack2bit(fw, r).transpose(0, 3, 1, 2, 4)     # (S, KV, MB, BS, r)
+    int_dot = jnp.einsum("skgr,skmnr->skgmn", q_codes, codes,
+                         preferred_element_type=jnp.int32)    # (S, KV, G, MB, BS)
+    a = feat_scale[pages].transpose(0, 3, 1, 2)[:, :, None]
+    z = feat_zero[pages].transpose(0, 3, 1, 2)[:, :, None]
+    scores = qz.dequant_score_chain(q_scale[..., None, None], a, z, int_dot,
+                                    q_sums[..., None, None], bf16)
+    return jnp.sum(scores, axis=2, dtype=jnp.float32).reshape(s, kv, mb * bs)

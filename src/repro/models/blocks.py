@@ -276,6 +276,9 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
         cache = append_token_paged(cache._replace(length=write_pos), k, v)
         cache = cache._replace(length=valid_len)
         if use_salca:
+            # Fused vs gather data path is chosen inside (PERF.paged_fused_
+            # decode): fused streams physical blocks through the page table
+            # in-kernel; gather rebuilds logical views (the PR 3 baseline).
             o = salca_decode_attention_paged(q, cache, salca)
         else:
             valid = cache.valid_mask()

@@ -173,13 +173,22 @@ class ServingEngine:
     reference: matched full blocks are mapped, refcounted and not rewritten;
     only the divergent tail is charged against the free list. Completion is
     decref-based and shared blocks are copy-on-write (see module docstring).
+
+    ``fused_decode`` pins the paged decode-tick data path: ``True`` fuses
+    the page-table walk into the decode kernels (physical-block streaming —
+    O(active + selected) pool traffic per tick), ``False`` forces the PR 3
+    gather path (logical-view rebuild per tick), ``None`` (default) follows
+    the global ``flags.PERF.paged_fused_decode`` switch. Outputs are
+    bit-identical between the two paths (same selection; greedy tokens
+    match), so the knob is purely a performance/benchmarking control.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, max_seq: int,
                  slots: int = 4, ctx: DecodeCtx | None = None,
                  greedy: bool = True, seed: int = 0, paged: bool = False,
                  block_size: int = 32, num_blocks: int | None = None,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 fused_decode: bool | None = None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -237,8 +246,19 @@ class ServingEngine:
             self._state = self.api.init_state(slots, max_seq)
             self._write = jax.jit(self.api.write_into_slot, donate_argnums=dn)
 
+        # ``fused_decode`` pins the paged decode data path for this engine
+        # (None → follow the global PERF.paged_fused_decode flag). The flag
+        # is read at trace time, so wrapping the tick trace is sufficient —
+        # jit caches the traced program.
+        self.fused_decode = fused_decode
+
         def _tick_fn(p, s, tok, act):
-            logits, s2 = self.api.decode_step(p, s, tok, ctx, active=act)
+            if self.fused_decode is None:
+                logits, s2 = self.api.decode_step(p, s, tok, ctx, active=act)
+            else:
+                from repro.flags import perf_flags
+                with perf_flags(paged_fused_decode=self.fused_decode):
+                    logits, s2 = self.api.decode_step(p, s, tok, ctx, active=act)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, logits, s2
 
