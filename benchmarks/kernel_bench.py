@@ -41,7 +41,10 @@ def _paged_decode_rows(rng, n: int, k: int, pool_factor: int = 64,
     fetch: pool bytes touched (pr3) vs selected-block bytes (fused) — the
     structural claim; on TPU the transposes are physical data movement. On
     CPU, XLA folds the pr3 transposes into the gather, so tick wall-clock
-    mostly reflects how well each whole graph fuses, not bytes. ``gate=True``
+    mostly reflects how well each whole graph fuses, not bytes. A fifth
+    column prices the same tick on a 4-way block-sharded pool
+    (`performance_model.sharded_salca_bytes_per_token`): collective psum
+    bytes vs per-shard HBM stream. ``gate=True``
     (the --smoke CI run) hard-fails when the fused tick exceeds the pr3 tick
     by >50% at the smoke shapes — a regression tripwire for the fused path
     (it caught two real 6–20× blowups during development), with headroom for
@@ -138,10 +141,24 @@ def _paged_decode_rows(rng, n: int, k: int, pool_factor: int = 64,
              "paged_decode_gather": "O(selected)_row_fetch",
              "paged_decode_fused":
                  f"{sel_bytes/1e6:.2f}MB_selected({pool_bytes/max(sel_bytes,1):.0f}x_less)"}
+    # Interconnect column: what the same tick costs in COLLECTIVE bytes when
+    # the pool is sharded 4 ways (psum'd histogram threshold + halo + rank +
+    # the (m, l, o) softmax merge — context-length-independent) next to the
+    # per-shard HBM stream. The ratio is the headroom argument for the
+    # sharded engine: the mesh term stays O(max_blocks + 256 + d) while the
+    # streamed slice keeps growing with context.
+    from repro.core.performance_model import sharded_salca_bytes_per_token
+    sh = sharded_salca_bytes_per_token(
+        n=n, d=hd, kv_heads=kv, groups=2, s_f=0.5, retention=k / n,
+        n_shards=4, block_size=bsz)
+    shard_col = (f"shard4:{sh.interconnect/1e3:.1f}KB_psum_vs_"
+                 f"{sh.local_total/1e6:.2f}MB_local"
+                 f"({100 * sh.interconnect_ratio:.1f}%)")
     rows, us = [], {}
     for name, fn in ticks.items():
         us[name] = time_call(fn, q, pool)
-        rows.append(f"kernel_bench,{name},{us[name]:.1f},{model[name]}")
+        rows.append(f"kernel_bench,{name},{us[name]:.1f},{model[name]},"
+                    f"{shard_col}")
     # Ratio gate with an absolute-delta floor: a loaded CI runner can stretch
     # a ~2ms median by tens of percent, but a real fused-path regression (the
     # 6–20× class this tripwire caught in development) blows past both.

@@ -33,6 +33,15 @@ Three sweeps:
    fused tick's pool traffic is O(active + selected) instead of O(pool);
    on CPU the two land within noise of each other (XLA folds the gather
    path's transposes), so the timing rows are informational there.
+
+5. **Sharded-pool sweep** — the block pool split across 1/2/4 mesh shards
+   at a FIXED per-device pool size, long-context requests whose block
+   count exceeds half of one shard's slice. Admitted concurrency must
+   scale ~linearly with shard count (the sweep RAISES below 3x at 4
+   shards) with greedy outputs bit-identical to the 1-shard engine (RAISES
+   on mismatch). Needs ≥ 4 jax devices — CI runs it under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; with fewer
+   devices the sweep reports itself skipped and gates nothing.
 """
 
 from __future__ import annotations
@@ -250,6 +259,71 @@ def _fused_sweep(cfg, params, smoke: bool):
         raise RuntimeError("fused paged decode broke greedy-output parity")
 
 
+def _sharded_sweep(cfg, params, smoke: bool):
+    """Admitted long-context concurrency vs pool shard count, at a fixed
+    per-device pool size — the capacity claim of the sharded page pools —
+    plus the sharded-vs-unsharded greedy parity gate."""
+    from repro import compat
+    from repro.models.blocks import DecodeCtx
+    from repro.runtime.serve import Request, ServingEngine
+
+    ndev = len(jax.devices())
+    if ndev < 4:
+        yield ("serving_sharded,skipped,need>=4_devices,"
+               "set_XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return
+    blocks_per_shard = 8                 # FIXED per-device pool slice
+    n_requests = 8
+    slots = n_requests
+    # Each request needs 4 blocks over its lifetime (60 prompt + 3 stored
+    # decode tokens = 63 ≤ 4·16), i.e. HALF of one shard's slice: 1 shard
+    # packs 2 concurrently, 4 shards pack 8 — the linear-capacity regime.
+    def workload():
+        rng = np.random.default_rng(13)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 60)
+                        .astype(np.int32),
+                        max_new_tokens=4)
+                for i in range(n_requests)]
+
+    yield ("serving_sharded,shards,num_blocks,per_shard,peak_concurrent,"
+           "completed,peak_shard_blocks")
+    results = {}
+    for shards in ((1, 4) if smoke else (1, 2, 4)):
+        ctx = None
+        if shards > 1:
+            mesh = compat.make_mesh((shards,), ("seq",))
+            ctx = DecodeCtx(axis="seq", mesh=mesh)
+        eng = ServingEngine(cfg, params, max_seq=MAX_SEQ, slots=slots,
+                            ctx=ctx, paged=True, block_size=BLOCK_SIZE,
+                            num_blocks=shards * blocks_per_shard)
+        reqs = workload()
+        for r in reqs:
+            eng.submit(r)
+        st = eng.run()
+        results[shards] = (reqs, st)
+        peak_shard = (st.peak_shard_blocks_in_use if shards > 1
+                      else st.peak_blocks_in_use)
+        yield (f"serving_sharded,{shards},{shards * blocks_per_shard},"
+               f"{blocks_per_shard},{st.peak_active_slots},{st.completed},"
+               f"{peak_shard}")
+    gain = (results[4][1].peak_active_slots
+            / max(results[1][1].peak_active_slots, 1))
+    yield (f"serving_sharded_gain,4shards_vs_1_concurrency,{gain:.2f},"
+           f"{'linear-capacity-scaling' if gain >= 3.0 else 'BELOW-3X'}")
+    match = all(a.output == b.output
+                for a, b in zip(results[1][0], results[4][0]))
+    yield (f"serving_sharded_parity,sharded_vs_unsharded_outputs,"
+           f"{'ok' if match else 'MISMATCH'}")
+    # Acceptance gates — raise so benchmarks/run.py exits 1.
+    if not match:
+        raise RuntimeError("sharded paged engine broke greedy-output parity")
+    if gain < 3.0:
+        raise RuntimeError(
+            f"sharded admission gain {gain:.2f} < 3.0 acceptance bar "
+            "(capacity must scale ~linearly with shard count)")
+
+
 def run(smoke: bool = False):
     from repro.configs import get_config
     from repro.models import get_model
@@ -263,6 +337,7 @@ def run(smoke: bool = False):
     yield from _mixed_sweep(cfg, params, smoke)
     yield from _shared_sweep(cfg, params, smoke)
     yield from _fused_sweep(cfg, params, smoke)
+    yield from _sharded_sweep(cfg, params, smoke)
 
 
 if __name__ == "__main__":

@@ -6,21 +6,21 @@ Runs the reduced config of a real arch through the ServingEngine
 (continuous batching: slots admit queued requests as sequences finish) and
 reports the phase split the paper's Fig. 1 is about — prefill vs decode
 time — plus per-request latency.
+
+``--shards N`` forces N host devices and shards the paged block pool across
+them (each device owns ``--blocks-per-shard`` physical blocks). The demo
+then runs one long-context request twice: against a 1-shard pool (the same
+per-device budget — it overflows) and against the N-shard pool (the blocks
+span devices and the request completes) — the capacity argument for
+sequence-sharded page pools. Argument parsing happens before jax imports
+because the XLA device-count flag must precede jax initialization.
 """
 
 import argparse
-import dataclasses
-import time
-
-import jax
-import numpy as np
-
-from repro.configs import get_config
-from repro.models import get_model
-from repro.runtime.serve import Request, ServingEngine
+import os
 
 
-def main() -> None:
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--requests", type=int, default=5)
@@ -38,7 +38,33 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of shared system prompt per request "
                          "(default: 75%% of prompt-len when sharing)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the paged block pool across N forced host "
+                         "devices (implies --paged); demos a context that "
+                         "overflows 1 shard but completes on N")
+    ap.add_argument("--blocks-per-shard", type=int, default=8,
+                    help="per-device pool slice for the --shards demo")
+    return ap
+
+
+def main() -> None:
+    ap = parse_args()
     args = ap.parse_args()
+    if args.shards > 1:
+        # Must land before jax initializes (hence before the imports below).
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.shards}")
+
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.runtime.serve import Request, ServingEngine
 
     cfg = get_config(args.arch).reduced()
     if args.prefix_sharing:
@@ -52,6 +78,10 @@ def main() -> None:
     params = api.init(jax.random.PRNGKey(0))
     print(f"init {time.time()-t0:.1f}s, params "
           f"{sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M")
+
+    if args.shards > 1:
+        _sharded_demo(args, cfg, params)
+        return
 
     max_seq = ((args.prompt_len + args.new_tokens + 127) // 128) * 128
     engine = ServingEngine(cfg, params, max_seq=max_seq, slots=args.slots,
@@ -94,6 +124,56 @@ def main() -> None:
     print("decode/(prefill+decode) time share: "
           f"{s['decode_s']/(s['prefill_s']+s['decode_s']):.1%} "
           "(the paper's Fig.1 regime: decode dominates long-context serving)")
+
+
+def _sharded_demo(args, cfg, params) -> None:
+    """One long-context request vs a fixed per-device pool: overflows on a
+    1-shard pool, completes when the block pool spans --shards devices."""
+    import jax
+    import numpy as np
+
+    from repro import compat
+    from repro.models.blocks import DecodeCtx
+    from repro.runtime.serve import Request, ServingEngine
+
+    bs = args.block_size
+    per_shard = args.blocks_per_shard
+    # A context needing ~2 shard-slices of blocks: too big for one device's
+    # pool, comfortable across args.shards of them.
+    prompt_len = 2 * per_shard * bs - args.new_tokens
+    max_seq = ((prompt_len + args.new_tokens + 127) // 128) * 128
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+    print(f"\nsharded-pool demo: {prompt_len}-token context, "
+          f"{per_shard} blocks x {bs} tokens per device "
+          f"({len(jax.devices())} forced host devices)")
+
+    for shards in (1, args.shards):
+        ctx = None
+        if shards > 1:
+            mesh = compat.make_mesh((shards,), ("seq",))
+            ctx = DecodeCtx(axis="seq", mesh=mesh)
+        engine = ServingEngine(cfg, params, max_seq=max_seq, slots=1,
+                               ctx=ctx, paged=True, block_size=bs,
+                               num_blocks=shards * per_shard)
+        req = Request(rid=0, prompt=prompt.copy(),
+                      max_new_tokens=args.new_tokens)
+        try:
+            engine.submit(req)
+        except ValueError as e:                 # pool can never hold it
+            print(f"  shards={shards}: pool {shards * per_shard} blocks — "
+                  f"rejected at submit ({e})")
+            continue
+        st = engine.run()
+        s = st.summary()
+        print(f"  shards={shards}: pool {shards * per_shard} blocks — "
+              f"stop_reason={req.stop_reason}, "
+              f"{len(req.output)}/{args.new_tokens} tokens, "
+              f"peak blocks {s['peak_blocks_in_use']}"
+              + (f", hottest shard {s['peak_shard_blocks_in_use']}"
+                 f"/{per_shard}" if shards > 1 else ""))
+    print("  → the same per-device budget that overflows one device "
+          "completes when the page tables resolve across the mesh.")
 
 
 if __name__ == "__main__":

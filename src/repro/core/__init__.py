@@ -14,7 +14,7 @@ from repro.core.cache import (
     cache_bytes, write_prefill_into_slot, reset_slot,
     PagedSalcaCache, empty_paged_cache, prefill_into_pages, append_token_paged,
     map_block, free_pages, gather_selected_paged, paged_cache_bytes,
-    share_blocks, cow_block)
+    share_blocks, cow_block, local_block_range)
 from repro.core.attention import (
     salca_decode_attention,
     salca_decode_attention_paged,
@@ -27,6 +27,8 @@ from repro.core.attention import (
 from repro.core.sp_decode import (
     sp_salca_decode,
     sp_dense_decode,
+    sp_salca_decode_paged,
+    sp_dense_decode_paged,
     sp_append_token,
     local_lengths,
 )
@@ -50,12 +52,13 @@ __all__ = [
     "append_token_masked", "cache_bytes", "write_prefill_into_slot", "reset_slot",
     "PagedSalcaCache", "empty_paged_cache", "prefill_into_pages",
     "append_token_paged", "map_block", "free_pages", "gather_selected_paged",
-    "paged_cache_bytes", "share_blocks", "cow_block",
+    "paged_cache_bytes", "share_blocks", "cow_block", "local_block_range",
     "salca_select", "select_sparse_pattern", "select_sparse_pattern_blocked",
     "estimate_relevance", "estimate_relevance_paged",
     "salca_decode_attention", "salca_decode_attention_paged",
     "dense_decode_attention", "dense_decode_from_cache", "dense_decode_from_paged",
     "exact_sparse_attention", "gather_selected", "sp_salca_decode",
+    "sp_salca_decode_paged", "sp_dense_decode_paged",
     "Selection", "histogram256", "locate_threshold", "compact_indices",
     "histogram_topk", "histogram_topk_blocked", "exact_topk_indices",
     "maxpool1d_blocked", "maxpool1d_reuse", "maxpool1d_direct",

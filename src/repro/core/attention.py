@@ -17,8 +17,8 @@ from repro.core.cache import (
     paged_logical_kv)
 from repro.core.histogram_topk import Selection
 from repro.core.selection import (
-    SalcaParams, estimate_relevance, estimate_relevance_paged, salca_select,
-    select_sparse_pattern_blocked)
+    SalcaParams, estimate_relevance, estimate_relevance_paged,
+    query_heavy_features, salca_select, select_sparse_pattern_blocked)
 
 NEG_INF = -1e30
 
@@ -80,14 +80,10 @@ def salca_decode_attention(q: jax.Array, cache: SalcaCache, params: SalcaParams,
     q: (B, H, HD) current query (post-RoPE). Returns (B, H, HD) f32 output
     (and optionally the Selection for introspection).
     """
-    b, h, hd = q.shape
+    h = q.shape[1]
     kv = cache.num_kv_heads
     groups = h // kv
-    r = cache.heavy_idx.shape[-1]
-    # Query heavy-channel features, using each group's kv-head channel set.
-    idx = jnp.broadcast_to(cache.heavy_idx[:, :, None, :], (b, kv, groups, r))
-    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
-    q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r)
+    q_feat = query_heavy_features(q, cache.heavy_idx, groups)
     sel = salca_select(q_feat, cache.feat_words, cache.feat_scale,
                        cache.feat_zero, groups, params,
                        valid_mask=cache.valid_mask())
@@ -128,13 +124,10 @@ def salca_decode_attention_paged(q: jax.Array, pool: PagedSalcaCache,
     from repro.flags import PERF
     if fused is None:
         fused = PERF.paged_fused_decode
-    b, h, hd = q.shape
+    h = q.shape[1]
     kv = pool.num_kv_heads
     groups = h // kv
-    r = pool.heavy_idx.shape[-1]
-    idx = jnp.broadcast_to(pool.heavy_idx[:, :, None, :], (b, kv, groups, r))
-    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
-    q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r)
+    q_feat = query_heavy_features(q, pool.heavy_idx, groups)
     if fused:
         scores = estimate_relevance_paged(q_feat, pool, groups, impl=impl,
                                           interpret=interpret)

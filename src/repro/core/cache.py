@@ -223,6 +223,17 @@ def cache_bytes(cache: SalcaCache) -> dict[str, int]:
 # services the fault by allocating a fresh block and calling `cow_block`,
 # which copies all seven cache fields of the block, remaps only the writer's
 # page-table entry, and moves one reference from the old block to the copy.
+#
+# Sequence sharding: the physical block dim can be split across a mesh axis —
+# shard i owns the contiguous global-id range [i·P_local, (i+1)·P_local)
+# (`local_block_range`), while the page table (global ids), lengths and
+# heavy sets stay replicated. Every pool primitive takes an optional
+# `block_range=(lo, hi)`: with it set, the op sees a LOCAL pool (data leaves
+# hold only this shard's blocks) and resolutions/writes whose physical block
+# falls outside [lo, hi) are dropped (writes) or flagged unowned (reads) —
+# the local-or-sentinel rule `_resolve_pages` implements once for every
+# caller. A decode tick composed of these shard-local ops touches only local
+# HBM until the two tiny collectives in `sp_decode.sp_salca_decode_paged`.
 # ---------------------------------------------------------------------------
 
 PAGE_UNMAPPED = -1
@@ -309,6 +320,32 @@ def empty_paged_cache(num_blocks: int, block_size: int, slots: int,
     )
 
 
+def local_block_range(pool: PagedSalcaCache, axis_name) -> tuple:
+    """This shard's global physical-block id range ``(lo, hi)``.
+
+    Call INSIDE a shard_map island whose in_specs shard the pool's data
+    leaves over ``axis_name`` on the block dim (metadata replicated):
+    ``pool.num_blocks`` is then the LOCAL block count and shard i owns the
+    contiguous global ids [i·P_local, (i+1)·P_local). Feed the result to the
+    ``block_range`` parameter of the pool primitives below."""
+    p_local = pool.num_blocks
+    lo = jax.lax.axis_index(axis_name) * p_local
+    return lo, lo + p_local
+
+
+def _localize_pages(pages: jax.Array, block_range) -> jax.Array:
+    """Translate global physical block ids to the shard-local coordinate.
+
+    Owned ids map to [0, P_local); unowned (and unmapped -1) ids map to the
+    unmapped sentinel, so downstream refcount scatters / data writes drop
+    them — the shard-aware "unowned writes drop" rule in one place."""
+    if block_range is None:
+        return pages
+    lo, hi = block_range
+    owned = (pages >= lo) & (pages < hi)
+    return jnp.where(owned, pages - lo, jnp.int32(PAGE_UNMAPPED))
+
+
 def _refcount_add(refcount: jax.Array, pages: jax.Array, delta: int,
                   valid: jax.Array | None = None) -> jax.Array:
     """Scatter `delta` onto `refcount` at every valid page id. Unmapped (-1)
@@ -376,8 +413,8 @@ def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
     )
 
 
-def append_token_paged(pool: PagedSalcaCache, k: jax.Array,
-                       v: jax.Array) -> PagedSalcaCache:
+def append_token_paged(pool: PagedSalcaCache, k: jax.Array, v: jax.Array,
+                       block_range=None) -> PagedSalcaCache:
     """Append one decoded token's K/V (S, KV, HD) at each slot's cursor.
 
     The cursor (`pool.length`) resolves through the page table: block =
@@ -393,16 +430,23 @@ def append_token_paged(pool: PagedSalcaCache, k: jax.Array,
     and calling `cow_block` (copy all seven fields, remap only the writer's
     page-table entry, move one reference), after which the write is private
     and lands normally.
+
+    Sharded form (``block_range`` set, inside shard_map): the cursor walk,
+    the CoW-fault test and the length advance run identically on every shard
+    (page table and refcount are replicated), but the data write lands only
+    on the shard owning the resolved block — unowned writes drop, so each
+    token's K/V is stored exactly once across the mesh.
     """
     s = k.shape[0]
     bs, mb, p = pool.block_size, pool.max_blocks, pool.num_blocks
     cur = pool.length
     blk = jnp.clip(cur // bs, 0, mb - 1)
     sidx = jnp.arange(s)
-    page = pool.page_table[sidx, blk]                          # (S,)
+    page = pool.page_table[sidx, blk]                          # (S,) global id
     rc = pool.refcount[jnp.where(page >= 0, page, 0)]          # (S,)
     ok = (cur >= 0) & (cur < pool.max_seq) & (page >= 0) & (rc <= 1)
-    pg = jnp.where(ok, page, p)                                # OOB → drop
+    local = _localize_pages(page, block_range)                 # unowned → -1
+    pg = jnp.where(ok & (local >= 0), local, p)                # OOB → drop
     off = cur % bs
     k8, v8, words, fs, fz = _encode_tokens(k[:, None], v[:, None], pool.heavy_idx)
 
@@ -419,17 +463,24 @@ def append_token_paged(pool: PagedSalcaCache, k: jax.Array,
     )
 
 
-def map_block(pool: PagedSalcaCache, slot, logical_block, page) -> PagedSalcaCache:
+def map_block(pool: PagedSalcaCache, slot, logical_block, page,
+              block_range=None) -> PagedSalcaCache:
     """Map one logical block of `slot` to physical block `page` (on-demand
     growth: the engine allocates a block from its free list when a slot's
     cursor crosses a block boundary). All args may be traced.
 
     Refcounts move with the mapping: the new page gains a reference, and a
-    previously mapped entry (remap) releases one."""
+    previously mapped entry (remap) releases one.
+
+    ``block_range``: for a fully-sharded metadata layout where the refcount
+    leaf holds only this shard's blocks — the page-table write (replicated
+    metadata) applies everywhere, but refcount deltas land only on the shard
+    owning the block; unowned deltas drop and are applied by the owner. The
+    per-shard results concatenate to the global op (property-tested)."""
     page = jnp.asarray(page, jnp.int32)
     old = pool.page_table[slot, logical_block]
-    rc = _refcount_add(pool.refcount, page[None], +1)
-    rc = _refcount_add(rc, old[None], -1)
+    rc = _refcount_add(pool.refcount, _localize_pages(page[None], block_range), +1)
+    rc = _refcount_add(rc, _localize_pages(old[None], block_range), -1)
     return pool._replace(
         page_table=pool.page_table.at[slot, logical_block].set(page),
         refcount=rc)
@@ -489,17 +540,23 @@ def cow_block(pool: PagedSalcaCache, slot, logical_block,
         refcount=rc)
 
 
-def free_pages(pool: PagedSalcaCache, slot) -> PagedSalcaCache:
+def free_pages(pool: PagedSalcaCache, slot, block_range=None) -> PagedSalcaCache:
     """Release a slot: decrement the refcount of every block it maps, unmap
     its page table row and zero its length. Blocks whose refcount reaches 0
     return to the engine's free list (host side); their data rows are left
     in place — every read is gated by the valid mask, and the next owner
     overwrites them. Freeing an already-freed slot is a no-op (its row is
-    all -1, so no refcount moves) — the double-free hazard lives here."""
+    all -1, so no refcount moves) — the double-free hazard lives here.
+
+    ``block_range``: sharded-refcount form (see `map_block`) — each shard
+    decrements only the counts of the blocks it owns; the page-table unmap
+    and length zero are replicated metadata and apply everywhere."""
     return pool._replace(
         length=pool.length.at[slot].set(0),
         page_table=pool.page_table.at[slot].set(jnp.int32(PAGE_UNMAPPED)),
-        refcount=_refcount_add(pool.refcount, pool.page_table[slot], -1),
+        refcount=_refcount_add(
+            pool.refcount,
+            _localize_pages(pool.page_table[slot], block_range), -1),
     )
 
 
@@ -535,20 +592,25 @@ def paged_logical_kv(pool: PagedSalcaCache):
     return k, v
 
 
-def _resolve_pages(pool: PagedSalcaCache, idx: jax.Array):
+def _resolve_pages(pool: PagedSalcaCache, idx: jax.Array, block_range=None):
     """Walk the page table for logical token indices (S, ...).
 
     Returns (page, offset, mapped): the physical block id, the within-block
     row, and whether the entry was mapped. Unmapped resolutions clamp to
     (block 0, offset 0) — callers mask them. The single definition of the
-    logical→physical rule for every gather path (and the local-resolution
-    primitive the sharded-pool ROADMAP item builds on)."""
+    logical→physical rule for every gather path.
+
+    Sharded form: with ``block_range=(lo, hi)`` the resolution is
+    local-or-sentinel — `page` comes back in the LOCAL coordinate
+    (global − lo) and `mapped` is True only when this shard owns the block,
+    so composing the per-shard resolutions over all shards reproduces the
+    flat resolution exactly (property-tested)."""
     bs = pool.block_size
     blk = jnp.clip(idx // bs, 0, pool.max_blocks - 1)
     # page[s, ...] = page_table[s, blk[s, ...]]
     pt = pool.page_table.reshape(
         (pool.page_table.shape[0],) + (1,) * (idx.ndim - 2) + (pool.max_blocks,))
-    page = jnp.take_along_axis(pt, blk, axis=-1)
+    page = _localize_pages(jnp.take_along_axis(pt, blk, axis=-1), block_range)
     mapped = page >= 0
     return (jnp.where(mapped, page, 0), jnp.where(mapped, idx % bs, 0), mapped)
 
@@ -561,7 +623,7 @@ def resolve_logical_rows(pool: PagedSalcaCache, idx: jax.Array) -> jax.Array:
     return page * pool.block_size + off
 
 
-def gather_selected_paged(pool: PagedSalcaCache, sel) -> tuple:
+def gather_selected_paged(pool: PagedSalcaCache, sel, block_range=None) -> tuple:
     """Gather selected K/V rows per (slot, kv-head), resolving the selection's
     logical indices through the page table before fetching from the pool.
 
@@ -574,9 +636,14 @@ def gather_selected_paged(pool: PagedSalcaCache, sel) -> tuple:
     transpose ever materializes (the PR 3 form transposed all four pool
     buffers every decode tick). Unmapped resolutions clamp to (block 0,
     offset 0); callers mask them.
+
+    Sharded form: with ``block_range`` the gather reads the LOCAL pool —
+    indices resolving off-shard clamp like unmapped ones, so a shard fetches
+    exactly the selected rows it physically holds (callers mask via the
+    selection mask, whose entries are shard-local by construction).
     """
-    pg, off, _ = _resolve_pages(pool, sel.indices)              # (S, KV, C)
-    kvb = jnp.arange(pool.num_kv_heads)[None, :, None]          # (1, KV, 1)
+    pg, off, _ = _resolve_pages(pool, sel.indices, block_range)  # (S, KV, C)
+    kvb = jnp.arange(pool.num_kv_heads)[None, :, None]           # (1, KV, 1)
 
     return (pool.k_codes[pg, off, kvb], pool.k_scale[pg, off, kvb],
             pool.v_codes[pg, off, kvb], pool.v_scale[pg, off, kvb])

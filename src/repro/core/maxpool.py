@@ -78,6 +78,20 @@ def maxpool1d_blocked(x: jax.Array, window: int) -> jax.Array:
     edge = jnp.full(x.shape[:-2] + (1, halo), fill, x.dtype)
     from_left = jnp.concatenate([edge, x[..., :-1, -halo:]], axis=-2)
     from_right = jnp.concatenate([x[..., 1:, :halo], edge], axis=-2)
+    return maxpool1d_blocked_halo(x, window, from_left, from_right)
+
+
+def maxpool1d_blocked_halo(x: jax.Array, window: int, from_left: jax.Array,
+                           from_right: jax.Array) -> jax.Array:
+    """`maxpool1d_blocked` with the neighbour halos supplied explicitly.
+
+    x: (..., nb, bs); from_left/from_right: (..., nb, window//2) — the edge
+    columns of each block's logical neighbours. The single-device form above
+    slices them from adjacent blocks; the block-sharded paged decode psums
+    the edges across shards first (each block's columns are nonzero only on
+    its owner), then pools shard-locally through this same function — so the
+    pooled values of owned blocks are bit-identical to the flat form."""
+    halo = window // 2
     padded = jnp.concatenate([from_left, x, from_right], axis=-1)
     return maxpool1d_reuse(padded, window)[..., halo:-halo]
 

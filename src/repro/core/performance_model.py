@@ -169,3 +169,70 @@ def filter4bit_bytes_per_token(n: int, d: int, kv_heads: int, retention: float) 
 def dense_bytes_per_token(n: int, d: int, kv_heads: int, dtype_bytes: float = 2.0) -> DecodeBytes:
     kv = kv_heads * n * 2.0 * d * dtype_bytes
     return DecodeBytes(0.0, kv, kv)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-sharded paged decode: interconnect vs shard-local HBM per tick
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardedDecodeBytes:
+    """Per-(slot, layer, tick) traffic of the block-sharded paged decode."""
+
+    local_feature_stream: float   # sequential pre-computing reads, per shard
+    local_kv_gather: float        # gathered exact-attention reads, per shard
+    interconnect: float           # collective payload crossing the mesh
+    local_total: float            # HBM bytes each shard streams
+
+    @property
+    def interconnect_ratio(self) -> float:
+        """Collective bytes / shard-local HBM bytes — how cheap the two
+        sharded-tick collectives are next to the streamed pool slice."""
+        return self.interconnect / max(self.local_total, 1e-9)
+
+
+def sharded_interconnect_bytes(d: int, kv_heads: int, groups: int,
+                               max_blocks: int, n_shards: int,
+                               pool_window: int = 7) -> float:
+    """Collective payload bytes per (slot, layer, tick) of the sharded tick.
+
+    Collective phase 1 (threshold): the binning bounds pmin/pmax (2 f32 per
+    kv head), the pre-pool block-edge halos (2·MB·(w//2) int32), the
+    ADDITIVE 256-bin histogram psum and the per-block kept-count psum
+    (MB int32). Collective phase 2 (merge): the online-softmax partials
+    (m, l: 2 f32; o: d f32 — per query head of the kv group). Every term is
+    O(max_blocks + 256 + d) — independent of context length n, which is the
+    paper's additive-histogram property doing the distributed work. A ring
+    all-reduce moves ~2·(n_shards−1)/n_shards × payload per device; that
+    factor is included."""
+    if n_shards <= 1:
+        return 0.0
+    halo = pool_window // 2
+    per_kv = (2 * 4                       # lo/hi bounds
+              + 2 * max_blocks * halo * 4  # maxpool halo edges (int32 psum)
+              + 256 * 4                    # additive histogram
+              + max_blocks * 4             # kept-count ranks
+              + groups * (2 + d) * 4)      # (m, l, o) softmax merge
+    ring = 2.0 * (n_shards - 1) / n_shards
+    return kv_heads * per_kv * ring
+
+
+def sharded_salca_bytes_per_token(n: int, d: int, kv_heads: int, groups: int,
+                                  s_f: float, retention: float,
+                                  n_shards: int, block_size: int,
+                                  pool_window: int = 7) -> ShardedDecodeBytes:
+    """Per-shard traffic of one sharded paged decode tick.
+
+    The streamed regions divide by the shard count (each shard reads only
+    the feature/K-V blocks it owns); the collectives are context-length-
+    independent, so the interconnect share *shrinks* as contexts grow — the
+    regime the sharded pool exists for."""
+    base = salca_bytes_per_token(n, d, kv_heads, s_f, retention)
+    max_blocks = -(-n // block_size)
+    ic = sharded_interconnect_bytes(d, kv_heads, groups, max_blocks,
+                                    n_shards, pool_window)
+    return ShardedDecodeBytes(
+        local_feature_stream=base.feature_stream / n_shards,
+        local_kv_gather=base.kv_gather / n_shards,
+        interconnect=ic,
+        local_total=base.total / n_shards)

@@ -163,6 +163,43 @@ def dequant_score_chain(q_scale: jax.Array, a: jax.Array, z: jax.Array,
     return rp(rp(qs) * rp(rp(rp(a) * rp(d)) + rp(rp(z) * rp(qm))))
 
 
+SCORE_NEG_INF = -3.0e38     # masked-score sentinel for the binning affine map
+
+
+def masked_scores(scores: jax.Array, valid_mask: jax.Array | None) -> jax.Array:
+    """f32 scores with masked positions at the binning sentinel."""
+    s = scores.astype(jnp.float32)
+    if valid_mask is not None:
+        s = jnp.where(valid_mask, s, jnp.float32(SCORE_NEG_INF))
+    return s
+
+
+def score_bounds(s: jax.Array, axis: int = -1) -> tuple[jax.Array, jax.Array]:
+    """Raw per-row (lo, hi) of masked scores, keepdims dropped.
+
+    `lo` ignores sentinel-masked positions (all-masked rows give +inf — the
+    cleanup lives in `bins_from_bounds` so the distributed path can pmin/pmax
+    these raw partials FIRST and still land on identical bounds: min/max are
+    exact, so a shard-wise reduction of raw bounds == the flat bounds."""
+    lo = jnp.min(jnp.where(s <= SCORE_NEG_INF / 2, jnp.inf, s), axis=axis)
+    hi = jnp.max(s, axis=axis)
+    return lo, hi
+
+
+def bins_from_bounds(s: jax.Array, lo: jax.Array, hi: jax.Array,
+                     valid_mask: jax.Array | None = None) -> jax.Array:
+    """Affine-map masked scores to uint8 bins given (possibly globally
+    reduced) bounds; masked positions land on bin 0. The single definition
+    of the binning arithmetic for the flat AND the sequence-sharded paths —
+    identical bounds in, bit-identical bins out."""
+    lo = jnp.where(jnp.isfinite(lo), lo, 0.0)[..., None]
+    scale = jnp.maximum((hi[..., None] - lo) / 254.0, _EPS)
+    bins = jnp.clip(jnp.round((s - lo) / scale) + 1.0, 1.0, 255.0)
+    if valid_mask is not None:
+        bins = jnp.where(valid_mask, bins, 0.0)
+    return bins.astype(jnp.uint8)
+
+
 def quantize_scores_uint8(scores: jax.Array, valid_mask: jax.Array | None = None,
                           axis: int = -1) -> jax.Array:
     """Map FP scores to INT8 bins [0,255] per row (paper §3.2 phase 1).
@@ -170,18 +207,21 @@ def quantize_scores_uint8(scores: jax.Array, valid_mask: jax.Array | None = None
     Monotone affine map ⇒ relative ordering preserved; masked (invalid)
     positions map to bin 0 so they can never pass a threshold ≥ 1.
     """
-    s = scores.astype(jnp.float32)
-    neg_inf = jnp.float32(-3.0e38)
-    if valid_mask is not None:
-        s = jnp.where(valid_mask, s, neg_inf)
-    lo = jnp.min(jnp.where(s <= neg_inf / 2, jnp.inf, s), axis=axis, keepdims=True)
-    lo = jnp.where(jnp.isfinite(lo), lo, 0.0)
-    hi = jnp.max(s, axis=axis, keepdims=True)
-    scale = jnp.maximum((hi - lo) / 254.0, _EPS)
-    bins = jnp.clip(jnp.round((s - lo) / scale) + 1.0, 1.0, 255.0)
-    if valid_mask is not None:
-        bins = jnp.where(valid_mask, bins, 0.0)
-    return bins.astype(jnp.uint8)
+    if axis != -1:
+        if valid_mask is not None:
+            # Broadcast to the full scores shape BEFORE moving the axis: a
+            # broadcast-shaped mask (e.g. (B, 1, N) against (B, KV, N) with
+            # axis=1) would otherwise have the wrong dimension moved and
+            # misalign silently.
+            valid_mask = jnp.moveaxis(
+                jnp.broadcast_to(valid_mask, scores.shape), axis, -1)
+        scores = jnp.moveaxis(scores, axis, -1)
+    s = masked_scores(scores, valid_mask)
+    lo, hi = score_bounds(s)
+    bins = bins_from_bounds(s, lo, hi, valid_mask)
+    if axis != -1:
+        bins = jnp.moveaxis(bins, -1, axis)
+    return bins
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,23 @@ class SalcaParams:
         return SalcaParams(k=min(k, n), k_cap=min(k_cap, n), **kw)
 
 
+def query_heavy_features(q: jax.Array, heavy_idx: jax.Array,
+                         groups: int) -> jax.Array:
+    """Extract the query's heavy-channel features with each group's kv-head
+    channel set: q (B, H, HD), heavy_idx (B, KV, R) → (B, H, R) f32.
+
+    The other shared phase-1 prologue (before `_quantized_query_groups`):
+    every decode path — flat, paged (fused and gather), and block-sharded —
+    builds its q_feat HERE, so a single definition keeps their scoring
+    operands bit-identical by construction (the sharded-vs-flat parity
+    contract depends on it)."""
+    b, h, hd = q.shape
+    kv, r = heavy_idx.shape[-2], heavy_idx.shape[-1]
+    idx = jnp.broadcast_to(heavy_idx[:, :, None, :], (b, kv, groups, r))
+    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
+    return jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r)
+
+
 def _quantized_query_groups(q_feat: jax.Array, kv: int):
     """Shared phase-1 prologue: group-fold (§Perf it-8) + 3-bit quantization.
 

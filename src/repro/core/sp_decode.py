@@ -27,9 +27,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import histogram_topk as ht
-from repro.core.cache import SalcaCache, _encode_tokens
-from repro.core.maxpool import maxpool1d_reuse
-from repro.core.selection import SalcaParams, estimate_relevance
+from repro.core import quantization as qz
+from repro.core.cache import (
+    PagedSalcaCache, SalcaCache, _encode_tokens, gather_selected_paged,
+    local_block_range)
+from repro.core.maxpool import maxpool1d_blocked_halo, maxpool1d_reuse
+from repro.core.selection import (
+    SalcaParams, estimate_relevance, query_heavy_features)
 from repro.core.attention import gather_selected, NEG_INF
 from repro import compat
 
@@ -140,16 +144,13 @@ def sp_salca_decode(q: jax.Array, cache: SalcaCache, params: SalcaParams,
     b, h, hd = q.shape
     kv = cache.num_kv_heads
     groups = h // kv
-    r = cache.heavy_idx.shape[-1]
     n_local = cache.max_seq
     n_shards = compat.axis_size(axis_name)
     if shard_cap is None:
         shard_cap = min(n_local, max(128, (4 * params.k_cap) // max(n_shards, 1)))
 
     # --- Phase 1: local relevance scores --------------------------------
-    idx = jnp.broadcast_to(cache.heavy_idx[:, :, None, :], (b, kv, groups, r))
-    qg = q.reshape(b, kv, groups, hd).astype(jnp.float32)
-    q_feat = jnp.take_along_axis(qg, idx, axis=-1).reshape(b, h, r)
+    q_feat = query_heavy_features(q, cache.heavy_idx, groups)
     scores = estimate_relevance(q_feat, cache.feat_words, cache.feat_scale,
                                 cache.feat_zero, groups)          # (B,KV,n_local)
     valid = cache.valid_mask()[:, None, :]                        # (B,1,n_local)
@@ -199,3 +200,212 @@ def sp_salca_decode(q: jax.Array, cache: SalcaCache, params: SalcaParams,
     acc_g = jax.lax.psum(acc_l, axis_name)
     out = acc_g / jnp.maximum(l_g, 1e-20)[..., None]
     return out.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Block-sharded paged pool: the physical block dim of a PagedSalcaCache is
+# split across the mesh (shard i owns global block ids [i·P_local,
+# (i+1)·P_local)); page tables, lengths, heavy sets and the refcount stay
+# replicated. A decode tick runs fully shard-locally — each shard scores,
+# bins, pools and exactly-attends over only the blocks it physically holds —
+# around two tiny collective phases:
+#
+#   (1) threshold: pmin/pmax of the binning bounds, a psum of the pre-pool
+#       block-edge columns (the blocked-maxpool halo), a psum of the
+#       ADDITIVE 256-bin histograms (→ one global Top-K threshold), and a
+#       psum of per-block kept counts (→ the global selection rank that
+#       reproduces the flat index-buffer capacity truncation exactly);
+#   (2) merge: the per-shard partial attention (m, l, acc) combined with the
+#       online-softmax pmax/psum identity.
+#
+# Every payload is O(max_blocks + 256 + head_dim) per (slot, kv-head) —
+# independent of context length. The SELECTED TOKEN SET is bit-identical to
+# the unsharded paged decode by construction (exact reductions end to end);
+# outputs differ only by float summation order in the softmax merge, so
+# greedy tokens match (gated by tests/_sharded_pool_check.py).
+# ---------------------------------------------------------------------------
+
+
+def _shard_pool_view(pool: PagedSalcaCache, axis_name):
+    """This shard's ownership view of a block-sharded pool.
+
+    Returns (block_range, owned_blk (S, MB) bool, local_pt (S, MB) int32):
+    which page-table entries resolve into locally-held blocks, and the table
+    translated to local block ids (unowned/unmapped clamp to local block 0 —
+    callers mask through `owned_blk`)."""
+    lo, hi = local_block_range(pool, axis_name)
+    pt = pool.page_table
+    owned_blk = (pt >= lo) & (pt < hi)
+    local_pt = jnp.where(owned_blk, pt - lo, 0)
+    return (lo, hi), owned_blk, local_pt
+
+
+def _local_logical(pool: PagedSalcaCache, local_pt: jax.Array):
+    """Gather a block-indexed pool leaf into logical order from the LOCAL
+    pool: buf (P_local, BS, KV, ·) → (S, L, KV, ·). Unowned blocks read
+    local block 0 (masked by the caller); owned blocks land bit-identical
+    to the flat `paged_logical_features` gather."""
+    s, mb = local_pt.shape
+    l = mb * pool.block_size
+
+    def logical(buf):
+        g = buf[local_pt]                                   # (S, MB, BS, KV, ·)
+        return g.reshape((s, l) + buf.shape[2:])
+
+    return logical
+
+
+def sp_salca_decode_paged(q: jax.Array, pool: PagedSalcaCache,
+                          params: SalcaParams, axis_name,
+                          shard_cap: int | None = None,
+                          return_selection: bool = False):
+    """Salca decode attention over a block-sharded paged pool, in shard_map.
+
+    q: (S, H, HD) replicated; `pool` holds this shard's physical blocks plus
+    replicated metadata (see `models.blocks.paged_cache_pspec`). Composes
+    blocked scoring over locally-mapped blocks → psum'd histogram threshold
+    → local selection → local exact attention → online-softmax merge. The
+    selection (token set, threshold, capacity truncation) is bit-identical
+    to `attention.salca_decode_attention_paged` on the unsharded pool.
+
+    `shard_cap` is the per-shard index-buffer capacity; it defaults to the
+    full `params.k_cap` so that even a maximally skewed placement (every
+    selected block on one shard) drops exactly the tokens the flat path
+    drops, keeping parity unconditional.
+    """
+    s_, h, hd = q.shape
+    kv = pool.num_kv_heads
+    groups = h // kv
+    bs, mb = pool.block_size, pool.max_blocks
+    n = pool.max_seq
+    if shard_cap is None:
+        shard_cap = params.k_cap
+    block_range, owned_blk, local_pt = _shard_pool_view(pool, axis_name)
+    own = jnp.broadcast_to(owned_blk[..., None],
+                           owned_blk.shape + (bs,)).reshape(s_, n)   # (S, L)
+    mask3 = (pool.valid_mask() & own)[:, None, :]                    # (S, 1, L)
+
+    # --- Phase 1: relevance scores over locally-held feature blocks -----
+    q_feat = query_heavy_features(q, pool.heavy_idx, groups)
+    qg = q.reshape(s_, kv, groups, hd).astype(jnp.float32)   # phase-4 operand
+    logical = _local_logical(pool, local_pt)
+    scores = estimate_relevance(q_feat, logical(pool.feat_words),
+                                logical(pool.feat_scale),
+                                logical(pool.feat_zero), groups)     # (S,KV,L)
+
+    # --- Phase 2: globally-consistent INT8 binning ----------------------
+    # Same arithmetic as qz.quantize_scores_uint8, with the raw per-shard
+    # bounds pmin/pmax-merged first (min/max are exact ⇒ identical bounds
+    # ⇒ bit-identical bins at every owned position).
+    sm = qz.masked_scores(scores, mask3)
+    lo_l, hi_l = qz.score_bounds(sm)                                 # (S, KV)
+    lo = jax.lax.pmin(lo_l, axis_name)
+    hi = jax.lax.pmax(hi_l, axis_name)
+    bins = qz.bins_from_bounds(sm, lo, hi, mask3)                    # (S,KV,L)
+
+    # --- Phase 2b: blocked maxpool with psum'd inter-block halos --------
+    if params.use_pool and params.pool_window > 1:
+        w = params.pool_window
+        halo = w // 2
+        blocked = bins.reshape(s_, kv, mb, bs)
+        # Each block's edge columns are nonzero only on its owner, so one
+        # psum reconstructs every block's true pre-pool edges everywhere.
+        edges = jnp.stack([blocked[..., -halo:], blocked[..., :halo]])
+        edges = jax.lax.psum(edges.astype(jnp.int32), axis_name)
+        left, right = edges[0].astype(bins.dtype), edges[1].astype(bins.dtype)
+        zero = jnp.zeros(blocked.shape[:-2] + (1, halo), bins.dtype)
+        from_left = jnp.concatenate([zero, left[..., :-1, :]], axis=-2)
+        from_right = jnp.concatenate([right[..., 1:, :], zero], axis=-2)
+        pooled = maxpool1d_blocked_halo(blocked, w, from_left, from_right)
+        pooled = pooled.reshape(s_, kv, n)
+        pooled = jnp.where(mask3, pooled, jnp.uint8(0))
+    else:
+        pooled = bins
+    if params.sink_tokens or params.recent_tokens:
+        pos = jnp.arange(n)
+        forced = jnp.zeros((n,), bool)
+        if params.sink_tokens:
+            forced |= pos < params.sink_tokens
+        if params.recent_tokens:
+            vm3 = pool.valid_mask()[:, None, :]
+            length = jnp.sum(vm3.astype(jnp.int32), axis=-1, keepdims=True)
+            forced = forced | (pos >= (length - params.recent_tokens))
+        pooled = jnp.where(forced & mask3, jnp.uint8(255), pooled)
+
+    # --- Phase 3: additive histogram psum → threshold; global rank ------
+    hist = jax.lax.psum(ht.histogram256(pooled), axis_name)
+    t = ht.locate_threshold(hist, params.k)                          # (S, KV)
+    keep = pooled >= t[..., None].astype(pooled.dtype)
+    # Flat compact_indices drops selections past k_cap by GLOBAL prefix
+    # rank; reproduce it exactly from psum'd per-block kept counts (each
+    # block's count is nonzero only on its owner) + the local within-block
+    # prefix sum.
+    kb = keep.reshape(s_, kv, mb, bs)
+    blk_counts = jax.lax.psum(jnp.sum(kb.astype(jnp.int32), axis=-1),
+                              axis_name)                             # (S,KV,MB)
+    base = jnp.cumsum(blk_counts, axis=-1) - blk_counts              # exclusive
+    within = jnp.cumsum(kb.astype(jnp.int32), axis=-1) - 1
+    grank = (base[..., None] + within).reshape(s_, kv, n)
+    keep = keep & (grank < params.k_cap)
+    indices, mask, count = ht.compact_indices(keep, shard_cap)
+    sel = ht.Selection(indices, mask, count, t)
+
+    # --- Phase 4: local partial attention + online-softmax merge --------
+    kc, ks, vc, vs = gather_selected_paged(pool, sel, block_range)
+    s = jnp.einsum("bkgd,bkcd->bkgc", qg, kc.astype(jnp.float32))
+    s = s * ks[:, :, None, :] / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+    m_l = jnp.max(s, axis=-1)                                        # (S,KV,G)
+    m_g = jax.lax.pmax(m_l, axis_name)
+    p = jnp.exp(s - m_g[..., None])
+    p = jnp.where(mask[:, :, None, :], p, 0.0)
+    l_l = jnp.sum(p, axis=-1)
+    v = vc.astype(jnp.float32) * vs[..., None]
+    acc_l = jnp.einsum("bkgc,bkcd->bkgd", p, v)
+    l_g = jax.lax.psum(l_l, axis_name)
+    acc_g = jax.lax.psum(acc_l, axis_name)
+    out = (acc_g / jnp.maximum(l_g, 1e-20)[..., None]).reshape(s_, h, hd)
+    if return_selection:
+        return out, sel
+    return out
+
+
+def sp_dense_decode_paged(q: jax.Array, pool: PagedSalcaCache, axis_name,
+                          window: int = 0,
+                          global_pos: jax.Array | None = None) -> jax.Array:
+    """Dense (no selection) decode over a block-sharded paged pool.
+
+    The paged analogue of `sp_dense_decode`: each shard dequantizes only the
+    K/V blocks it holds (unowned logical positions are masked) and the
+    partials merge with the same online-softmax psum. ``window``>0 restricts
+    to the trailing window of ``global_pos`` (per-slot positions) — the
+    sliding-window / dense-oracle path over a sharded pool."""
+    s_, h, hd = q.shape
+    kv = pool.num_kv_heads
+    groups = h // kv
+    n = pool.max_seq
+    _, owned_blk, local_pt = _shard_pool_view(pool, axis_name)
+    own = jnp.broadcast_to(owned_blk[..., None],
+                           owned_blk.shape + (pool.block_size,)).reshape(s_, n)
+    valid = pool.valid_mask() & own
+    if window > 0:
+        assert global_pos is not None
+        pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+        valid = valid & (pos > (global_pos[:, None] - window))
+    logical = _local_logical(pool, local_pt)
+    k = (logical(pool.k_codes).astype(jnp.float32)
+         * logical(pool.k_scale)[..., None])
+    v = (logical(pool.v_codes).astype(jnp.float32)
+         * logical(pool.v_scale)[..., None])
+    qg = q.reshape(s_, kv, groups, hd).astype(jnp.float32)
+    kk = k.transpose(0, 2, 1, 3)                                # (S,KV,L,HD)
+    vv = v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, kk) / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m_g = jax.lax.pmax(jnp.max(s, axis=-1), axis_name)
+    p = jnp.exp(s - m_g[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l_g = jax.lax.psum(jnp.sum(p, axis=-1), axis_name)
+    acc_g = jax.lax.psum(jnp.einsum("bkgs,bksd->bkgd", p, vv), axis_name)
+    out = acc_g / jnp.maximum(l_g, 1e-20)[..., None]
+    return out.reshape(s_, h, hd)

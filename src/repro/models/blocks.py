@@ -60,6 +60,31 @@ def cache_pspec(ctx: "DecodeCtx", axis: Any = None):
         heavy_idx=P(ba, None, None), length=P(ba))
 
 
+def paged_cache_pspec(ctx: "DecodeCtx", axis: Any = None):
+    """PartitionSpec pytree for a block-sharded PagedSalcaCache.
+
+    The physical block dim of every data leaf splits over the decode
+    sequence axes (shard i owns global block ids [i·P_local, (i+1)·P_local)
+    — `core.cache.local_block_range`); the per-slot metadata AND the
+    refcount stay replicated: `append_token_paged` reads the refcount of the
+    cursor's block on every shard to keep the CoW-fault test and the length
+    advance replicated-consistent, and the page table is the (tiny) shared
+    routing structure each shard filters down to its owned entries. Slots
+    are replicated rather than batch-sharded — the pool is one shared
+    structure, so the slot dim of a paged pool cannot split without
+    splitting the free list too (a non-goal: the engine already charges
+    whole slots to shards host-side)."""
+    from jax.sharding import PartitionSpec as P
+    sa = axis if axis is not None else ctx.axis
+    return PagedSalcaCache(
+        k_codes=P(sa, None, None, None), k_scale=P(sa, None, None),
+        v_codes=P(sa, None, None, None), v_scale=P(sa, None, None),
+        feat_words=P(sa, None, None, None), feat_scale=P(sa, None, None),
+        feat_zero=P(sa, None, None),
+        heavy_idx=P(None, None, None), length=P(None),
+        page_table=P(None, None), refcount=P(None))
+
+
 def salca_params_for(cfg: ModelConfig, seq_len: int) -> SalcaParams:
     k = max(128, min(int(seq_len * cfg.salca_retention), cfg.salca_max_k, seq_len))
     k_cap = min(((int(k * 1.25) + 127) // 128) * 128, seq_len)
@@ -259,20 +284,53 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
     if active is not None:
         # Inactive slots: drop the write, treat the slot as holding 0 tokens.
         # (Non-sharded scatters wrap negative indices, so force OOB with
-        # max_seq; the sharded path uses -1, which sp_append_token rejects
-        # explicitly on every shard.)
+        # max_seq; the sharded paths use -1, which sp_append_token and the
+        # paged cursor walk (cur >= 0) reject explicitly on every shard.)
         oob = -1 if ctx.axis is not None else cache.max_seq
         write_pos = jnp.where(active, write_pos, jnp.int32(oob))
         valid_len = jnp.where(active, valid_len, 0)
 
-    if paged:
+    if paged and ctx.axis is not None:
+        # Block-sharded paged pool: each shard holds num_blocks/n_shards
+        # physical blocks (metadata replicated — see `paged_cache_pspec`).
+        # The island appends shard-locally (unowned writes drop; the cursor
+        # walk is replicated-consistent) and decodes with the two-collective
+        # sharded tick: psum'd additive histograms give one global Top-K
+        # threshold, each shard exactly-attends over its locally-mapped
+        # blocks, and the partials merge with the online-softmax psum/pmax
+        # (`sp_decode.sp_salca_decode_paged`). Selection is bit-identical to
+        # the unsharded paged tick; batch stays replicated across the island.
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core.cache import local_block_range
+        from repro.core.sp_decode import (
+            sp_dense_decode_paged, sp_salca_decode_paged)
+        sa = ctx.axis
+
+        def paged_island(q_, k_, v_, wp_, vl_, pos_, pool_):
+            pool_ = append_token_paged(
+                pool_._replace(length=wp_), k_, v_,
+                block_range=local_block_range(pool_, sa))
+            pool_ = pool_._replace(length=vl_)
+            if use_salca:
+                o_ = sp_salca_decode_paged(q_, pool_, salca, sa)
+            else:
+                o_ = sp_dense_decode_paged(q_, pool_, sa, window=window,
+                                           global_pos=pos_)
+            return o_, pool_
+
+        rep3 = P(None, None, None)
+        pspec = paged_cache_pspec(ctx)
+        o, cache = shard_map(
+            paged_island, mesh=ctx.mesh,
+            in_specs=(rep3, rep3, rep3, P(None), P(None), P(None), pspec),
+            out_specs=(rep3, pspec),
+            check_vma=False,
+        )(q, k, v, write_pos, valid_len, pos, cache)
+    elif paged:
         # Paged block pool: the write cursor resolves through the slot's page
         # table (unmapped / out-of-capacity writes are dropped, no silent
-        # clip — the engine grows or overflow-finishes first). Sequence
-        # sharding of the pool is an open item (ROADMAP).
-        if ctx.axis is not None:
-            raise NotImplementedError(
-                "paged KV cache does not support sequence-sharded decode yet")
+        # clip — the engine grows or overflow-finishes first).
         cache = append_token_paged(cache._replace(length=write_pos), k, v)
         cache = cache._replace(length=valid_len)
         if use_salca:

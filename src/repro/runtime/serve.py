@@ -37,6 +37,22 @@ encoded against that set, so aliasing would corrupt selection) — the
 request falls back to private blocks, keeping outputs bit-identical to an
 unshared run in every case.
 
+Sharded page pools (paged mode with a mesh ``ctx``): the physical block
+pool splits across the decode mesh axes — each device owns
+``num_blocks / n_shards`` blocks, a decode tick runs shard-locally around
+two tiny collectives (psum'd additive histograms → one global Top-K
+threshold; online-softmax merge of the per-shard partial attention), and a
+single request's blocks may SPAN shards, so admitted long-context capacity
+scales with shard count at fixed per-device pool size. The engine keeps one
+free list per shard (`ShardedBlockAllocator`): admission charges a
+request's blocks to the least-loaded shards (greedy, most-free first —
+spilling across shards is what lets one context exceed one device's pool);
+decode growth and CoW copies prefer the shard that owns the slot's tail
+block (the appending shard keeps writing locally), falling back to the
+least-loaded shard when it is empty. Outputs are bit-identical to the
+unsharded paged engine — the sharded tick's selection is exact by
+construction (see ``core.sp_decode``).
+
 Latency accounting separates queue wait (submit→admit), TTFT
 (submit→first token, i.e. queue wait + prefill), and decode (per tick and
 per token).
@@ -101,6 +117,71 @@ class Request:
         }
 
 
+class ShardedBlockAllocator:
+    """Host-side per-shard free lists over a block pool whose physical block
+    dim is split into ``n_shards`` contiguous ranges (shard of block ``b`` =
+    ``b // (num_blocks // n_shards)`` — the same ownership rule
+    `core.cache.local_block_range` applies device-side).
+
+    Invariants (property-tested): the per-shard lists are disjoint, every id
+    stays inside its shard's range, no id appears twice, and an allocated
+    block is in no list until released — a physical block can never be
+    handed to two owners or aliased across shards. ``n_shards=1`` reproduces
+    the previous single-free-list behavior exactly.
+    """
+
+    def __init__(self, num_blocks: int, n_shards: int = 1):
+        if num_blocks % n_shards:
+            raise ValueError(f"num_blocks {num_blocks} must divide evenly "
+                             f"across {n_shards} shards")
+        self.num_blocks = num_blocks
+        self.n_shards = n_shards
+        self.blocks_per_shard = num_blocks // n_shards
+        self._free = [list(range(s * self.blocks_per_shard,
+                                 (s + 1) * self.blocks_per_shard))
+                      for s in range(n_shards)]
+
+    def shard_of(self, block: int) -> int:
+        return block // self.blocks_per_shard
+
+    @property
+    def total_free(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def free_counts(self) -> list[int]:
+        return [len(f) for f in self._free]
+
+    def free_ids(self) -> list[int]:
+        """Flat view of every free block id (read-only snapshot)."""
+        return [b for f in self._free for b in f]
+
+    def alloc(self, need: int, prefer: int | None = None) -> list[int] | None:
+        """Pop ``need`` blocks, or None (nothing popped) if the pool can't
+        cover them. ``prefer`` drains that shard first — growth/CoW locality
+        (the shard owning a slot's tail keeps its writes local); otherwise
+        blocks come from the least-loaded shards (most free first), spilling
+        across shards so one request can exceed one shard's pool."""
+        if need > self.total_free:
+            return None
+        order = sorted(range(self.n_shards), key=lambda s: -len(self._free[s]))
+        if prefer is not None:
+            order = [prefer] + [s for s in order if s != prefer]
+        out: list[int] = []
+        for s in order:
+            while self._free[s] and len(out) < need:
+                out.append(self._free[s].pop())
+            if len(out) == need:
+                break
+        return out
+
+    def release(self, block: int) -> None:
+        self._free[self.shard_of(block)].append(block)
+
+    def take(self, block: int) -> None:
+        """Remove a specific id from its shard's list (tests/simulation)."""
+        self._free[self.shard_of(block)].remove(block)
+
+
 @dataclass
 class ServeStats:
     prefill_s: float = 0.0
@@ -120,6 +201,9 @@ class ServeStats:
     block_size: int = 0
     blocks_in_use: int = 0
     peak_blocks_in_use: int = 0
+    # Sharded-pool bookkeeping (1 / 0 unless the pool is mesh-sharded):
+    shards: int = 1
+    peak_shard_blocks_in_use: int = 0   # hottest single shard at peak
     # Prefix sharing (zero unless prefix_sharing=True):
     shared_blocks: int = 0     # blocks admitted by reference instead of copy
     cow_copies: int = 0        # shared blocks privatized on first write
@@ -147,6 +231,12 @@ class ServeStats:
             out["peak_blocks_in_use"] = self.peak_blocks_in_use
             out["block_utilization"] = round(
                 self.peak_blocks_in_use / self.block_pool_size, 3)
+            if self.shards > 1:
+                out["shards"] = self.shards
+                out["peak_shard_blocks_in_use"] = self.peak_shard_blocks_in_use
+                out["shard_block_utilization"] = round(
+                    self.peak_shard_blocks_in_use
+                    / (self.block_pool_size // self.shards), 3)
             out["shared_blocks"] = self.shared_blocks
             out["cow_copies"] = self.cow_copies
             out["prefix_hits"] = self.prefix_hits
@@ -181,6 +271,13 @@ class ServingEngine:
     the global ``flags.PERF.paged_fused_decode`` switch. Outputs are
     bit-identical between the two paths (same selection; greedy tokens
     match), so the knob is purely a performance/benchmarking control.
+
+    A paged engine given a mesh ``ctx`` (``ctx.axis`` set) shards the block
+    pool across the mesh: ``num_blocks`` is the GLOBAL pool (must divide
+    evenly across the shards) and each device holds
+    ``num_blocks / n_shards`` blocks, so a context larger than one device's
+    pool spans shards and still decodes shard-locally (module docstring;
+    the per-shard free lists live in `ShardedBlockAllocator`).
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, max_seq: int,
@@ -197,6 +294,7 @@ class ServingEngine:
         self.greedy = greedy
         self.api = get_model(cfg)
         self.paged = paged
+        self.n_shards = 1           # pool shards (paged + mesh ctx only)
         self.stats = ServeStats()
         self._rng = np.random.default_rng(seed)
         self._queue: deque[Request] = deque()
@@ -225,7 +323,16 @@ class ServingEngine:
             self.num_blocks = num_blocks or slots * self.max_blocks
             self.stats.block_pool_size = self.num_blocks
             self.stats.block_size = block_size
-            self._free_blocks: list[int] = list(range(self.num_blocks))
+            # Mesh-sharded pool: one free list per shard; the device-side
+            # ownership rule (contiguous global-id ranges) and this host-side
+            # split agree by construction.
+            self.n_shards = self._mesh_shards(ctx)
+            if self.num_blocks % self.n_shards:
+                raise ValueError(
+                    f"num_blocks {self.num_blocks} must split evenly across "
+                    f"{self.n_shards} pool shards")
+            self.stats.shards = self.n_shards
+            self._alloc = ShardedBlockAllocator(self.num_blocks, self.n_shards)
             self._slot_blocks: dict[int, list[int]] = {}
             self._slot_pos: dict[int, int] = {}     # next write position
             # Host mirror of the per-block refcount (the device arrays carry
@@ -249,7 +356,15 @@ class ServingEngine:
         # ``fused_decode`` pins the paged decode data path for this engine
         # (None → follow the global PERF.paged_fused_decode flag). The flag
         # is read at trace time, so wrapping the tick trace is sufficient —
-        # jit caches the traced program.
+        # jit caches the traced program. A mesh-sharded pool has no fused
+        # path yet (the sharded island always takes the XLA gather path —
+        # ROADMAP follow-on), so pinning it there would be a silent no-op:
+        # reject instead of misleading a benchmark.
+        if fused_decode is not None and paged and self.n_shards > 1:
+            raise ValueError(
+                "fused_decode cannot be pinned on a mesh-sharded paged pool: "
+                "the sharded decode island always uses the XLA gather path "
+                "(leave fused_decode=None)")
         self.fused_decode = fused_decode
 
         def _tick_fn(p, s, tok, act):
@@ -271,6 +386,23 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, toks: self.api.prefill(p, {"tokens": toks}, self.max_seq))
         self._reset = jax.jit(self.api.reset_slot, donate_argnums=dn)
+
+    @staticmethod
+    def _mesh_shards(ctx: DecodeCtx | None) -> int:
+        """Pool shard count = product of the mesh sizes of ctx.axis."""
+        if ctx is None or ctx.axis is None or ctx.mesh is None:
+            return 1
+        axes = ctx.axis if isinstance(ctx.axis, (tuple, list)) else (ctx.axis,)
+        n = 1
+        for a in axes:
+            n *= ctx.mesh.shape[a]
+        return n
+
+    @property
+    def _free_blocks(self) -> list[int]:
+        """Flat free-block snapshot (kept for tests/introspection; mutations
+        go through `self._alloc`)."""
+        return self._alloc.free_ids()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -296,9 +428,14 @@ class ServingEngine:
         return max(1, -(-tokens // self.block_size))
 
     def _note_block_usage(self) -> None:
-        used = self.num_blocks - len(self._free_blocks)
+        used = self.num_blocks - self._alloc.total_free
         self.stats.blocks_in_use = used
         self.stats.peak_blocks_in_use = max(self.stats.peak_blocks_in_use, used)
+        if self.n_shards > 1:
+            hot = max(self._alloc.blocks_per_shard - f
+                      for f in self._alloc.free_counts())
+            self.stats.peak_shard_blocks_in_use = max(
+                self.stats.peak_shard_blocks_in_use, hot)
 
     def _sample(self, req: Request, logits_row: np.ndarray) -> int:
         """Per-slot sampling from a (V_pad,) logits row."""
@@ -400,7 +537,7 @@ class ServingEngine:
             self._refcount[b] -= 1
             assert self._refcount[b] >= 0, f"block {b} refcount underflow"
             if self._refcount[b] == 0:
-                self._free_blocks.append(b)
+                self._alloc.release(b)      # back to its owner shard's list
                 key = self._block_keys.pop(b, None)
                 if key is not None:
                     self._prefix_nodes.pop(key, None)
@@ -432,7 +569,7 @@ class ServingEngine:
                 shared_ids: list[int] = []
                 if self.prefix_sharing:
                     cand = self._match_tokens(req)
-                    if need_full - len(cand) > len(self._free_blocks):
+                    if need_full - len(cand) > self._alloc.total_free:
                         break              # can't cover even if fully gated in
                     if req.admitted is None:
                         req.admitted = t0  # gate prefill follows: work begins
@@ -447,11 +584,11 @@ class ServingEngine:
                             break
                         shared_ids.append(block)
                 need = need_full - len(shared_ids)
-                if need > len(self._free_blocks):
+                fresh = self._alloc.alloc(need)   # least-loaded shards first
+                if fresh is None:
                     break                  # wait for blocks to free up
                 n_shared = len(shared_ids)
-                blocks = shared_ids + [self._free_blocks.pop()
-                                       for _ in range(need)]
+                blocks = shared_ids + fresh
                 pages = np.full((self.max_blocks,), -1, np.int32)
                 pages[:need_full] = blocks
             self._queue.popleft()
@@ -526,8 +663,13 @@ class ServingEngine:
                 if pos < self.max_seq and logical < len(held) \
                         and self._refcount[held[logical]] <= 1:
                     continue                       # private capacity in place
-                if pos < self.max_seq and self._free_blocks:
-                    blk = self._free_blocks.pop()
+                if pos < self.max_seq and self._alloc.total_free:
+                    # Growth continues the slot's tail; CoW privatizes the
+                    # faulted block. Either way, prefer the shard already
+                    # holding that block so the appending shard keeps its
+                    # writes local (falls back to the least-loaded shard).
+                    near = held[logical] if logical < len(held) else held[-1]
+                    blk = self._alloc.alloc(1, prefer=self._alloc.shard_of(near))[0]
                     self._refcount[blk] += 1       # 0 → 1
                     if logical == len(held):       # growth: map a fresh block
                         held.append(blk)

@@ -92,14 +92,18 @@ def _cache_spec(mesh: Mesh, cache: SalcaCache, dp, seq, lead: int) -> SalcaCache
 
 def _paged_cache_spec(mesh: Mesh, cache: PagedSalcaCache, dp, seq,
                       lead: int) -> PagedSalcaCache:
-    """Placement specs for a paged pool inside a pooled decode state.
+    """Placement specs for a block-sharded paged pool in a decode state.
 
-    NOTE: sequence-sharded paged *decode* is not implemented yet —
-    `models.blocks._attn_decode` raises for a paged cache with `ctx.axis`
-    set (ROADMAP: sharded page pools). These specs exist so state-spec
-    construction doesn't crash on paged states and record the intended
-    layout for that follow-on: physical block dim over the decode sequence
-    axes, per-slot metadata over the batch/DP axes."""
+    The physical block dim of every data leaf splits over the decode
+    sequence axes — shard i *owns* global block ids [i·P_local,
+    (i+1)·P_local) and the decode tick resolves pages shard-locally
+    (`models.blocks._attn_decode` routes the paged branch through shard_map
+    with `paged_cache_pspec`; `core.sp_decode.sp_salca_decode_paged` is the
+    tick). Per-slot metadata and the refcount stay replicated: the island
+    reads the cursor block's refcount on every shard so the CoW-fault test
+    and the length advance are replicated-consistent (both structures are
+    O(slots·max_blocks + num_blocks) int32 — noise next to the pool)."""
+    del dp
     ld = (None,) * lead
 
     def fs(spec, leaf):
@@ -113,10 +117,10 @@ def _paged_cache_spec(mesh: Mesh, cache: PagedSalcaCache, dp, seq,
         feat_words=fs((seq, None, None, None), cache.feat_words),
         feat_scale=fs((seq, None, None), cache.feat_scale),
         feat_zero=fs((seq, None, None), cache.feat_zero),
-        heavy_idx=fs((dp, None, None), cache.heavy_idx),
-        length=fs((dp,), cache.length),
-        page_table=fs((dp, None), cache.page_table),
-        refcount=fs((seq,), cache.refcount),
+        heavy_idx=fs((None, None, None), cache.heavy_idx),
+        length=fs((None,), cache.length),
+        page_table=fs((None, None), cache.page_table),
+        refcount=fs((None,), cache.refcount),
     )
 
 
@@ -225,15 +229,21 @@ def decode_sharding_ctx(cfg: ModelConfig, plan: MeshPlan, bdp,
 
 
 def _decode_step_builder(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
-                         masked: bool):
+                         masked: bool, paged: bool = False,
+                         block_size: int = 32, num_blocks: int | None = None):
     """Shared plumbing for the plain and active-masked decode steps: same
     sharding contexts, state specs, and jit wiring — `masked` only threads
-    the (B,) active-slot mask through as a fourth argument."""
+    the (B,) active-slot mask through as a fourth argument, and `paged`
+    builds the state shapes/specs for a block-sharded paged pool (physical
+    block dim over the decode sequence axes) instead of dense slot stripes."""
     api = get_model(cfg)
     bdp, seq_axes = plan.decode_axes(shape.global_batch)
     dctx = DecodeCtx(axis=seq_axes, mesh=plan.mesh, batch_axes=bdp,
                      self_axis=plan.tp if cfg.encdec else None)
     sctx = decode_sharding_ctx(cfg, plan, bdp, shape.global_batch)
+    if paged and api.init_paged_state is None:
+        raise ValueError(f"{cfg.name}: paged serving not supported "
+                         "for this model family")
 
     def step(params, state, token, active=None):
         with activation_sharding(sctx):
@@ -244,9 +254,15 @@ def _decode_step_builder(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
 
     def shapes():
         pshape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
-        sshape = jax.eval_shape(
-            lambda: api.init_state(shape.global_batch, shape.seq_len,
-                                   prefill_len=shape.seq_len - 1))
+        if paged:
+            nb = num_blocks or shape.global_batch * (shape.seq_len // block_size)
+            sshape = jax.eval_shape(
+                lambda: api.init_paged_state(shape.global_batch, shape.seq_len,
+                                             block_size, nb))
+        else:
+            sshape = jax.eval_shape(
+                lambda: api.init_state(shape.global_batch, shape.seq_len,
+                                       prefill_len=shape.seq_len - 1))
         pspec = param_specs(sctx, pshape)
         sspec = state_specs(plan.mesh, sshape, bdp, seq_axes, plan.tp)
         tokspec = fit_spec(plan.mesh, P(bdp), (shape.global_batch,))
@@ -270,7 +286,9 @@ def make_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):
     return _decode_step_builder(cfg, plan, shape, masked=False)
 
 
-def make_serve_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):
+def make_serve_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
+                           paged: bool = False, block_size: int = 32,
+                           num_blocks: int | None = None):
     """Slot-pooled serving tick:
     serve_step(params, state, token, active) → (next_token, logits, state).
 
@@ -278,8 +296,17 @@ def make_serve_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig)
     active-slot mask: the batch dimension is a pool of request slots and one
     call advances every active slot at once (inactive slots compute but
     neither write their caches nor move their cursors — shapes stay static,
-    so the serving engine pays exactly one pjit dispatch per tick)."""
-    return _decode_step_builder(cfg, plan, shape, masked=True)
+    so the serving engine pays exactly one pjit dispatch per tick).
+
+    ``paged=True`` builds the mesh-sharded *paged* tick instead: the state's
+    attention caches are one physical block pool per layer, sharded on the
+    block dim across the decode sequence axes (`_paged_cache_spec`), and the
+    decode step runs the shard-local paged island (two tiny collectives per
+    layer: the additive-histogram threshold psum and the online-softmax
+    merge). ``num_blocks`` defaults to the dense-equivalent budget
+    (slots × max_seq tokens); pass less — that is the point of paging."""
+    return _decode_step_builder(cfg, plan, shape, masked=True, paged=paged,
+                                block_size=block_size, num_blocks=num_blocks)
 
 
 def make_prefill_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):

@@ -158,8 +158,8 @@ def test_engine_release_double_free_regression(model_params):
     engine = ServingEngine(CFG, model_params, max_seq=MAX_SEQ, slots=2,
                            paged=True, block_size=BS, num_blocks=6)
     # Simulate an admitted slot holding two blocks, one of them shared.
-    engine._free_blocks.remove(0)
-    engine._free_blocks.remove(1)
+    engine._alloc.take(0)
+    engine._alloc.take(1)
     engine._refcount[0] = 2                     # shared with another slot
     engine._refcount[1] = 1
     engine._slot_blocks[0] = [0, 1]

@@ -1,0 +1,290 @@
+"""Sequence-sharded paged block pools: shard-local resolution & free lists.
+
+Covers the host/device substrate of the sharded-pool refactor:
+
+  * property suite (hypothesis when available, plus a deterministic
+    fallback): shard-local page resolution (`_resolve_pages` with a
+    ``block_range``) over scrambled shard-block assignments composes to the
+    flat `resolve_logical_rows` result — every mapped logical index is
+    claimed by EXACTLY one shard and its local resolution denormalizes to
+    the flat physical row;
+  * per-shard free lists (`ShardedBlockAllocator`) never alias a physical
+    block across shards: lists stay disjoint, in-range, duplicate-free and
+    disjoint from allocated blocks under random alloc/release interleavings;
+  * shard-aware `map_block` / `free_pages`: per-shard localized refcount
+    updates concatenate to the global op's refcount;
+  * shard-local `append_token_paged` (``block_range``) composes to the
+    bit-identical global append;
+  * the multi-device battery (8 forced host devices, subprocess): island
+    selection/threshold parity, 1/2/4/8-shard engine greedy parity incl.
+    prefix sharing + CoW, shard-spanning contexts, and the mesh-sharded
+    paged serving step — see `_sharded_pool_check.py`.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import empty_paged_cache
+from repro.core.cache import (
+    _resolve_pages, append_token_paged, free_pages, map_block,
+    resolve_logical_rows)
+from repro.runtime.serve import ShardedBlockAllocator
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:            # container without hypothesis: fallback only
+    HAVE_HYPOTHESIS = False
+
+NUM_BLOCKS, BS, SLOTS, MB = 16, 4, 3, 6
+
+
+def _pool_with_table(table: np.ndarray):
+    pool = empty_paged_cache(NUM_BLOCKS, BS, SLOTS, MB, kv_heads=2,
+                             head_dim=16, r=16)
+    return pool._replace(page_table=jnp.asarray(table, jnp.int32))
+
+
+def _shard_ranges(n_shards: int):
+    per = NUM_BLOCKS // n_shards
+    return [(s * per, (s + 1) * per) for s in range(n_shards)]
+
+
+def _check_resolution_composes(table: np.ndarray, idx: np.ndarray,
+                               n_shards: int) -> None:
+    """Per-shard local-or-sentinel resolutions == the flat resolution."""
+    pool = _pool_with_table(table)
+    jidx = jnp.asarray(idx, jnp.int32)
+    rows = np.asarray(resolve_logical_rows(pool, jidx))
+    _, _, flat_mapped = _resolve_pages(pool, jidx)
+    flat_mapped = np.asarray(flat_mapped)
+    owners = np.zeros(idx.shape, np.int32)
+    for lo, hi in _shard_ranges(n_shards):
+        pg, off, mapped = _resolve_pages(pool, jidx, (lo, hi))
+        pg, off, mapped = map(np.asarray, (pg, off, mapped))
+        owners += mapped.astype(np.int32)
+        # The owner's LOCAL page + its range base lands on the flat row.
+        local_rows = (pg + lo) * BS + off
+        np.testing.assert_array_equal(local_rows[mapped], rows[mapped])
+        # Local page ids stay inside the shard's slice.
+        assert (pg[mapped] < hi - lo).all() and (pg[mapped] >= 0).all()
+    # Exactly one shard claims each mapped index; none claim unmapped ones.
+    np.testing.assert_array_equal(owners, flat_mapped.astype(np.int32))
+
+
+def test_resolution_composes_deterministic():
+    master = np.random.default_rng(11)
+    for n_shards in (1, 2, 4, 8):
+        for _ in range(4):
+            table = master.integers(-1, NUM_BLOCKS, (SLOTS, MB))
+            idx = master.integers(0, MB * BS, (SLOTS, 2, 7))
+            _check_resolution_composes(table, idx, n_shards)
+
+
+def _check_allocator(ops, n_shards: int) -> None:
+    alloc = ShardedBlockAllocator(NUM_BLOCKS, n_shards)
+    held: set[int] = set()
+    for kind, a, b in ops:
+        if kind % 2 == 0:
+            got = alloc.alloc(a % (NUM_BLOCKS + 2),
+                              prefer=(b % n_shards) if b % 3 else None)
+            if got is None:
+                assert a % (NUM_BLOCKS + 2) > NUM_BLOCKS - len(held)
+            else:
+                assert len(got) == a % (NUM_BLOCKS + 2)
+                assert not (set(got) & held), "block handed to two owners"
+                held |= set(got)
+        elif held:
+            blk = sorted(held)[a % len(held)]
+            held.remove(blk)
+            alloc.release(blk)
+        # Invariants: disjoint per-shard lists, in-range, no dupes, free ∩
+        # held = ∅, conservation.
+        ids = alloc.free_ids()
+        assert len(ids) == len(set(ids)), "free-list duplicate"
+        assert not (set(ids) & held), "free ∩ allocated ≠ ∅"
+        assert len(ids) + len(held) == NUM_BLOCKS
+        for s, (lo, hi) in enumerate(_shard_ranges(n_shards)):
+            shard_ids = alloc._free[s]
+            assert all(lo <= x < hi for x in shard_ids), \
+                f"shard {s} list holds a foreign block"
+            assert all(alloc.shard_of(x) == s for x in shard_ids)
+        assert alloc.total_free == len(ids)
+
+
+def test_allocator_never_aliases_deterministic():
+    master = np.random.default_rng(5)
+    for n_shards in (1, 2, 4):
+        for _ in range(6):
+            ops = [tuple(master.integers(0, 64, 3).tolist())
+                   for _ in range(20)]
+            _check_allocator(ops, n_shards)
+
+
+def test_allocator_single_shard_matches_legacy_order():
+    """n_shards=1 must reproduce the old single-list pop()/append order so
+    unsharded engines allocate identically to previous releases."""
+    alloc = ShardedBlockAllocator(8, 1)
+    legacy = list(range(8))
+    assert alloc.alloc(3) == [legacy.pop(), legacy.pop(), legacy.pop()]
+    alloc.release(5)
+    legacy.append(5)
+    assert alloc.alloc(1) == [legacy.pop()]
+    assert alloc.free_ids() == legacy
+
+
+def test_allocator_prefers_tail_shard_then_least_loaded():
+    alloc = ShardedBlockAllocator(16, 4)          # 4 blocks per shard
+    first = alloc.alloc(2, prefer=2)
+    assert all(alloc.shard_of(b) == 2 for b in first)
+    # Shard 2 has 2 free; least-loaded spill drains others before it.
+    spill = alloc.alloc(14)
+    assert sorted(first + spill) == list(range(16))
+    # Preferred shard empty → falls back to the least loaded.
+    for b in range(16):
+        alloc.release(b)
+    alloc._free[1] = []
+    got = alloc.alloc(1, prefer=1)
+    assert got is not None and alloc.shard_of(got[0]) != 1
+
+
+def _check_refcount_composes(table: np.ndarray, op: str, slot: int,
+                             logical: int, page: int, n_shards: int) -> None:
+    pool = _pool_with_table(table)
+    # Seed a refcount consistent with the table.
+    pt = np.asarray(pool.page_table)
+    rc = np.bincount(pt[pt >= 0], minlength=NUM_BLOCKS).astype(np.int32)
+    pool = pool._replace(refcount=jnp.asarray(rc))
+    if op == "map":
+        ref = map_block(pool, slot, logical, page)
+    else:
+        ref = free_pages(pool, slot)
+    parts = []
+    for lo, hi in _shard_ranges(n_shards):
+        local = pool._replace(refcount=pool.refcount[lo:hi])
+        if op == "map":
+            out = map_block(local, slot, logical, page, block_range=(lo, hi))
+        else:
+            out = free_pages(local, slot, block_range=(lo, hi))
+        parts.append(np.asarray(out.refcount))
+        # Replicated metadata updates agree with the global op everywhere.
+        np.testing.assert_array_equal(np.asarray(out.page_table),
+                                      np.asarray(ref.page_table))
+    np.testing.assert_array_equal(np.concatenate(parts),
+                                  np.asarray(ref.refcount))
+
+
+def test_shard_aware_map_free_refcounts_compose_deterministic():
+    master = np.random.default_rng(23)
+    for n_shards in (1, 2, 4):
+        for _ in range(4):
+            table = master.integers(-1, NUM_BLOCKS, (SLOTS, MB))
+            _check_refcount_composes(table, "map",
+                                     int(master.integers(SLOTS)),
+                                     int(master.integers(MB)),
+                                     int(master.integers(NUM_BLOCKS)), n_shards)
+            _check_refcount_composes(table, "free",
+                                     int(master.integers(SLOTS)), 0, 0,
+                                     n_shards)
+
+
+def test_shard_local_append_composes(rng):
+    """Per-shard appends (unowned writes drop) concatenate to the global
+    jitted append bitwise, including the replicated length advance."""
+    table = np.full((SLOTS, MB), -1, np.int64)
+    perm = rng.permutation(NUM_BLOCKS)
+    lengths = [9, 4, 17]
+    used = 0
+    for s, t in enumerate(lengths):
+        need = -(-(t + 1) // BS)
+        table[s, :need] = perm[used:used + need]
+        used += need
+    pool = _pool_with_table(table)
+    pool = pool._replace(length=jnp.asarray(lengths, jnp.int32))
+    k = jnp.asarray(rng.normal(size=(SLOTS, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(SLOTS, 2, 16)), jnp.float32)
+    ref = jax.jit(append_token_paged)(pool, k, v)
+    for n_shards in (2, 4):
+        parts = []
+        for lo, hi in _shard_ranges(n_shards):
+            local = pool._replace(
+                **{f: getattr(pool, f)[lo:hi]
+                   for f in ("k_codes", "k_scale", "v_codes", "v_scale",
+                             "feat_words", "feat_scale", "feat_zero")})
+            out = jax.jit(append_token_paged, static_argnames="block_range")(
+                local, k, v, block_range=(lo, hi))
+            parts.append(out)
+            np.testing.assert_array_equal(np.asarray(out.length),
+                                          np.asarray(ref.length))
+        for f in ("k_codes", "k_scale", "v_codes", "v_scale",
+                  "feat_words", "feat_scale", "feat_zero"):
+            np.testing.assert_array_equal(
+                np.concatenate([np.asarray(getattr(p, f)) for p in parts]),
+                np.asarray(getattr(ref, f)), err_msg=f)
+
+
+def test_local_block_range_matches_host_rule():
+    """Device-side ownership (contiguous [i·P_local, (i+1)·P_local) ranges —
+    what `local_block_range` computes from axis_index inside shard_map; the
+    subprocess battery exercises it on a real mesh) == the allocator's
+    host-side `shard_of` rule, for every shard of every even split."""
+    for n_shards in (1, 2, 4, 8):
+        alloc = ShardedBlockAllocator(NUM_BLOCKS, n_shards)
+        per = NUM_BLOCKS // n_shards
+        for s, (lo, hi) in enumerate(_shard_ranges(n_shards)):
+            assert (s * per, (s + 1) * per) == (lo, hi)
+            for b in range(lo, hi):
+                assert alloc.shard_of(b) == s
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=120, derandomize=True, deadline=None)
+    @given(table=hst.lists(hst.lists(hst.integers(-1, NUM_BLOCKS - 1),
+                                     min_size=MB, max_size=MB),
+                           min_size=SLOTS, max_size=SLOTS),
+           idx=hst.lists(hst.integers(0, MB * BS - 1), min_size=6, max_size=6),
+           n_shards=hst.sampled_from([1, 2, 4, 8]))
+    def test_resolution_composes_hypothesis(table, idx, n_shards):
+        _check_resolution_composes(
+            np.asarray(table), np.asarray(idx).reshape(SLOTS, 2, 1), n_shards)
+
+    @settings(max_examples=120, derandomize=True, deadline=None)
+    @given(ops=hst.lists(hst.tuples(hst.integers(0, 63), hst.integers(0, 63),
+                                    hst.integers(0, 63)),
+                         min_size=1, max_size=24),
+           n_shards=hst.sampled_from([1, 2, 4]))
+    def test_allocator_never_aliases_hypothesis(ops, n_shards):
+        _check_allocator(ops, n_shards)
+
+    @settings(max_examples=60, derandomize=True, deadline=None)
+    @given(table=hst.lists(hst.lists(hst.integers(-1, NUM_BLOCKS - 1),
+                                     min_size=MB, max_size=MB),
+                           min_size=SLOTS, max_size=SLOTS),
+           slot=hst.integers(0, SLOTS - 1), logical=hst.integers(0, MB - 1),
+           page=hst.integers(0, NUM_BLOCKS - 1),
+           n_shards=hst.sampled_from([2, 4]))
+    def test_refcount_composes_hypothesis(table, slot, logical, page, n_shards):
+        _check_refcount_composes(np.asarray(table), "map", slot, logical,
+                                 page, n_shards)
+        _check_refcount_composes(np.asarray(table), "free", slot, 0, 0,
+                                 n_shards)
+
+
+@pytest.mark.slow
+def test_sharded_pool_multi_device_subprocess():
+    """8 forced host devices: island selection/output parity, engine greedy
+    parity on 1/2/4/8 shards (incl. prefix sharing + CoW), shard-spanning
+    admission, and the mesh-sharded paged serving step."""
+    script = os.path.join(os.path.dirname(__file__), "_sharded_pool_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "sharded paged pool: ALL OK" in out.stdout
