@@ -5,6 +5,14 @@ Query, then Query widths {1..4-bit sym} at 2-bit-asym Key, measuring ranking
 fidelity = overlap of the top-10% selection against the full-precision
 selection (the paper's criterion). Expected (and asserted in tests):
 k_2_asy ≈ baseline ≫ k_2_sym, k_1; q_3 ≈ q_4 ≫ q_2, q_1.
+
+A second axis sweeps the *paged pool's* exact-K/V storage precision
+(``kv_pool_dtype`` ∈ {fp16, int8, int4}): the end-to-end reduced model
+decodes teacher-forced on the fp16 pool's greedy stream, reporting greedy
+top-1 agreement and max logit drift per mode against the fp16 pool. The
+selection is identical across modes by construction (the 2-bit feature
+stream is precision-independent), so the drift isolates the exact-attention
+tier's storage error.
 """
 
 from __future__ import annotations
@@ -71,7 +79,68 @@ def run(seed: int = 0, T: int = 2048, s_f: float = 0.5) -> list[str]:
             qq = qz.sym_dequantize(qz.sym_quantize(qf, bits))
         s = jnp.einsum("bkgr,bktr->bkt", qq, k2)
         out.append(f"table7_quant,q_{bits}_sym,{_overlap_topfrac(baseline, s):.3f}")
+
+    out.extend(_kv_pool_rows(seed, T))
     return out
+
+
+def _kv_pool_rows(seed: int, T: int, steps: int = 8) -> list[str]:
+    """KV-pool-precision axis: greedy top-1 agreement + max logit drift of
+    each pool storage mode vs the fp16 pool, teacher-forced on the fp16
+    pool's greedy tokens (so logits are comparable position by position).
+    Runs at f32 compute so every greedy decision is strictly decided."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              dtype="float32")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    bs = 16
+    plen = max(bs, min(96, T // 2))
+    max_seq = -(-(plen + steps) // bs) * bs
+    nb = max_seq // bs
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    logits0, state1 = api.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                                  max_seq)
+    tok0 = int(np.argmax(np.asarray(logits0)[0]))
+
+    def decode_logits(dt, forced):
+        """Per-step logits rows; `forced` is the token stream to feed
+        (None → free-running greedy, returning its own stream)."""
+        capi = get_model(dataclasses.replace(cfg, kv_pool_dtype=dt))
+        pool = capi.init_paged_state(1, max_seq, bs, nb)
+        pages = np.full((nb,), -1, np.int32)
+        used = -(-plen // bs)
+        pages[:used] = np.arange(used)
+        pool = capi.write_into_pages(pool, state1, jnp.int32(0),
+                                     jnp.asarray(pages), jnp.int32(0))
+        tok, logs, stream = tok0, [], []
+        for s in range(steps):
+            logits, pool = capi.decode_step(params, pool,
+                                            jnp.asarray([tok], np.int32),
+                                            None, jnp.asarray([True]))
+            row = np.asarray(logits)[0].astype(np.float64)
+            logs.append(row)
+            tok = forced[s] if forced is not None else int(np.argmax(row))
+            stream.append(int(np.argmax(row)))
+        return logs, stream
+
+    ref_logs, ref_stream = decode_logits("fp16", None)
+    rows = ["kv_pool,dtype,top1_agree,max_logit_drift"]
+    rows.append("kv_pool,fp16,1.000,0.0000")
+    for dt in ("int8", "int4"):
+        logs, _ = decode_logits(dt, ref_stream)
+        agree = float(np.mean([int(np.argmax(a)) == int(np.argmax(b))
+                               for a, b in zip(ref_logs, logs)]))
+        drift = float(max(np.abs(a - b).max() for a, b in zip(ref_logs, logs)))
+        rows.append(f"kv_pool,{dt},{agree:.3f},{drift:.4f}")
+    return rows
 
 
 def main() -> None:

@@ -34,7 +34,17 @@ Three sweeps:
    on CPU the two land within noise of each other (XLA folds the gather
    path's transposes), so the timing rows are informational there.
 
-5. **Sharded-pool sweep** — the block pool split across 1/2/4 mesh shards
+5. **Capacity sweep** — admitted concurrency at a FIXED HBM byte budget:
+   the budget buys ~1.7x the pool blocks at int8 storage than at fp16, so
+   with requests sized in whole blocks the int8 pool admits ≥ 2x the
+   concurrent requests (RAISES below 2x) with bit-identical greedy outputs
+   (RAISES on mismatch; runs at f32 logits so greedy is strictly decided).
+   A third engine adds the host tier (``host_spill=True``) and lifts
+   concurrency to the slot count, completing every request with zero
+   overflows (RAISES otherwise) — its predicted PCIe bytes print next to
+   the measured decode seconds.
+
+6. **Sharded-pool sweep** — the block pool split across 1/2/4 mesh shards
    at a FIXED per-device pool size, long-context requests whose block
    count exceeds half of one shard's slice. Admitted concurrency must
    scale ~linearly with shard count (the sweep RAISES below 3x at 4
@@ -259,6 +269,109 @@ def _fused_sweep(cfg, params, smoke: bool):
         raise RuntimeError("fused paged decode broke greedy-output parity")
 
 
+def _capacity_sweep(cfg, params, smoke: bool):
+    """Tiered-KV capacity: admitted concurrency at a FIXED HBM byte budget,
+    fp16 pool vs int8 pool vs int8 pool + host spill.
+
+    The budget buys `num_blocks = budget_bytes // block_bytes(dtype)` pool
+    blocks, so the int8 pool holds ~1.7x the blocks of the fp16 pool at the
+    same bytes; with requests sized to 5 blocks over their lifetime the
+    fp16 pool admits 1 concurrent request and the int8 pool 3 (integer
+    block math — the ≥ 2x acceptance gate). Adding the host tier lifts
+    concurrency to the slot count: demand beyond the device pool spills.
+    Gates (RAISE → benchmarks/run.py exits 1): int8-vs-fp16 greedy outputs
+    bit-identical, int8 gain ≥ 2x, and the spill engine completes every
+    request with zero overflows. The spill row also prints the predicted
+    PCIe bytes next to the measured decode tick time (perf-model term).
+
+    Runs at dtype=float32: the bf16 default quantizes logits coarsely
+    enough that EXACT top-1 ties are common at this vocab size, and a tie
+    makes greedy ill-defined — any storage precision (or summation order)
+    can flip it. f32 logits make every greedy decision strict, so the
+    parity gate tests the int8 pool, not tie-breaking luck."""
+    from repro.core.cache import block_data_bytes, empty_paged_cache
+    from repro.core.performance_model import spill_pcie_traffic
+    from repro.models.blocks import salca_params_for
+    from repro.runtime.serve import Request, ServingEngine
+
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    from repro.models import get_model
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+
+    sp = salca_params_for(cfg, MAX_SEQ)
+    r = sp.r(cfg.resolved_head_dim)
+
+    def layer_block_bytes(dt):
+        probe = empty_paged_cache(1, BLOCK_SIZE, 1, MAX_SEQ // BLOCK_SIZE,
+                                  cfg.num_kv_heads, cfg.resolved_head_dim, r,
+                                  kv_pool_dtype=dt)
+        return block_data_bytes(probe)
+
+    # Budget = 9 fp16 blocks' worth of bytes; each request holds 5 blocks
+    # over its lifetime (72-token prompt + 8 stored decode tokens = 80).
+    budget_bytes = 9 * layer_block_bytes("fp16")
+    blocks_per_req = 5
+    n_requests = 4 if smoke else 6
+
+    def workload():
+        rng = np.random.default_rng(17)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 72)
+                        .astype(np.int32),
+                        max_new_tokens=9)
+                for i in range(n_requests)]
+
+    yield ("serving_capacity,mode,block_bytes,num_blocks,peak_concurrent,"
+           "completed,overflows,demotions,promotions,pcie_bytes_predicted")
+    results = {}
+    for mode, dt, spill in (("fp16", "fp16", False), ("int8", "int8", False),
+                            ("int8_spill", "int8", True)):
+        bb = layer_block_bytes(dt)
+        num_blocks = int(budget_bytes // bb)
+        eng = ServingEngine(cfg, params, max_seq=MAX_SEQ, slots=n_requests,
+                            paged=True, block_size=BLOCK_SIZE,
+                            num_blocks=num_blocks, kv_pool_dtype=dt,
+                            host_spill=spill, demote_after=10**6,
+                            spill_keep_recent=2)
+        reqs = workload()
+        for req in reqs:
+            eng.submit(req)
+        st = eng.run()
+        results[mode] = (reqs, st)
+        pcie = spill_pcie_traffic(getattr(eng, "_block_bytes", 0),
+                                  st.demotions, st.promotions)
+        yield (f"serving_capacity,{mode},{bb},{num_blocks},"
+               f"{st.peak_active_slots},{st.completed},{st.overflows},"
+               f"{st.demotions},{st.promotions},{int(pcie.bytes)}")
+        if spill:
+            yield (f"serving_capacity_pcie,predicted_bytes,{int(pcie.bytes)},"
+                   f"predicted_s,{pcie.seconds:.6f},"
+                   f"measured_decode_s,{st.decode_s:.4f}")
+    (rf, sf), (ri, si) = results["fp16"], results["int8"]
+    rs, ss = results["int8_spill"]
+    gain = si.peak_active_slots / max(sf.peak_active_slots, 1)
+    yield (f"serving_capacity_gain,int8_vs_fp16_concurrency,{gain:.2f},"
+           f"{'int8-admits-more' if gain >= 2.0 else 'BELOW-2X'}")
+    match = all(a.output == b.output for a, b in zip(rf, ri))
+    yield (f"serving_capacity_parity,int8_vs_fp16_outputs,"
+           f"{'ok' if match else 'MISMATCH'}")
+    spill_match = all(a.output == b.output for a, b in zip(ri, rs))
+    yield (f"serving_capacity_parity,spill_vs_hot_outputs,"
+           f"{'ok' if spill_match else 'diverged-while-cold'}")
+    # Acceptance gates — raise so benchmarks/run.py exits 1.
+    if not match:
+        raise RuntimeError(
+            "int8 KV pool broke greedy top-1 agreement vs the fp16 pool")
+    if gain < 2.0:
+        raise RuntimeError(
+            f"int8-pool admission gain {gain:.2f} < 2.0 acceptance bar "
+            "(fixed-HBM concurrency must at least double)")
+    if ss.overflows or ss.completed != n_requests:
+        raise RuntimeError(
+            f"host-spill engine overflowed ({ss.overflows}) or dropped "
+            f"requests ({ss.completed}/{n_requests})")
+
+
 def _sharded_sweep(cfg, params, smoke: bool):
     """Admitted long-context concurrency vs pool shard count, at a fixed
     per-device pool size — the capacity claim of the sharded page pools —
@@ -337,6 +450,7 @@ def run(smoke: bool = False):
     yield from _mixed_sweep(cfg, params, smoke)
     yield from _shared_sweep(cfg, params, smoke)
     yield from _fused_sweep(cfg, params, smoke)
+    yield from _capacity_sweep(cfg, params, smoke)
     yield from _sharded_sweep(cfg, params, smoke)
 
 

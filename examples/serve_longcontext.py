@@ -38,6 +38,15 @@ def parse_args():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of shared system prompt per request "
                          "(default: 75%% of prompt-len when sharing)")
+    ap.add_argument("--kv-dtype", choices=("fp16", "int8", "int4"),
+                    default=None,
+                    help="block pool exact-K/V storage precision (paged "
+                         "only; in-kernel dequant)")
+    ap.add_argument("--host-spill", action="store_true",
+                    help="tiered-KV demo (implies --paged): a context whose "
+                         "block footprint overflows an fp16 pool completes "
+                         "on an int8 pool of the same byte budget with cold "
+                         "blocks spilled to host memory")
     ap.add_argument("--shards", type=int, default=1,
                     help="shard the paged block pool across N forced host "
                          "devices (implies --paged); demos a context that "
@@ -82,12 +91,16 @@ def main() -> None:
     if args.shards > 1:
         _sharded_demo(args, cfg, params)
         return
+    if args.host_spill:
+        _spill_demo(args, cfg, params)
+        return
 
     max_seq = ((args.prompt_len + args.new_tokens + 127) // 128) * 128
     engine = ServingEngine(cfg, params, max_seq=max_seq, slots=args.slots,
                            paged=args.paged, block_size=args.block_size,
                            num_blocks=args.num_blocks or None,
-                           prefix_sharing=args.prefix_sharing)
+                           prefix_sharing=args.prefix_sharing,
+                           kv_pool_dtype=args.kv_dtype)
     rng = np.random.default_rng(0)
     shared_len = 0
     shared = np.zeros((0,), np.int32)
@@ -124,6 +137,66 @@ def main() -> None:
     print("decode/(prefill+decode) time share: "
           f"{s['decode_s']/(s['prefill_s']+s['decode_s']):.1%} "
           "(the paper's Fig.1 regime: decode dominates long-context serving)")
+
+
+def _spill_demo(args, cfg, params) -> None:
+    """Tiered KV memory at a fixed HBM byte budget: the same long-context
+    request is rejected by an fp16 pool, rejected by a plain int8 pool
+    (still one block short), and COMPLETES on the int8 pool once cold
+    blocks may spill to the host tier (wave admission + histogram-driven
+    demote/promote)."""
+    import numpy as np
+
+    from repro.core import empty_paged_cache
+    from repro.core.cache import block_data_bytes
+    from repro.models.blocks import salca_params_for
+    from repro.runtime.serve import Request, ServingEngine
+
+    bs = args.block_size
+    need = 7                                    # request lifetime in blocks
+    prompt_len = need * bs - args.new_tokens
+    max_seq = ((prompt_len + args.new_tokens + 127) // 128) * 128
+    r = salca_params_for(cfg, max_seq).r(cfg.resolved_head_dim)
+
+    def bb(dt):
+        return block_data_bytes(empty_paged_cache(
+            1, bs, 1, max_seq // bs, cfg.num_kv_heads, cfg.resolved_head_dim,
+            r, kv_pool_dtype=dt))
+
+    budget = 4 * bb("fp16")                     # an fp16 pool of 4 blocks
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+    want_dt = args.kv_dtype or "int8"
+    print(f"\ntiered-KV demo: {prompt_len}-token context needs {need} "
+          f"blocks x {bs} tokens; HBM budget {budget} B per layer "
+          f"(= 4 fp16 blocks)")
+    for tag, dt, spill in (("fp16", "fp16", False), (want_dt, want_dt, False),
+                           (f"{want_dt}+spill", want_dt, True)):
+        blocks = int(budget // bb(dt))
+        engine = ServingEngine(cfg, params, max_seq=max_seq, slots=1,
+                               paged=True, block_size=bs, num_blocks=blocks,
+                               kv_pool_dtype=dt, host_spill=spill)
+        req = Request(rid=0, prompt=prompt.copy(),
+                      max_new_tokens=args.new_tokens)
+        try:
+            engine.submit(req)
+        except ValueError as e:                 # pool can never hold it
+            print(f"  {tag}: pool {blocks} blocks — rejected at submit ({e})")
+            continue
+        st = engine.run()
+        s = st.summary()
+        line = (f"  {tag}: pool {blocks} blocks — "
+                f"stop_reason={req.stop_reason}, "
+                f"{len(req.output)}/{args.new_tokens} tokens, "
+                f"{s['overflows']} overflows")
+        if spill:
+            line += (f", {s['demotions']} demotions / {s['promotions']} "
+                     f"promotions, peak cold {s['peak_cold_blocks']} blocks, "
+                     f"{s['pcie_bytes']} PCIe bytes")
+        print(line)
+    print("  → the byte budget that rejects the request at fp16 (and still "
+          "at int8) serves it once rarely-selected blocks demote to host "
+          "memory and resurrect on demand.")
 
 
 def _sharded_demo(args, cfg, params) -> None:

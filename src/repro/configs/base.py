@@ -95,6 +95,14 @@ class ModelConfig:
     # shared by ALL requests — which is what lets prefix-sharing admission
     # alias feature blocks across requests with divergent prompt tails.
     salca_static_channels: bool = False
+    # Precision of the exact K/V rows held in the *paged* block pool:
+    #   "int8" — per-token symmetric int8 (the paper layout, default)
+    #   "fp16" — raw float16 rows (unit scales; the uncompressed baseline)
+    #   "int4" — two signed nibbles per byte along head_dim with per-block,
+    #            per-head scales (halves pool HBM again vs int8)
+    # The packed 2-bit feature stream that drives selection is independent
+    # of this knob, so the selected token set is identical across modes.
+    kv_pool_dtype: str = "int8"
 
     # dtype ------------------------------------------------------------
     dtype: str = "bfloat16"

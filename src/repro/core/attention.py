@@ -134,8 +134,11 @@ def salca_decode_attention_paged(q: jax.Array, pool: PagedSalcaCache,
     else:
         fw, fs, fz = paged_logical_features(pool)
         scores = estimate_relevance(q_feat, fw, fs, fz, groups)
+    # mapped_valid_mask: identical to valid_mask unless the engine demoted a
+    # cold block to host memory (page_table -1 below the cursor) — a spilled
+    # block must be unselectable, not garbage-read, until promoted back.
     sel = select_sparse_pattern_blocked(scores, params,
-                                        pool.valid_mask()[:, None, :],
+                                        pool.mapped_valid_mask()[:, None, :],
                                         pool.block_size)
     if fused:
         from repro.kernels.flash_decode.ops import sparse_flash_decode_paged
@@ -192,7 +195,9 @@ def dense_decode_from_cache(q: jax.Array, cache: SalcaCache) -> jax.Array:
 def dense_decode_from_paged(q: jax.Array, pool: PagedSalcaCache,
                             valid_mask: jax.Array | None = None) -> jax.Array:
     """Dense attention over a paged pool's logical view (sliding-window
-    layers and the paged-vs-contiguous parity oracle)."""
+    layers and the paged-vs-contiguous parity oracle). Mode-generic via
+    `paged_logical_kv`; the default mask excludes host-spilled (unmapped)
+    blocks like the sparse path does."""
     k, v = paged_logical_kv(pool)
     return dense_decode_attention(
-        q, k, v, pool.valid_mask() if valid_mask is None else valid_mask)
+        q, k, v, pool.mapped_valid_mask() if valid_mask is None else valid_mask)

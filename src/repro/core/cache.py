@@ -240,11 +240,13 @@ PAGE_UNMAPPED = -1
 
 
 class PagedSalcaCache(NamedTuple):
-    # Physical pool, shared by all slots (no batch dim):
-    k_codes: jax.Array     # (P, BS, KV, HD) int8
-    k_scale: jax.Array     # (P, BS, KV) f32
-    v_codes: jax.Array     # (P, BS, KV, HD) int8
-    v_scale: jax.Array     # (P, BS, KV) f32
+    # Physical pool, shared by all slots (no batch dim). The K/V region is
+    # stored at `kv_pool_dtype` precision (inferred from the leaves, see
+    # below); the feature stream is always the packed 2-bit layout:
+    k_codes: jax.Array     # (P, BS, KV, HD) int8 | f16 | (P, BS, KV, HD//2) int4-packed
+    k_scale: jax.Array     # (P, BS, KV) f32 per-token | (P, 1, KV) per-block
+    v_codes: jax.Array     # (P, BS, KV, HD) int8 | f16 | (P, BS, KV, HD//2) int4-packed
+    v_scale: jax.Array     # (P, BS, KV) f32 per-token | (P, 1, KV) per-block
     feat_words: jax.Array  # (P, BS, KV, R//16) uint32
     feat_scale: jax.Array  # (P, BS, KV) f32
     feat_zero: jax.Array   # (P, BS, KV) f32
@@ -254,6 +256,9 @@ class PagedSalcaCache(NamedTuple):
     page_table: jax.Array  # (S, MB) int32 — logical block → physical block, -1 unmapped
     # Per-block sharing state:
     refcount: jax.Array    # (P,) int32 — page-table entries referencing each block
+    # Relevance history (host-spill demotion signal):
+    sel_hist: jax.Array    # (S, MB) int32 — cumulative selected-token count
+                           # per logical block (scatter-added each tick)
 
     # Shape properties use negative indices so they stay correct on stacked
     # (n_periods-leading) instances inside scanned model states.
@@ -264,6 +269,24 @@ class PagedSalcaCache(NamedTuple):
     @property
     def block_size(self) -> int:
         return self.k_codes.shape[-3]
+
+    @property
+    def kv_pool_dtype(self) -> str:
+        """K/V storage precision, inferred from the leaves (kept out of the
+        pytree so the NamedTuple stays a plain jit-safe container):
+
+        * ``float16`` codes → "fp16" (unit scales, shape (P, 1, KV))
+        * int8 codes with per-token scales (scale dim == block_size) → "int8"
+        * int8 codes with per-block scales (scale dim == 1) → "int4"
+          (two signed nibbles per byte along head_dim)
+
+        Non-int8 pools require block_size > 1 (enforced at construction) so
+        the scale-dim test is unambiguous."""
+        if self.k_codes.dtype == jnp.float16:
+            return "fp16"
+        if self.k_scale.shape[-2] == self.k_codes.shape[-3]:
+            return "int8"
+        return "int4"
 
     @property
     def num_slots(self) -> int:
@@ -284,12 +307,25 @@ class PagedSalcaCache(NamedTuple):
 
     @property
     def head_dim(self) -> int:
-        return self.k_codes.shape[-1]
+        hd = self.k_codes.shape[-1]
+        return 2 * hd if self.kv_pool_dtype == "int4" else hd
 
     def valid_mask(self) -> jax.Array:
         """(S, L) bool over the logical view — True where a real token is stored."""
         pos = jnp.arange(self.max_seq, dtype=jnp.int32)
         return pos[None, :] < self.length[:, None]
+
+    def mapped_valid_mask(self) -> jax.Array:
+        """(S, L) bool — stored AND resident: `valid_mask` further gated to
+        positions whose covering block is currently mapped. Identical to
+        `valid_mask` when no block is unmapped below the cursor (the only
+        engine that creates that state is host spill, which demotes cold
+        blocks to `page_table == -1` while `length` keeps counting them);
+        every read path uses THIS mask so a demoted block is invisible — not
+        garbage-read — until the engine promotes it back."""
+        pos = jnp.arange(self.max_seq, dtype=jnp.int32)
+        resident = jnp.repeat(self.page_table >= 0, self.block_size, axis=-1)
+        return (pos[None, :] < self.length[:, None]) & resident
 
     def clamped_pages(self) -> jax.Array:
         """Page table with unmapped entries clamped to block 0 for gathers.
@@ -302,13 +338,33 @@ class PagedSalcaCache(NamedTuple):
 
 def empty_paged_cache(num_blocks: int, block_size: int, slots: int,
                       max_blocks: int, kv_heads: int, head_dim: int,
-                      r: int) -> PagedSalcaCache:
+                      r: int, kv_pool_dtype: str = "int8") -> PagedSalcaCache:
     zeros = lambda shape, dt: jnp.zeros(shape, dt)
+    if kv_pool_dtype == "int8":
+        code_shape = (num_blocks, block_size, kv_heads, head_dim)
+        code_dt = jnp.int8
+        # Per-token scales, zero-init (never read before written).
+        scale = zeros((num_blocks, block_size, kv_heads), jnp.float32)
+    elif kv_pool_dtype == "fp16":
+        assert block_size > 1, "fp16 pool needs block_size > 1 (mode inference)"
+        code_shape = (num_blocks, block_size, kv_heads, head_dim)
+        code_dt = jnp.float16
+        # Unit per-block scales: the dequant paths multiply by them blindly,
+        # so they MUST be ones (and nothing ever rewrites them).
+        scale = jnp.ones((num_blocks, 1, kv_heads), jnp.float32)
+    elif kv_pool_dtype == "int4":
+        assert block_size > 1, "int4 pool needs block_size > 1 (mode inference)"
+        assert head_dim % 2 == 0, f"head_dim {head_dim} not packable to int4"
+        code_shape = (num_blocks, block_size, kv_heads, head_dim // 2)
+        code_dt = jnp.int8
+        scale = zeros((num_blocks, 1, kv_heads), jnp.float32)
+    else:
+        raise ValueError(f"unknown kv_pool_dtype {kv_pool_dtype!r}")
     return PagedSalcaCache(
-        k_codes=zeros((num_blocks, block_size, kv_heads, head_dim), jnp.int8),
-        k_scale=zeros((num_blocks, block_size, kv_heads), jnp.float32),
-        v_codes=zeros((num_blocks, block_size, kv_heads, head_dim), jnp.int8),
-        v_scale=zeros((num_blocks, block_size, kv_heads), jnp.float32),
+        k_codes=zeros(code_shape, code_dt),
+        k_scale=scale,
+        v_codes=zeros(code_shape, code_dt),
+        v_scale=scale,
         feat_words=zeros((num_blocks, block_size, kv_heads, r // qz.CODES_PER_WORD),
                          jnp.uint32),
         feat_scale=zeros((num_blocks, block_size, kv_heads), jnp.float32),
@@ -317,6 +373,7 @@ def empty_paged_cache(num_blocks: int, block_size: int, slots: int,
         length=zeros((slots,), jnp.int32),
         page_table=jnp.full((slots, max_blocks), PAGE_UNMAPPED, jnp.int32),
         refcount=zeros((num_blocks,), jnp.int32),
+        sel_hist=zeros((slots, max_blocks), jnp.int32),
     )
 
 
@@ -378,10 +435,11 @@ def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
     """
     if src.k_codes.shape[0] != 1:
         raise ValueError(f"src cache must have batch 1, got {src.k_codes.shape[0]}")
-    if src.k_codes.shape[2:] != pool.k_codes.shape[2:]:
+    if (pool.num_kv_heads, pool.head_dim) != src.k_codes.shape[2:]:
         raise ValueError(
-            f"kv-head/head-dim mismatch: pool {pool.k_codes.shape[2:]} "
-            f"vs src {src.k_codes.shape[2:]}")
+            f"kv-head/head-dim mismatch: pool "
+            f"{(pool.num_kv_heads, pool.head_dim)} vs src "
+            f"{src.k_codes.shape[2:]}")
     if src.max_seq > pool.max_seq:
         raise ValueError(
             f"src length {src.max_seq} exceeds paged logical capacity "
@@ -393,23 +451,47 @@ def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
     writable = jnp.arange(mb) >= jnp.asarray(n_shared, jnp.int32)
     safe_pages = jnp.where((pages >= 0) & writable, pages, p)  # → OOB → dropped
 
-    def upd(buf, val):  # val: (1, src_seq, KV, ·) → blocks → scatter rows
+    def to_blocks(val):  # val: (1, src_seq, KV, ·) → (MB, BS, KV, ·)
         v = jnp.pad(val[0], ((0, pad),) + ((0, 0),) * (val.ndim - 2))
-        blocks = v.reshape((mb, bs) + v.shape[1:]).astype(buf.dtype)
-        return buf.at[safe_pages].set(blocks, mode="drop")
+        return v.reshape((mb, bs) + v.shape[1:])
+
+    def upd(buf, blocks):
+        return buf.at[safe_pages].set(blocks.astype(buf.dtype), mode="drop")
+
+    # Transcode the K/V region into the pool's storage precision. The dense
+    # prefill cache always carries per-token int8 (the paper's exact-attention
+    # operands); fp16/int4 pools re-encode those values — fp16 holds them
+    # verbatim (unit per-block scales), int4 requantizes each block with one
+    # shared per-block, per-head scale.
+    mode = pool.kv_pool_dtype
+    if mode == "int8":
+        kc, ks = to_blocks(src.k_codes), to_blocks(src.k_scale)
+        vc, vs = to_blocks(src.v_codes), to_blocks(src.v_scale)
+    else:
+        k = to_blocks(src.k_codes).astype(jnp.float32) * to_blocks(src.k_scale)[..., None]
+        v = to_blocks(src.v_codes).astype(jnp.float32) * to_blocks(src.v_scale)[..., None]
+        if mode == "fp16":
+            kc, vc = k, v                               # cast to f16 in `upd`
+            ks = vs = jnp.ones((mb, 1, pool.num_kv_heads), jnp.float32)
+        else:                                           # int4
+            kq, ks = qz.sym_quantize_axes(k, bits=4, axes=(1, 3))
+            vq, vs = qz.sym_quantize_axes(v, bits=4, axes=(1, 3))
+            kc, vc = qz.pack_int4(kq), qz.pack_int4(vq)
+            ks, vs = ks[..., 0], vs[..., 0]             # (MB, 1, KV)
 
     return pool._replace(
-        k_codes=upd(pool.k_codes, src.k_codes),
-        k_scale=upd(pool.k_scale, src.k_scale),
-        v_codes=upd(pool.v_codes, src.v_codes),
-        v_scale=upd(pool.v_scale, src.v_scale),
-        feat_words=upd(pool.feat_words, src.feat_words),
-        feat_scale=upd(pool.feat_scale, src.feat_scale),
-        feat_zero=upd(pool.feat_zero, src.feat_zero),
+        k_codes=upd(pool.k_codes, kc),
+        k_scale=upd(pool.k_scale, ks),
+        v_codes=upd(pool.v_codes, vc),
+        v_scale=upd(pool.v_scale, vs),
+        feat_words=upd(pool.feat_words, to_blocks(src.feat_words)),
+        feat_scale=upd(pool.feat_scale, to_blocks(src.feat_scale)),
+        feat_zero=upd(pool.feat_zero, to_blocks(src.feat_zero)),
         heavy_idx=pool.heavy_idx.at[slot].set(src.heavy_idx[0]),
         length=pool.length.at[slot].set(src.length[0]),
         page_table=pool.page_table.at[slot].set(pages.astype(jnp.int32)),
         refcount=_refcount_add(pool.refcount, pages, +1),
+        sel_hist=pool.sel_hist.at[slot].set(0),
     )
 
 
@@ -454,13 +536,55 @@ def append_token_paged(pool: PagedSalcaCache, k: jax.Array, v: jax.Array,
         # no flat (P·BS, ·) reshape of the pool enters the decode tick
         return buf.at[pg, off].set(val[:, 0].astype(buf.dtype), mode="drop")
 
+    mode = pool.kv_pool_dtype
+    if mode == "int8":
+        kv_fields = dict(
+            k_codes=upd(pool.k_codes, k8.codes), k_scale=upd(pool.k_scale, k8.scale),
+            v_codes=upd(pool.v_codes, v8.codes), v_scale=upd(pool.v_scale, v8.scale))
+    elif mode == "fp16":
+        # Raw rows at f16; the unit per-block scales are never rewritten.
+        kv_fields = dict(k_codes=upd(pool.k_codes, k[:, None]),
+                         v_codes=upd(pool.v_codes, v[:, None]))
+    else:  # int4: per-block scale → a streaming append requantizes the block
+        kc, ks = _int4_block_append(pool.k_codes, pool.k_scale, k, pg, off)
+        vc, vs = _int4_block_append(pool.v_codes, pool.v_scale, v, pg, off)
+        kv_fields = dict(k_codes=kc, k_scale=ks, v_codes=vc, v_scale=vs)
+
     return pool._replace(
-        k_codes=upd(pool.k_codes, k8.codes), k_scale=upd(pool.k_scale, k8.scale),
-        v_codes=upd(pool.v_codes, v8.codes), v_scale=upd(pool.v_scale, v8.scale),
         feat_words=upd(pool.feat_words, words),
         feat_scale=upd(pool.feat_scale, fs), feat_zero=upd(pool.feat_zero, fz),
         length=jnp.where(ok, cur + 1, cur),
+        **kv_fields,
     )
+
+
+def _int4_block_append(codes_buf, scale_buf, tok, pg, off):
+    """One token's int4 append for K or V: grow the target block's shared
+    per-block, per-head scale monotonically (`new = max(old, amax/7)`),
+    rescale the block's existing codes into the new scale, set the token's
+    row and scatter the block back. At ``off == 0`` the scale RESETS to the
+    token's own range instead — a freshly mapped (or reused) block must not
+    inherit a stale scale, or visible codes would depend on pool history.
+    ``pg`` carries the out-of-bounds drop sentinel for gated slots; gathers
+    clamp it to 0 (their result is discarded by the dropped scatter)."""
+    p, bs = codes_buf.shape[0], codes_buf.shape[1]
+    pg_safe = jnp.where(pg < p, pg, 0)
+    old_codes = qz.unpack_int4(codes_buf[pg_safe])             # (S, BS, KV, HD)
+    old_scale = scale_buf[pg_safe, 0]                          # (S, KV)
+    t32 = tok.astype(jnp.float32)                              # (S, KV, HD)
+    amax = jnp.max(jnp.abs(t32), axis=-1)                      # (S, KV)
+    reset = (off == 0)[:, None]
+    base = jnp.where(reset, 0.0, old_scale)
+    new_scale = jnp.maximum(jnp.maximum(base, amax / qz.INT4_MAXABS), 1e-6)
+    ratio = jnp.where(reset, 0.0, old_scale / new_scale)
+    m = qz.INT4_MAXABS
+    rescaled = jnp.clip(jnp.round(old_codes.astype(jnp.float32)
+                                  * ratio[:, None, :, None]), -m, m)
+    tok_codes = jnp.clip(jnp.round(t32 / new_scale[..., None]), -m, m)
+    row = jnp.arange(bs)[None, :, None, None] == off[:, None, None, None]
+    merged = jnp.where(row, tok_codes[:, None], rescaled).astype(jnp.int8)
+    return (codes_buf.at[pg].set(qz.pack_int4(merged), mode="drop"),
+            scale_buf.at[pg, 0].set(new_scale, mode="drop"))
 
 
 def map_block(pool: PagedSalcaCache, slot, logical_block, page,
@@ -507,6 +631,7 @@ def share_blocks(pool: PagedSalcaCache, src_slot, n_blocks,
         heavy_idx=pool.heavy_idx.at[dst_slot].set(pool.heavy_idx[src_slot]),
         length=pool.length.at[dst_slot].set(shared_len),
         refcount=_refcount_add(pool.refcount, src_row, +1, valid=take),
+        sel_hist=pool.sel_hist.at[dst_slot].set(0),
     )
 
 
@@ -557,6 +682,7 @@ def free_pages(pool: PagedSalcaCache, slot, block_range=None) -> PagedSalcaCache
         refcount=_refcount_add(
             pool.refcount,
             _localize_pages(pool.page_table[slot], block_range), -1),
+        sel_hist=pool.sel_hist.at[slot].set(0),
     )
 
 
@@ -582,12 +708,17 @@ def paged_logical_features(pool: PagedSalcaCache):
 def paged_logical_kv(pool: PagedSalcaCache):
     """Dequantized dense logical K/V view (S, L, KV, HD) f32 — the dense
     oracle / sliding-window read over a paged pool. O(S·L) transient; use
-    the selected-gather path for the sparse decode."""
+    the selected-gather path for the sparse decode.
+
+    Mode-generic: int4 codes unpack first, and the scale gather broadcasts
+    whether it is per-token ``(·, BS, KV)`` or per-block ``(·, 1, KV)`` —
+    the fp16 pool's unit scales make the multiply an exact identity."""
     pt = pool.clamped_pages()
     s, l = pt.shape[0], pool.max_seq
-    k = (pool.k_codes[pt].astype(jnp.float32)
+    unpack = qz.unpack_int4 if pool.kv_pool_dtype == "int4" else (lambda x: x)
+    k = (unpack(pool.k_codes[pt]).astype(jnp.float32)
          * pool.k_scale[pt][..., None]).reshape(s, l, pool.num_kv_heads, -1)
-    v = (pool.v_codes[pt].astype(jnp.float32)
+    v = (unpack(pool.v_codes[pt]).astype(jnp.float32)
          * pool.v_scale[pt][..., None]).reshape(s, l, pool.num_kv_heads, -1)
     return k, v
 
@@ -645,8 +776,67 @@ def gather_selected_paged(pool: PagedSalcaCache, sel, block_range=None) -> tuple
     pg, off, _ = _resolve_pages(pool, sel.indices, block_range)  # (S, KV, C)
     kvb = jnp.arange(pool.num_kv_heads)[None, :, None]           # (1, KV, 1)
 
-    return (pool.k_codes[pg, off, kvb], pool.k_scale[pg, off, kvb],
-            pool.v_codes[pg, off, kvb], pool.v_scale[pg, off, kvb])
+    mode = pool.kv_pool_dtype
+    if mode == "int8":
+        return (pool.k_codes[pg, off, kvb], pool.k_scale[pg, off, kvb],
+                pool.v_codes[pg, off, kvb], pool.v_scale[pg, off, kvb])
+    # Per-block scales: one scale row per block, fetched at scale-offset 0
+    # and broadcast across the block's gathered tokens; int4 codes unpack to
+    # full head_dim so the consumer contract is unchanged.
+    soff = jnp.zeros_like(off)
+    kc, vc = pool.k_codes[pg, off, kvb], pool.v_codes[pg, off, kvb]
+    if mode == "int4":
+        kc, vc = qz.unpack_int4(kc), qz.unpack_int4(vc)
+    return (kc, pool.k_scale[pg, soff, kvb],
+            vc, pool.v_scale[pg, soff, kvb])
+
+
+def record_selection(pool: PagedSalcaCache, sel_indices: jax.Array,
+                     sel_mask: jax.Array) -> PagedSalcaCache:
+    """Scatter-add this tick's selected tokens into the per-logical-block
+    relevance history (`sel_hist`) — the signal the host-spill engine reads
+    to find blocks the filter has stopped selecting. ``sel_indices`` /
+    ``sel_mask``: the (S, KV, C) logical selection a decode tick produced.
+    O(S·KV·C) — never pool-shaped."""
+    bs, mb = pool.block_size, pool.max_blocks
+    blk = jnp.clip(sel_indices // bs, 0, mb - 1)
+    tgt = jnp.where(sel_mask, blk, mb)                         # masked → drop
+    sidx = jnp.arange(tgt.shape[0])[:, None, None]
+    return pool._replace(
+        sel_hist=pool.sel_hist.at[sidx, tgt].add(jnp.int32(1), mode="drop"))
+
+
+# Block read/write rows: the host-spill transport. `read_block_rows` pulls
+# one physical block's data fields in STORAGE format (codes stay packed /
+# quantized, scales ride along), so a demote→promote round trip through host
+# memory is bit-exact by construction — no transcode on either side.
+
+_BLOCK_DATA_FIELDS = ("k_codes", "k_scale", "v_codes", "v_scale",
+                      "feat_words", "feat_scale", "feat_zero")
+
+
+def read_block_rows(pool: PagedSalcaCache, page) -> tuple:
+    """The seven data-field rows of physical block `page` (traced-safe)."""
+    pg = jnp.asarray(page, jnp.int32)
+    return tuple(getattr(pool, f)[pg] for f in _BLOCK_DATA_FIELDS)
+
+
+def write_block_rows(pool: PagedSalcaCache, page, rows: tuple) -> PagedSalcaCache:
+    """Install rows captured by :func:`read_block_rows` into block `page`."""
+    pg = jnp.asarray(page, jnp.int32)
+    upd = {f: getattr(pool, f).at[pg].set(r.astype(getattr(pool, f).dtype))
+           for f, r in zip(_BLOCK_DATA_FIELDS, rows)}
+    return pool._replace(**upd)
+
+
+def block_data_bytes(pool: PagedSalcaCache) -> int:
+    """Bytes of ONE physical block across the seven data fields — the unit
+    of PCIe traffic for a host-spill demotion or promotion."""
+    total = 0
+    for f in _BLOCK_DATA_FIELDS:
+        buf = getattr(pool, f)
+        total += int(buf[0].size) * buf.dtype.itemsize
+    return total
 
 
 def paged_cache_bytes(pool: PagedSalcaCache) -> dict[str, int]:
@@ -657,6 +847,7 @@ def paged_cache_bytes(pool: PagedSalcaCache) -> dict[str, int]:
           + nbytes(pool.k_scale) + nbytes(pool.v_scale))
     feats = (nbytes(pool.feat_words) + nbytes(pool.feat_scale)
              + nbytes(pool.feat_zero))
-    table = nbytes(pool.page_table) + nbytes(pool.refcount)
+    table = (nbytes(pool.page_table) + nbytes(pool.refcount)
+             + nbytes(pool.sel_hist))
     return {"kv_region": kv, "feature_region": feats, "page_table": table,
             "total": kv + feats + table}

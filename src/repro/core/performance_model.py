@@ -151,24 +151,51 @@ class DecodeBytes:
     total: float
 
 
-def salca_bytes_per_token(n: int, d: int, kv_heads: int, s_f: float,
-                          retention: float) -> DecodeBytes:
-    """Bytes/step/layer with Salca dual compression (per the paper's layout)."""
-    feat = kv_heads * n * pre_bits_per_key(d, s_f) / 8.0
-    kv = kv_heads * (n * retention) * (att_bits_per_key(d) / 8.0 + 8.0)  # + 2 f32 scales
+def kv_store_bits_per_key(d: int, kv_pool_dtype: str = "int8",
+                          block_size: int = 16) -> float:
+    """Bits ONE token's exact K+V rows occupy in the paged block pool.
+
+    Matches `core.cache.empty_paged_cache` byte-for-byte: int8 carries two
+    per-token f32 scales, int4 packs two values per byte and amortizes one
+    per-block, per-head f32 scale pair over `block_size` tokens, fp16 is the
+    raw-rows baseline (its unit scales are never read on the hot path)."""
+    if kv_pool_dtype == "fp16":
+        return 2.0 * 16.0 * d
+    if kv_pool_dtype == "int8":
+        return 2.0 * 8.0 * d + 2.0 * 32.0
+    if kv_pool_dtype == "int4":
+        return 2.0 * 4.0 * d + 2.0 * 32.0 / block_size
+    raise ValueError(f"unknown kv_pool_dtype {kv_pool_dtype!r}")
+
+
+def _decode_bytes(n: int, kv_heads: int, feat_bits_per_key: float,
+                  kv_bits_per_key: float, retention: float) -> DecodeBytes:
+    """The one DecodeBytes composition every per-token helper reduces to:
+    a sequential feature stream over all n keys plus a gathered K/V fetch
+    over the retained fraction."""
+    feat = kv_heads * n * feat_bits_per_key / 8.0
+    kv = kv_heads * (n * retention) * kv_bits_per_key / 8.0
     return DecodeBytes(feat, kv, feat + kv)
+
+
+def salca_bytes_per_token(n: int, d: int, kv_heads: int, s_f: float,
+                          retention: float, kv_pool_dtype: str = "int8",
+                          block_size: int = 16) -> DecodeBytes:
+    """Bytes/step/layer with Salca dual compression (per the paper's layout;
+    `kv_pool_dtype` swaps the exact-attention tier's storage precision)."""
+    return _decode_bytes(n, kv_heads, pre_bits_per_key(d, s_f),
+                         kv_store_bits_per_key(d, kv_pool_dtype, block_size),
+                         retention)
 
 
 def filter4bit_bytes_per_token(n: int, d: int, kv_heads: int, retention: float) -> DecodeBytes:
     """Energon/Sanger-style 4-bit full-feature filter + INT8 attention."""
-    feat = kv_heads * n * (4.0 * d + 32.0) / 8.0
-    kv = kv_heads * (n * retention) * (att_bits_per_key(d) / 8.0 + 8.0)
-    return DecodeBytes(feat, kv, feat + kv)
+    return _decode_bytes(n, kv_heads, 4.0 * d + 32.0,
+                         kv_store_bits_per_key(d, "int8"), retention)
 
 
 def dense_bytes_per_token(n: int, d: int, kv_heads: int, dtype_bytes: float = 2.0) -> DecodeBytes:
-    kv = kv_heads * n * 2.0 * d * dtype_bytes
-    return DecodeBytes(0.0, kv, kv)
+    return _decode_bytes(n, kv_heads, 0.0, 2.0 * d * dtype_bytes * 8.0, 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -236,3 +263,56 @@ def sharded_salca_bytes_per_token(n: int, d: int, kv_heads: int, groups: int,
         local_kv_gather=base.kv_gather / n_shards,
         interconnect=ic,
         local_total=base.total / n_shards)
+
+
+# ---------------------------------------------------------------------------
+# Tiered KV memory: pool capacity per HBM budget + host-spill PCIe traffic
+# ---------------------------------------------------------------------------
+
+def pool_block_bytes(d: int, kv_heads: int, block_size: int, s_f: float,
+                     kv_pool_dtype: str = "int8") -> float:
+    """Bytes ONE physical block's data rows occupy per layer: the exact K/V
+    tier at `kv_pool_dtype` plus the (precision-independent) packed 2-bit
+    feature stream with its two f32 factors per token."""
+    kv = block_size * kv_store_bits_per_key(d, kv_pool_dtype, block_size) / 8.0
+    feat = block_size * pre_bits_per_key(d, s_f) / 8.0
+    return kv_heads * (kv + feat)
+
+
+def max_context_tokens(hbm_bytes: float, d: int, kv_heads: int, layers: int,
+                       block_size: int, s_f: float,
+                       kv_pool_dtype: str = "int8") -> int:
+    """Longest single context a paged pool of `hbm_bytes` holds across
+    `layers` attention layers — the capacity row of the README table.
+    Dropping int8 → int4 (or fp16 → int8) raises this near-proportionally
+    to the K/V tier's share of the block bytes."""
+    per_block = layers * pool_block_bytes(d, kv_heads, block_size, s_f,
+                                          kv_pool_dtype)
+    return int(hbm_bytes // per_block) * block_size
+
+
+@dataclass(frozen=True)
+class SpillTraffic:
+    """Predicted PCIe cost of a host-spill run (demote + promote moves)."""
+
+    moves: int            # demotions + promotions
+    bytes: float          # block_bytes · moves
+    seconds: float        # bytes / link bandwidth
+
+    @property
+    def bytes_per_move(self) -> float:
+        return self.bytes / max(self.moves, 1)
+
+
+def spill_pcie_traffic(block_bytes: float, demotions: int, promotions: int,
+                       pcie_gbps: float = 16.0) -> SpillTraffic:
+    """Predicted PCIe transfer for a measured (demotions, promotions) pair.
+
+    Every tier move copies one logical block's data rows (all layers)
+    across the link once; `pcie_gbps` defaults to a PCIe 4.0 x16 effective
+    rate. The serving benchmark prints this prediction next to measured
+    tick times so the model is falsifiable."""
+    moves = demotions + promotions
+    total = block_bytes * moves
+    return SpillTraffic(moves=moves, bytes=total,
+                        seconds=total / (pcie_gbps * 1e9))

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 KEY2_LEVELS = 4          # 2-bit codes {0,1,2,3}
 QUERY3_MAXABS = 3        # 3-bit symmetric codes {-3..3}
 INT8_MAXABS = 127
+INT4_MAXABS = 7          # 4-bit symmetric codes {-7..7} (nibble-packed)
 
 _EPS = 1e-6
 
@@ -74,6 +75,29 @@ def sym_quantize(x: jax.Array, bits: int, axis: int = -1) -> SymQuant:
     scale = jnp.maximum(amax / maxabs_code, _EPS)
     codes = jnp.clip(jnp.round(x32 / scale), -maxabs_code, maxabs_code)
     return SymQuant(codes.astype(jnp.int8), jnp.squeeze(scale, axis))
+
+
+def sym_quantize_axes(x: jax.Array, bits: int,
+                      axes: tuple[int, ...]) -> tuple[jax.Array, jax.Array]:
+    """Symmetric quantization with ONE shared scale over ``axes``.
+
+    The per-block, per-head scheme of the tiered KV pool: for a physical
+    block ``(BS, KV, HD)``, ``axes=(-3, -1)`` shares a scale across the
+    block's tokens and head channels while keeping kv-heads independent.
+    Returns ``(codes int8, scale f32)`` with the reduced axes KEPT as size-1
+    dims so the scale broadcasts straight back against ``codes``.
+    """
+    maxabs_code = (1 << (bits - 1)) - 1
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax / maxabs_code, _EPS)
+    codes = jnp.clip(jnp.round(x32 / scale), -maxabs_code, maxabs_code)
+    return codes.astype(jnp.int8), scale
+
+
+def sym_dequantize_axes(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`sym_quantize_axes` (scale keeps its size-1 dims)."""
+    return codes.astype(jnp.float32) * scale
 
 
 def asym_dequantize(q: AsymQuant, axis: int = -1) -> jax.Array:
@@ -259,6 +283,29 @@ def unpack2bit(words: jax.Array, r: int) -> jax.Array:
     shifts8 = jnp.arange(0, 8, 2, dtype=jnp.uint8)
     c = (bytes_[..., None] >> shifts8) & jnp.uint8(0x3)       # (..., nw, 4, 4)
     return c.reshape(*lead, r).astype(jnp.int8)
+
+
+# 4-bit nibble packing (two signed int4 codes per int8 byte, along the last
+# dim): even channels in the low nibble, odd channels in the high nibble.
+# The unpack is pure shift arithmetic — `(b << 4) >> 4` sign-extends the low
+# nibble because int8 right shift is arithmetic — so it runs unchanged
+# inside a Pallas VMEM block.
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int4 codes (int8 in [-7, 7], even last dim) two-per-byte."""
+    *lead, d = codes.shape
+    assert d % 2 == 0, f"head dim {d} not divisible by 2 for int4 packing"
+    c = codes.astype(jnp.int8).reshape(*lead, d // 2, 2)
+    even, odd = c[..., 0], c[..., 1]
+    return ((odd << 4) | (even & jnp.int8(0x0F))).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`; returns int8 codes, last dim doubled."""
+    b = packed.astype(jnp.int8)
+    lo = (b << 4) >> 4            # arithmetic shift sign-extends the nibble
+    hi = b >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(*b.shape[:-1], 2 * b.shape[-1])
 
 
 # Alternate schemes used only by the design-space exploration benchmarks

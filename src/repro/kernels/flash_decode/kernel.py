@@ -117,9 +117,18 @@ def sparse_flash_decode_pallas(q: jax.Array, k_codes: jax.Array, k_scale: jax.Ar
 # ---------------------------------------------------------------------------
 
 
+def _unpack_nibbles(codes):
+    """In-VMEM int4 dequant-to-int8: split each packed byte into its signed
+    low/high nibble (arithmetic shifts sign-extend) and re-interleave to the
+    full head_dim — the per-block streaming dequant of the tiered pool."""
+    lo = (codes << 4) >> 4
+    hi = codes >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], -1)
+
+
 def _paged_kernel(pblk_ref, cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
                   mask_ref, out_ref, m_ref, l_ref, acc_ref, *, scale: float,
-                  nsb: int):
+                  nsb: int, int4: bool, per_block_scale: bool):
     del pblk_ref  # consumed by the index_maps
     b = pl.program_id(0)
     n = pl.program_id(1)
@@ -134,19 +143,30 @@ def _paged_kernel(pblk_ref, cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
     @pl.when(n < cnt_ref[b])
     def _compute():
         q = q_ref[0].astype(jnp.float32)                   # (G, HD)
-        k = kc_ref[0, :, 0].astype(jnp.float32)            # (BS, HD)
-        ks = ks_ref[0, :, 0]                               # (BS,)
+        kc = kc_ref[0, :, 0]                               # (BS, HD | HD//2)
+        if int4:
+            kc = _unpack_nibbles(kc)
+        k = kc.astype(jnp.float32)                         # (BS, HD)
         mask = mask_ref[0, 0] != 0                         # (BS,)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (G, BS)
-        s = s * ks[None, :] * scale
+        if per_block_scale:
+            s = s * (ks_ref[0, 0, 0] * scale)              # one scale per block
+        else:
+            s = s * ks_ref[0, :, 0][None, :] * scale       # per-token scales
         s = jnp.where(mask[None, :], s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         corr = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new[:, None])
         p = jnp.where(mask[None, :], p, 0.0)
-        v = vc_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+        vc = vc_ref[0, :, 0]
+        if int4:
+            vc = _unpack_nibbles(vc)
+        if per_block_scale:
+            v = vc.astype(jnp.float32) * vs_ref[0, 0, 0]
+        else:
+            v = vc.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
         acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
@@ -157,12 +177,12 @@ def _paged_kernel(pblk_ref, cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
         out_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("num_kv", "interpret"))
+@functools.partial(jax.jit, static_argnames=("num_kv", "kv_dtype", "interpret"))
 def sparse_flash_decode_paged_pallas(q: jax.Array, k_codes: jax.Array,
                                      k_scale: jax.Array, v_codes: jax.Array,
                                      v_scale: jax.Array, pblk: jax.Array,
                                      counts: jax.Array, blk_mask: jax.Array,
-                                     *, num_kv: int,
+                                     *, num_kv: int, kv_dtype: str = "int8",
                                      interpret: bool | None = None) -> jax.Array:
     """Exact sparse attention straight off the physical block pool.
 
@@ -174,11 +194,18 @@ def sparse_flash_decode_paged_pallas(q: jax.Array, k_codes: jax.Array,
     listed block. Returns (BH, G, HD) f32. Grid = (BH, NSB); step (b, n)
     streams the (BS, HD) K and V slices of physical block ``pblk[b, n]`` for
     row b's kv head — the only pool bytes the tick touches.
+
+    ``kv_dtype`` is the pool's storage precision. "fp16"/"int4" pools stream
+    ONE (1, 1, 1) scale word per block alongside the block's codes (the
+    extra scale operand of the tiered-pool design); int4 codes arrive packed
+    (BS, HD//2) and unpack nibble-wise in VMEM before the MXU dot.
     """
     if interpret is None:
         interpret = interpret_default()
     bh, g, hd = q.shape
     bs = k_codes.shape[1]
+    hdc = k_codes.shape[3]            # packed head dim (HD//2 for int4)
+    sb = k_scale.shape[1]             # scale rows per block (BS or 1)
     nsb = pblk.shape[1]
     scale = 1.0 / (hd ** 0.5)
     kv = num_kv
@@ -187,13 +214,13 @@ def sparse_flash_decode_paged_pallas(q: jax.Array, k_codes: jax.Array,
         grid=(bh, nsb),
         in_specs=[
             pl.BlockSpec((1, g, hd), lambda b, n, pb, ct: (b, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
+            pl.BlockSpec((1, bs, 1, hdc),
                          lambda b, n, pb, ct: (pb[b, n], 0, b % kv, 0)),
-            pl.BlockSpec((1, bs, 1),
+            pl.BlockSpec((1, sb, 1),
                          lambda b, n, pb, ct: (pb[b, n], 0, b % kv)),
-            pl.BlockSpec((1, bs, 1, hd),
+            pl.BlockSpec((1, bs, 1, hdc),
                          lambda b, n, pb, ct: (pb[b, n], 0, b % kv, 0)),
-            pl.BlockSpec((1, bs, 1),
+            pl.BlockSpec((1, sb, 1),
                          lambda b, n, pb, ct: (pb[b, n], 0, b % kv)),
             pl.BlockSpec((1, 1, bs), lambda b, n, pb, ct: (b, n, 0)),
         ],
@@ -205,7 +232,9 @@ def sparse_flash_decode_paged_pallas(q: jax.Array, k_codes: jax.Array,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_paged_kernel, scale=scale, nsb=nsb),
+        functools.partial(_paged_kernel, scale=scale, nsb=nsb,
+                          int4=(kv_dtype == "int4"),
+                          per_block_scale=(kv_dtype != "int8")),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bh, g, hd), jnp.float32),
         interpret=interpret,

@@ -117,11 +117,12 @@ def sparse_flash_decode_paged(q: jax.Array, pool, sel, *, impl: str | None = Non
     if impl == "pallas":
         out = sparse_flash_decode_paged_pallas(
             qr, pool.k_codes, pool.k_scale, pool.v_codes, pool.v_scale,
-            pblk, counts, bmask, num_kv=kv, interpret=interpret)
+            pblk, counts, bmask, num_kv=kv, kv_dtype=pool.kv_pool_dtype,
+            interpret=interpret)
     elif impl == "ref":
         out = sparse_flash_decode_paged_ref(
             qr, pool.k_codes, pool.k_scale, pool.v_codes, pool.v_scale,
-            pblk, bmask, kv)
+            pblk, bmask, kv, kv_dtype=pool.kv_pool_dtype)
     else:
         raise ValueError(f"unknown impl {impl!r} "
                          "(expected 'pallas', 'ref' or 'gather')")

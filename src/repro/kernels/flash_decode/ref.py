@@ -29,13 +29,19 @@ def sparse_flash_decode_paged_ref(q: jax.Array, k_codes: jax.Array,
                                   k_scale: jax.Array, v_codes: jax.Array,
                                   v_scale: jax.Array, pblk: jax.Array,
                                   blk_mask: jax.Array,
-                                  num_kv: int) -> jax.Array:
+                                  num_kv: int,
+                                  kv_dtype: str = "int8") -> jax.Array:
     """Paged-native oracle: same contract as the scalar-prefetch kernel.
 
     Fetches each row's listed physical blocks with one (block, token,
     kv-head) advanced-index gather per field — O(selected blocks), never a
     flat (P·BS, ·) view of the pool — then runs the flat oracle over the
     flattened (BH, NSB·BS) block stream.
+
+    ``kv_dtype`` names the pool's storage precision: "fp16"/"int4" pools
+    carry ONE scale row per block (fetched at scale-offset 0 and broadcast
+    over the block's tokens), and int4 codes unpack nibble-wise before the
+    flat oracle sees them.
     """
     bh = q.shape[0]
     bs = k_codes.shape[1]
@@ -43,9 +49,15 @@ def sparse_flash_decode_paged_ref(q: jax.Array, k_codes: jax.Array,
     kvb = (jnp.arange(bh) % num_kv)[:, None, None]             # (BH, 1, 1)
     tok = jnp.arange(bs)[None, None, :]                        # (1, 1, BS)
     pb = pblk[:, :, None]                                      # (BH, NSB, 1)
-    kc = k_codes[pb, tok, kvb].reshape(bh, nsb * bs, -1)
-    ks = k_scale[pb, tok, kvb].reshape(bh, nsb * bs)
-    vc = v_codes[pb, tok, kvb].reshape(bh, nsb * bs, -1)
-    vs = v_scale[pb, tok, kvb].reshape(bh, nsb * bs)
+    kc = k_codes[pb, tok, kvb]                                 # (BH, NSB, BS, ·)
+    vc = v_codes[pb, tok, kvb]
+    if kv_dtype == "int4":
+        from repro.core import quantization as qz
+        kc, vc = qz.unpack_int4(kc), qz.unpack_int4(vc)
+    kc = kc.reshape(bh, nsb * bs, -1)
+    vc = vc.reshape(bh, nsb * bs, -1)
+    stok = tok if kv_dtype == "int8" else jnp.zeros_like(tok)
+    ks = k_scale[pb, stok, kvb].reshape(bh, nsb * bs)
+    vs = v_scale[pb, stok, kvb].reshape(bh, nsb * bs)
     return sparse_flash_decode_ref(q, kc, ks, vc, vs,
                                    blk_mask.reshape(bh, nsb * bs))

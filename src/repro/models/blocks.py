@@ -82,7 +82,8 @@ def paged_cache_pspec(ctx: "DecodeCtx", axis: Any = None):
         feat_words=P(sa, None, None, None), feat_scale=P(sa, None, None),
         feat_zero=P(sa, None, None),
         heavy_idx=P(None, None, None), length=P(None),
-        page_table=P(None, None), refcount=P(None))
+        page_table=P(None, None), refcount=P(None),
+        sel_hist=P(None, None))
 
 
 def salca_params_for(cfg: ModelConfig, seq_len: int) -> SalcaParams:
@@ -337,7 +338,13 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
             # Fused vs gather data path is chosen inside (PERF.paged_fused_
             # decode): fused streams physical blocks through the page table
             # in-kernel; gather rebuilds logical views (the PR 3 baseline).
-            o = salca_decode_attention_paged(q, cache, salca)
+            o, sel = salca_decode_attention_paged(q, cache, salca,
+                                                  return_selection=True)
+            # Relevance history for the host-spill tier: count each tick's
+            # selected tokens per logical block (O(S·KV·C) scatter-add; the
+            # engine diffs snapshots host-side to find cold blocks).
+            from repro.core.cache import record_selection
+            cache = record_selection(cache, sel.indices, sel.mask)
         else:
             valid = cache.valid_mask()
             if window > 0:
@@ -475,5 +482,6 @@ def block_init_paged_state(kind: str, slots: int, max_seq: int, cfg: ModelConfig
                                cfg.resolved_head_dim, r)
         max_blocks = -(-max_seq // block_size)
         return empty_paged_cache(num_blocks, block_size, slots, max_blocks,
-                                 cfg.num_kv_heads, cfg.resolved_head_dim, r)
+                                 cfg.num_kv_heads, cfg.resolved_head_dim, r,
+                                 kv_pool_dtype=cfg.kv_pool_dtype)
     return block_init_state(kind, slots, max_seq, cfg)

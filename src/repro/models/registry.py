@@ -43,6 +43,16 @@ class ModelAPI(NamedTuple):
     #   (pool_state, src_slot, n_blocks, dst_slot) -> pool_state
     cow_block: Callable[..., Any] | None = None
     #   (pool_state, slot, logical_block, new_page) -> pool_state
+    # Tiered KV memory (host spill of cold blocks): move one physical
+    # block's data rows — storage format, so a round trip is bit-exact —
+    # out of / into every paged layer, and read the per-(slot, logical)
+    # selection histograms that drive the demotion policy.
+    read_block: Callable[..., Any] | None = None
+    #   (pool_state, page) -> payload pytree
+    write_block: Callable[..., Any] | None = None
+    #   (pool_state, page, payload) -> pool_state
+    selection_hist: Callable[..., Any] | None = None
+    #   (pool_state,) -> (slots, max_blocks) i32
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -105,7 +115,10 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
                     write_into_pages=write_into_pages,
                     map_block=transformer.lm_map_block,
                     share_blocks=transformer.lm_share_blocks,
-                    cow_block=transformer.lm_cow_block)
+                    cow_block=transformer.lm_cow_block,
+                    read_block=transformer.lm_read_block,
+                    write_block=transformer.lm_write_block,
+                    selection_hist=transformer.lm_selection_hist)
 
 
 __all__ = ["ModelAPI", "get_model", "DecodeCtx"]

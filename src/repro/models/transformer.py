@@ -301,6 +301,61 @@ def lm_cow_block(pool: LMState, slot, logical_block, new_page) -> LMState:
         pool, lambda st: cow_block(st, slot, logical_block, new_page))
 
 
+def lm_read_block(pool: LMState, page) -> tuple:
+    """Host-spill transport, read side: the data rows of physical block
+    `page` from EVERY paged layer (period pools keep their leading
+    n_periods axis — `leaf[:, page]` — so the payload round-trips through
+    `lm_write_block` unchanged). Returns a tuple of per-cache row tuples in
+    the state's paged-cache order; the values are STORAGE-format (quantized
+    codes + scales), so a demote→promote cycle is bit-exact. Jit this with
+    a traced `page` — the engine compiles it once."""
+    from repro.core.cache import read_block_rows
+    pg = jnp.asarray(page, jnp.int32)
+    out = []
+    for pp in pool.period_states:
+        if isinstance(pp, B.PagedSalcaCache):
+            out.append(jax.vmap(lambda st: read_block_rows(st, pg))(pp))
+    for st in pool.tail_states:
+        if isinstance(st, B.PagedSalcaCache):
+            out.append(read_block_rows(st, pg))
+    return tuple(out)
+
+
+def lm_write_block(pool: LMState, page, payload: tuple) -> LMState:
+    """Host-spill transport, write side: install a payload captured by
+    `lm_read_block` into physical block `page` of every paged layer (the
+    promotion's `jax.device_put` target). Page tables / refcounts are the
+    engine's job (`lm_map_block`); this moves data only."""
+    from repro.core.cache import write_block_rows
+    pg = jnp.asarray(page, jnp.int32)
+    it = iter(payload)
+    periods = tuple(
+        jax.vmap(lambda st, rows: write_block_rows(st, pg, rows))(pp, next(it))
+        if isinstance(pp, B.PagedSalcaCache) else pp
+        for pp in pool.period_states)
+    tails = tuple(
+        write_block_rows(st, pg, next(it))
+        if isinstance(st, B.PagedSalcaCache) else st
+        for st in pool.tail_states)
+    return LMState(periods, tails, pool.pos)
+
+
+def lm_selection_hist(pool: LMState) -> jax.Array:
+    """Cumulative selected-token counts per (slot, logical block), summed
+    over every paged attention layer — the relevance histogram the engine's
+    demotion policy diffs per tick (a block no layer has selected for
+    `demote_after` consecutive ticks is cold). Returns (slots, MB) i32."""
+    total = None
+    for pp in pool.period_states:
+        if isinstance(pp, B.PagedSalcaCache):
+            h = jnp.sum(pp.sel_hist, axis=0)     # sum the period axis
+            total = h if total is None else total + h
+    for st in pool.tail_states:
+        if isinstance(st, B.PagedSalcaCache):
+            total = st.sel_hist if total is None else total + st.sel_hist
+    return total
+
+
 # ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------

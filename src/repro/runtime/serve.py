@@ -53,6 +53,20 @@ least-loaded shard when it is empty. Outputs are bit-identical to the
 unsharded paged engine — the sharded tick's selection is exact by
 construction (see ``core.sp_decode``).
 
+Tiered KV memory: ``kv_pool_dtype`` picks the block pool's exact-K/V
+storage precision per engine (fp16 / int8 / int4, dequantized inside the
+decode gather — the selection's 2-bit feature stream is
+precision-independent), and ``host_spill=True`` adds a host tier: private
+blocks the selection histograms stop touching for ``demote_after`` ticks
+(outside the ``spill_keep_recent`` recency window) demote to a numpy
+mirror in storage format — bit-exact both ways — freeing their physical
+block; they promote back, highest historical-relevance first, when the
+pool has ``promote_headroom`` free blocks. Demotion also fires under
+pressure (admission and growth with a dry free list, coldest first), which
+lets a prompt whose footprint exceeds the whole device pool admit in
+free-pool-sized waves. Spilled blocks are unselectable
+(`mapped_valid_mask`) rather than garbage-read.
+
 Latency accounting separates queue wait (submit→admit), TTFT
 (submit→first token, i.e. queue wait + prefill), and decode (per tick and
 per token).
@@ -60,6 +74,7 @@ per token).
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import time
 from collections import deque
@@ -73,6 +88,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import get_model
 from repro.models.blocks import DecodeCtx
+
+# `_slot_blocks` sentinel for a logical block whose data lives in the host
+# tier (its page-table entry is -1 and its rows sit in the numpy mirror).
+SPILLED = -1
 
 
 @dataclass
@@ -208,6 +227,14 @@ class ServeStats:
     shared_blocks: int = 0     # blocks admitted by reference instead of copy
     cow_copies: int = 0        # shared blocks privatized on first write
     prefix_hits: int = 0       # requests that shared ≥ 1 block
+    # Tiered KV memory (zero unless host_spill=True):
+    host_spill: bool = False
+    hot_blocks: int = 0        # device-resident blocks in use (last sample)
+    cold_blocks: int = 0       # host-resident spilled blocks (last sample)
+    peak_cold_blocks: int = 0
+    demotions: int = 0         # block moves device → host
+    promotions: int = 0        # block moves host → device
+    pcie_bytes: int = 0        # predicted transfer = block_bytes · moves
 
     def summary(self) -> dict:
         out = {
@@ -245,6 +272,13 @@ class ServeStats:
             saved = self.shared_blocks - self.cow_copies
             out["effective_blocks_saved"] = saved
             out["memory_saved_tokens"] = saved * self.block_size
+            if self.host_spill:
+                out["hot_blocks"] = self.hot_blocks
+                out["cold_blocks"] = self.cold_blocks
+                out["peak_cold_blocks"] = self.peak_cold_blocks
+                out["demotions"] = self.demotions
+                out["promotions"] = self.promotions
+                out["pcie_bytes"] = self.pcie_bytes
         return out
 
 
@@ -285,7 +319,18 @@ class ServingEngine:
                  greedy: bool = True, seed: int = 0, paged: bool = False,
                  block_size: int = 32, num_blocks: int | None = None,
                  prefix_sharing: bool = False,
-                 fused_decode: bool | None = None):
+                 fused_decode: bool | None = None,
+                 kv_pool_dtype: str | None = None,
+                 host_spill: bool = False, demote_after: int = 4,
+                 spill_keep_recent: int = 2, promote_headroom: int = 1):
+        # Per-engine override of the block pool's storage precision (the
+        # tiered-KV first tier). Parameter shapes don't depend on the knob,
+        # so the same params serve any pool precision.
+        if kv_pool_dtype is not None and kv_pool_dtype != cfg.kv_pool_dtype:
+            if not paged:
+                raise ValueError("kv_pool_dtype override requires paged=True "
+                                 "(the knob names the paged pool's storage)")
+            cfg = dataclasses.replace(cfg, kv_pool_dtype=kv_pool_dtype)
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -349,9 +394,54 @@ class ServingEngine:
             self._map_block = jax.jit(self.api.map_block, donate_argnums=dn)
             self._cow_block = jax.jit(self.api.cow_block, donate_argnums=dn)
         else:
+            if host_spill:
+                raise ValueError("host_spill requires paged=True (the host "
+                                 "tier holds physical pool blocks)")
             # The one persistent pooled decode state (slots × max_seq caches).
             self._state = self.api.init_state(slots, max_seq)
             self._write = jax.jit(self.api.write_into_slot, donate_argnums=dn)
+
+        # Tiered KV memory: the second (host) tier. Rarely-selected private
+        # blocks demote to a numpy mirror — storage format, so the round
+        # trip is bit-exact — freeing their physical block; a spilled block
+        # is unselectable (`mapped_valid_mask`) until promoted back.
+        self.host_spill = host_spill
+        if host_spill:
+            if self.n_shards > 1:
+                raise ValueError(
+                    "host_spill is not supported on a mesh-sharded pool: the "
+                    "sharded decode island does not record selection "
+                    "histograms (leave the mesh ctx off or spill unsharded)")
+            if prefix_sharing:
+                raise ValueError(
+                    "host_spill cannot combine with prefix_sharing: a "
+                    "demoted block would vanish under the radix map's feet")
+            if self.api.read_block is None:
+                raise ValueError(f"{cfg.name}: host spill not supported "
+                                 "for this model family")
+            if demote_after < 1 or spill_keep_recent < 1:
+                raise ValueError("demote_after and spill_keep_recent must be "
+                                 ">= 1 (the cursor block must stay hot)")
+            self.demote_after = demote_after
+            self.spill_keep_recent = spill_keep_recent
+            self.promote_headroom = promote_headroom
+            # Read must NOT donate — the state stays live; write may.
+            self._read_block = jax.jit(self.api.read_block)
+            self._write_block = jax.jit(self.api.write_block,
+                                        donate_argnums=dn)
+            self._sel_hist_fn = jax.jit(self.api.selection_hist)
+            self._spilled: dict[tuple[int, int], Any] = {}
+            self._spill_score: dict[tuple[int, int], float] = {}
+            self._hist_snap = np.zeros((slots, self.max_blocks), np.int64)
+            self._cold_streak = np.zeros((slots, self.max_blocks), np.int32)
+            # Bytes one logical block's data rows occupy across every paged
+            # layer — the PCIe unit for the predicted-transfer accounting.
+            shapes = jax.eval_shape(self.api.read_block, self._state,
+                                    jnp.int32(0))
+            self._block_bytes = int(sum(
+                int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                for l in jax.tree_util.tree_leaves(shapes)))
+            self.stats.host_spill = True
 
         # ``fused_decode`` pins the paged decode data path for this engine
         # (None → follow the global PERF.paged_fused_decode flag). The flag
@@ -417,7 +507,11 @@ class ServingEngine:
             # that is a config error, rejected here like the dense max_seq
             # guard. Overflow stops remain for pool *contention*.
             lifetime = len(req.prompt) + max(req.max_new_tokens - 1, 0)
-            if self._blocks_for(lifetime) > self.num_blocks:
+            if not self.host_spill \
+                    and self._blocks_for(lifetime) > self.num_blocks:
+                # With the host tier, a context larger than the device pool
+                # is exactly the case spilling exists for — admitted in
+                # waves, cold blocks live on the host.
                 raise ValueError(
                     f"request {req.rid}: needs {self._blocks_for(lifetime)} "
                     f"blocks over its lifetime but the pool only has "
@@ -431,6 +525,11 @@ class ServingEngine:
         used = self.num_blocks - self._alloc.total_free
         self.stats.blocks_in_use = used
         self.stats.peak_blocks_in_use = max(self.stats.peak_blocks_in_use, used)
+        if self.host_spill:
+            self.stats.hot_blocks = used
+            self.stats.cold_blocks = len(self._spilled)
+            self.stats.peak_cold_blocks = max(self.stats.peak_cold_blocks,
+                                              len(self._spilled))
         if self.n_shards > 1:
             hot = max(self._alloc.blocks_per_shard - f
                       for f in self._alloc.free_counts())
@@ -534,6 +633,8 @@ class ServingEngine:
         if blocks is None:
             return
         for b in blocks:
+            if b == SPILLED:
+                continue                    # host-tier entry: no device block
             self._refcount[b] -= 1
             assert self._refcount[b] >= 0, f"block {b} refcount underflow"
             if self._refcount[b] == 0:
@@ -542,7 +643,123 @@ class ServingEngine:
                 if key is not None:
                     self._prefix_nodes.pop(key, None)
         self._slot_pos.pop(slot, None)
+        if self.host_spill:
+            for key in [k for k in self._spilled if k[0] == slot]:
+                del self._spilled[key]
+                self._spill_score.pop(key, None)
+            self._hist_snap[slot] = 0
+            self._cold_streak[slot] = 0
         self._note_block_usage()
+
+    # -- tiered KV memory: host spill of cold blocks -------------------
+
+    def demote_block(self, slot: int, logical: int) -> None:
+        """Move one mapped PRIVATE block device → host: copy its storage-
+        format data rows into the numpy mirror, unmap the page-table entry
+        (the block becomes unselectable via `mapped_valid_mask` — never
+        garbage-read) and return the physical id to the free list."""
+        held = self._slot_blocks[slot]
+        blk = held[logical]
+        assert blk >= 0 and self._refcount[blk] == 1, \
+            f"demote needs a mapped private block, got (slot={slot}, " \
+            f"logical={logical}) -> {blk} rc={self._refcount[max(blk, 0)]}"
+        payload = jax.tree_util.tree_map(
+            np.asarray, self._read_block(self._state, jnp.int32(blk)))
+        self._spilled[(slot, logical)] = payload
+        # Resurrect priority = the block's historical relevance: cumulative
+        # selected-token count at demotion time (the paper's additive
+        # histograms, repurposed as the tier policy's score estimate).
+        self._spill_score[(slot, logical)] = float(
+            self._hist_snap[slot, logical])
+        self._state = self._map_block(self._state, jnp.int32(slot),
+                                      jnp.int32(logical), jnp.int32(-1))
+        self._refcount[blk] -= 1
+        self._alloc.release(blk)
+        held[logical] = SPILLED
+        self.stats.demotions += 1
+        self.stats.pcie_bytes += self._block_bytes
+        self._note_block_usage()
+
+    def promote_block(self, slot: int, logical: int) -> bool:
+        """Move one spilled block host → device: allocate a physical block,
+        `jax.device_put` the mirrored rows back (bit-exact — storage format
+        both ways) and remap it. Returns False when no block is free."""
+        payload = self._spilled.get((slot, logical))
+        assert payload is not None, f"({slot}, {logical}) is not spilled"
+        fresh = self._alloc.alloc(1)
+        if fresh is None:
+            return False
+        blk = fresh[0]
+        self._state = self._write_block(self._state, jnp.int32(blk),
+                                        jax.device_put(payload))
+        self._state = self._map_block(self._state, jnp.int32(slot),
+                                      jnp.int32(logical), jnp.int32(blk))
+        self._refcount[blk] += 1
+        self._slot_blocks[slot][logical] = blk
+        del self._spilled[(slot, logical)]
+        self._spill_score.pop((slot, logical), None)
+        self._cold_streak[slot, logical] = 0
+        self.stats.promotions += 1
+        self.stats.pcie_bytes += self._block_bytes
+        self._note_block_usage()
+        return True
+
+    def _update_cold_streaks(self) -> None:
+        """Diff the device-side selection histograms against the last
+        snapshot: a (slot, block) whose count did not move went one more
+        tick unselected."""
+        hist = np.asarray(self._sel_hist_fn(self._state)).astype(np.int64)
+        touched = (hist - self._hist_snap) > 0
+        self._hist_snap = hist
+        self._cold_streak[touched] = 0
+        self._cold_streak[~touched] += 1
+
+    def _demote_candidates(self) -> list[tuple[int, int, int]]:
+        """Eligible demotions, coldest first: (-streak, slot, logical) for
+        every mapped PRIVATE block outside the per-slot recency window
+        (`spill_keep_recent` trailing blocks — the cursor block among them —
+        always stay hot)."""
+        out = []
+        for slot in self._active:
+            held = self._slot_blocks[slot]
+            n_blocks = self._blocks_for(max(self._slot_pos[slot], 1))
+            hot_limit = max(n_blocks - self.spill_keep_recent, 0)
+            for j in range(min(hot_limit, len(held))):
+                b = held[j]
+                if b == SPILLED or self._refcount[b] != 1:
+                    continue
+                out.append((-int(self._cold_streak[slot, j]), slot, j))
+        out.sort()
+        return out
+
+    def _spill_policy(self) -> None:
+        """Post-tick demotion pass: every private block outside the recency
+        window that no layer selected for `demote_after` consecutive ticks
+        moves to the host tier."""
+        if not (self.host_spill and self._active):
+            return
+        self._update_cold_streaks()
+        for neg_streak, slot, j in self._demote_candidates():
+            if -neg_streak >= self.demote_after:
+                self.demote_block(slot, j)
+
+    def _promote_resurrected(self) -> None:
+        """Pre-tick promotion pass: while the pool has headroom beyond
+        `promote_headroom`, bring back each slot's spilled block with the
+        highest resurrect score — at most one per slot per tick, bounding
+        the PCIe traffic a tick can incur."""
+        if not (self.host_spill and self._spilled):
+            return
+        best: dict[int, tuple[float, int]] = {}
+        for (slot, j), score in self._spill_score.items():
+            if slot in self._active:
+                cur = best.get(slot)
+                if cur is None or (score, -j) > (cur[0], -cur[1]):
+                    best[slot] = (score, j)
+        for slot in sorted(best):
+            if self._alloc.total_free <= self.promote_headroom:
+                break
+            self.promote_block(slot, best[slot][1])
 
     # -- admission -----------------------------------------------------
 
@@ -584,23 +801,73 @@ class ServingEngine:
                             break
                         shared_ids.append(block)
                 need = need_full - len(shared_ids)
-                fresh = self._alloc.alloc(need)   # least-loaded shards first
-                if fresh is None:
-                    break                  # wait for blocks to free up
-                n_shared = len(shared_ids)
-                blocks = shared_ids + fresh
-                pages = np.full((self.max_blocks,), -1, np.int32)
-                pages[:need_full] = blocks
+                if self.host_spill and need > self._alloc.total_free:
+                    # Admission pressure: evict cold blocks of active slots
+                    # to the host tier before making the queue wait on the
+                    # device pool — the tier exists so admission is bounded
+                    # by host memory, not HBM.
+                    for _ in range(need - self._alloc.total_free):
+                        cand = self._demote_candidates()
+                        if not cand:
+                            break
+                        self.demote_block(cand[0][1], cand[0][2])
+                if self.host_spill and need > self._alloc.total_free:
+                    # Wave admission: the prompt exceeds the free device
+                    # pool even after eviction, so its blocks are written
+                    # in free-pool-sized waves and every wave but the last
+                    # (the recency tail) is demoted as soon as it lands.
+                    if self._alloc.total_free < 1:
+                        break              # wait for at least one hot block
+                    pages = None           # marks the wave path below
+                    blocks = []
+                else:
+                    fresh = self._alloc.alloc(need)  # least-loaded first
+                    if fresh is None:
+                        break              # wait for blocks to free up
+                    n_shared = len(shared_ids)
+                    blocks = shared_ids + fresh
+                    pages = np.full((self.max_blocks,), -1, np.int32)
+                    pages[:need_full] = blocks
             self._queue.popleft()
             slot = self._free.pop()
             if req.admitted is None:
                 req.admitted = t0
             logits_row, state1 = self._ensure_prefill(req)
-            if self.paged:
+            if self.paged and pages is None:
+                # Wave admission (host_spill): write the prompt into the
+                # pool one free-pool-sized wave at a time, demoting each
+                # wave to the host before the next lands; the final wave —
+                # the recency tail holding the cursor block — stays hot.
+                held = [SPILLED] * need_full
+                self._slot_blocks[slot] = held
+                self._slot_pos[slot] = plen
+                self._hist_snap[slot] = 0
+                self._cold_streak[slot] = 0
+                lo = 0
+                while lo < need_full:
+                    w = min(self._alloc.total_free, need_full - lo)
+                    ids = self._alloc.alloc(w)
+                    wave = np.full((self.max_blocks,), -1, np.int32)
+                    wave[lo:lo + w] = ids
+                    for j, b in zip(range(lo, lo + w), ids):
+                        held[j] = b
+                        self._refcount[b] += 1
+                    self._note_block_usage()
+                    self._state = self._write(
+                        self._state, state1, jnp.int32(slot),
+                        jnp.asarray(wave), jnp.int32(0))
+                    lo += w
+                    if lo < need_full:     # not the tail: spill the wave
+                        for j in range(lo - w, lo):
+                            self.demote_block(slot, j)
+            elif self.paged:
                 for b in blocks:           # shared: n → n+1; fresh: 0 → 1
                     self._refcount[b] += 1
                 self._slot_blocks[slot] = list(blocks)
                 self._slot_pos[slot] = len(req.prompt)
+                if self.host_spill:
+                    self._hist_snap[slot] = 0
+                    self._cold_streak[slot] = 0
                 self._note_block_usage()
                 self._state = self._write(self._state, state1, jnp.int32(slot),
                                           jnp.asarray(pages),
@@ -661,15 +928,24 @@ class ServingEngine:
                 held = self._slot_blocks[slot]
                 logical = pos // self.block_size
                 if pos < self.max_seq and logical < len(held) \
+                        and held[logical] >= 0 \
                         and self._refcount[held[logical]] <= 1:
                     continue                       # private capacity in place
+                if pos < self.max_seq and not self._alloc.total_free \
+                        and self.host_spill:
+                    # Growth pressure under the host tier: demote the
+                    # coldest eligible block instead of overflowing.
+                    cand = self._demote_candidates()
+                    if cand:
+                        self.demote_block(cand[0][1], cand[0][2])
                 if pos < self.max_seq and self._alloc.total_free:
                     # Growth continues the slot's tail; CoW privatizes the
                     # faulted block. Either way, prefer the shard already
                     # holding that block so the appending shard keeps its
                     # writes local (falls back to the least-loaded shard).
                     near = held[logical] if logical < len(held) else held[-1]
-                    blk = self._alloc.alloc(1, prefer=self._alloc.shard_of(near))[0]
+                    prefer = self._alloc.shard_of(near) if near >= 0 else None
+                    blk = self._alloc.alloc(1, prefer=prefer)[0]
                     self._refcount[blk] += 1       # 0 → 1
                     if logical == len(held):       # growth: map a fresh block
                         held.append(blk)
@@ -678,6 +954,7 @@ class ServingEngine:
                             jnp.int32(blk))
                     else:                          # CoW: privatize the block
                         old = held[logical]
+                        assert old >= 0, "cursor landed in a spilled block"
                         self._refcount[old] -= 1
                         held[logical] = blk
                         self.stats.cow_copies += 1
@@ -700,6 +977,7 @@ class ServingEngine:
 
     def _tick(self) -> None:
         """ONE fused decode call advancing every active slot."""
+        self._promote_resurrected()
         self._grow_or_overflow()
         if not self._active:
             return
@@ -733,6 +1011,7 @@ class ServingEngine:
                 self._finish(slot, req, now, "stop")
             elif len(req.output) >= req.max_new_tokens:
                 self._finish(slot, req, now, "length")
+        self._spill_policy()
 
     def run(self, max_ticks: int = 10_000) -> ServeStats:
         ticks = 0

@@ -121,6 +121,7 @@ def _paged_cache_spec(mesh: Mesh, cache: PagedSalcaCache, dp, seq,
         length=fs((None,), cache.length),
         page_table=fs((None, None), cache.page_table),
         refcount=fs((None,), cache.refcount),
+        sel_hist=fs((None, None), cache.sel_hist),
     )
 
 
