@@ -173,6 +173,90 @@ def _paged_decode_rows(rng, n: int, k: int, pool_factor: int = 64,
     return rows
 
 
+def _sharded_decode_rows(rng, n: int, k: int, gate: bool = False) -> list[str]:
+    """Sharded island tick: the PR 5 gather island vs the fully-pipelined
+    fused island, on a 1-way mesh (CPU wall times; the structural claim is
+    the bytes-moved model column).
+
+    * ``sharded_island_legacy`` — `sp_salca_decode_paged(fused=False)`:
+      every tick re-materializes capacity-shaped logical copies of all seven
+      pool leaves (`performance_model.sharded_gather_bytes_per_token`);
+    * ``sharded_island_fused``  — the fused island: two kernel passes over
+      owned-active blocks + the selected-block fetch, two psums
+      (`performance_model.sharded_fused_bytes_per_token`).
+
+    ``gate=True`` (the --smoke CI run) hard-fails if (a) the per-shard
+    bytes-moved model ratio falls under 10× at a 4-way shard, or (b) the
+    fused tick's measured wall time regresses past the legacy tick with the
+    same ratio+absolute-delta noise guard the paged gate uses.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core import (SalcaParams, empty_paged_cache, prefill_cache,
+                            prefill_into_pages)
+    from repro.core.performance_model import (
+        sharded_fused_bytes_per_token, sharded_gather_bytes_per_token)
+    from repro.core.sp_decode import sp_salca_decode_paged
+
+    bsz, kv, hd = 64, 2, 128
+    params = SalcaParams(k=k, k_cap=max(((int(k * 1.25) + 127) // 128) * 128,
+                                        128), pool_window=7)
+    mb_slot = 2 * n // bsz                 # per-slot logical capacity: 2n
+    num_blocks = 4 * n // bsz
+    kk = jnp.asarray(rng.normal(size=(1, n, kv, hd)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(1, n, kv, hd)), jnp.float32)
+    dense = prefill_cache(kk, vv, max_seq=mb_slot * bsz, params=params)
+    pool = empty_paged_cache(num_blocks, bsz, 1, mb_slot, kv, hd,
+                             params.r(hd))
+    need = n // bsz
+    pages = np.full(mb_slot, -1, np.int32)
+    pages[:need] = rng.choice(num_blocks, need, replace=False)
+    pool = prefill_into_pages(pool, dense, 0, jnp.asarray(pages))
+    q = jnp.asarray(rng.normal(size=(1, 2 * kv, hd)), jnp.float32)
+    mesh = compat.make_mesh((1,), ("seq",))
+
+    def island(fused):
+        def f(q_, p_):
+            return sp_salca_decode_paged(q_, p_, params, "seq", fused=fused)
+        return jax.jit(compat.shard_map(f, mesh, in_specs=(P(), P()),
+                                        out_specs=P(), check_vma=False))
+
+    leg = sharded_gather_bytes_per_token(
+        n=n, d=hd, kv_heads=kv, groups=2, s_f=0.5, retention=k / n,
+        n_shards=4, block_size=bsz, max_blocks=mb_slot, slots=1)
+    fus = sharded_fused_bytes_per_token(
+        n=n, d=hd, kv_heads=kv, groups=2, s_f=0.5, retention=k / n,
+        n_shards=4, block_size=bsz)
+    ratio = leg.local_total / max(fus.local_total, 1e-9)
+    model = {
+        "sharded_island_legacy":
+            f"shard4:{leg.local_total/1e6:.2f}MB_capacity_copies",
+        "sharded_island_fused":
+            f"shard4:{fus.local_total/1e3:.1f}KB_owned+selected"
+            f"({ratio:.0f}x_less)",
+    }
+    rows, us = [], {}
+    for name, fused in (("sharded_island_legacy", False),
+                        ("sharded_island_fused", True)):
+        us[name] = time_call(island(fused), q, pool)
+        rows.append(f"kernel_bench,{name},{us[name]:.1f},{model[name]}")
+    if gate:
+        if ratio < 10.0:
+            raise RuntimeError(
+                f"sharded fused bytes-moved model ratio {ratio:.1f}x < 10x "
+                f"at n={n} — the fused island's traffic model regressed")
+        if (us["sharded_island_fused"] > 1.5 * us["sharded_island_legacy"]
+                and us["sharded_island_fused"]
+                > us["sharded_island_legacy"] + 2000):
+            raise RuntimeError(
+                f"fused sharded tick ({us['sharded_island_fused']:.0f}us) is "
+                f"slower than the legacy gather tick "
+                f"({us['sharded_island_legacy']:.0f}us) — the island fusion "
+                f"regressed")
+    return rows
+
+
 def run(n: int = 32768, bh: int = 8, r: int = 64, k: int = 1024,
         paged_gate: bool = False) -> list[str]:
     rng = np.random.default_rng(0)
@@ -228,6 +312,11 @@ def run(n: int = 32768, bh: int = 8, r: int = 64, k: int = 1024,
     # (paged_gate=True — the --smoke CI run — hard-fails if the fused tick
     # regresses past the pool-wide gather tick)
     rows.extend(_paged_decode_rows(rng, n=min(n, 4096), k=k, gate=paged_gate))
+    # sharded island tick: legacy capacity-shaped gather vs the fully-
+    # pipelined fused island (paged_gate=True also hard-fails if the model
+    # bytes ratio drops under 10x or the fused tick regresses past legacy)
+    rows.extend(_sharded_decode_rows(rng, n=min(n, 2048), k=min(k, 512),
+                                     gate=paged_gate))
     return rows
 
 

@@ -12,10 +12,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantization as qz
 from repro.core.cache import (
     PagedSalcaCache, SalcaCache, gather_selected_paged, paged_logical_features,
     paged_logical_kv)
-from repro.core.histogram_topk import Selection
+from repro.core.histogram_topk import Selection, compact_indices
 from repro.core.selection import (
     SalcaParams, estimate_relevance, estimate_relevance_paged,
     query_heavy_features, salca_select, select_sparse_pattern_blocked)
@@ -73,20 +74,66 @@ def exact_sparse_attention(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
     return o.reshape(b, h, hd)
 
 
+def fused_select_flat(scores: jax.Array, length: jax.Array,
+                      params: SalcaParams, impl: str = "pallas",
+                      interpret: bool | None = None) -> Selection:
+    """Phases 2-3 through the fused `selection_fused` kernel (one HBM pass).
+
+    scores: (B, KV, N) f32; length: (B,) valid-prefix lengths. Bitwise-
+    identical Selection to `select_sparse_pattern` without sink/recent
+    forcing: the bounds are cleaned through `binning_affine` BEFORE they
+    reach the kernel (whose affine uses its `lo` operand raw), so the
+    in-kernel bins match `bins_from_bounds`, the integer maxpool is exact,
+    and the in-kernel reverse-prefix scan is `locate_threshold` verbatim.
+    """
+    from repro.kernels.selection_fused.ops import fused_bin_pool_threshold
+    b, kv, n = scores.shape
+    valid = jnp.arange(n)[None, :] < length[:, None]                # (B, N)
+    s = qz.masked_scores(scores, valid[:, None, :])
+    lo, hi = qz.score_bounds(s)                                     # (B, KV)
+    offset, _ = qz.binning_affine(lo, hi)
+    w = params.pool_window if params.use_pool else 1
+    pooled, _, thr = fused_bin_pool_threshold(
+        s.reshape(b * kv, n), offset.reshape(-1), hi.reshape(-1),
+        jnp.full((b * kv,), params.k, jnp.int32),
+        jnp.broadcast_to(length[:, None], (b, kv)).reshape(-1),
+        window=w, impl=impl, interpret=interpret)
+    keep = pooled >= thr[:, None].astype(pooled.dtype)
+    indices, mask, count = compact_indices(keep.reshape(b, kv, n),
+                                           params.k_cap)
+    return Selection(indices, mask, count, thr.reshape(b, kv))
+
+
 def salca_decode_attention(q: jax.Array, cache: SalcaCache, params: SalcaParams,
-                           return_selection: bool = False):
+                           return_selection: bool = False,
+                           impl: str | None = None,
+                           interpret: bool | None = None):
     """Full Salca decode attention for one step.
 
     q: (B, H, HD) current query (post-RoPE). Returns (B, H, HD) f32 output
     (and optionally the Selection for introspection).
+
+    ``impl`` routes selection phases 2-3: None/"xla" chains the library
+    primitives (`salca_select`); "pallas"/"ref" runs the fused
+    bin→pool→histogram→threshold kernel — same Selection bit-for-bit.
+    Sink/recent forcing bends the histogram before the threshold, which the
+    fused kernel doesn't model, so those configs stay on the XLA chain.
     """
     h = q.shape[1]
     kv = cache.num_kv_heads
     groups = h // kv
     q_feat = query_heavy_features(q, cache.heavy_idx, groups)
-    sel = salca_select(q_feat, cache.feat_words, cache.feat_scale,
-                       cache.feat_zero, groups, params,
-                       valid_mask=cache.valid_mask())
+    fused = (impl in ("pallas", "ref")
+             and not (params.sink_tokens or params.recent_tokens))
+    if fused:
+        scores = estimate_relevance(q_feat, cache.feat_words, cache.feat_scale,
+                                    cache.feat_zero, groups)
+        sel = fused_select_flat(scores, cache.length, params, impl=impl,
+                                interpret=interpret)
+    else:
+        sel = salca_select(q_feat, cache.feat_words, cache.feat_scale,
+                           cache.feat_zero, groups, params,
+                           valid_mask=cache.valid_mask())
     kc, ks, vc, vs = gather_selected(cache, sel)
     out = exact_sparse_attention(q, kc, ks, vc, vs, sel.mask)
     if return_selection:

@@ -265,6 +265,63 @@ def sharded_salca_bytes_per_token(n: int, d: int, kv_heads: int, groups: int,
         local_total=base.total / n_shards)
 
 
+def sharded_fused_bytes_per_token(n: int, d: int, kv_heads: int, groups: int,
+                                  s_f: float, retention: float,
+                                  n_shards: int, block_size: int,
+                                  pool_window: int = 7,
+                                  kv_pool_dtype: str = "int8"
+                                  ) -> ShardedDecodeBytes:
+    """Per-shard traffic of the FULLY-PIPELINED fused island tick.
+
+    Kernel 1 streams each owned ACTIVE feature block HBM→VMEM exactly once
+    (≈ n/n_shards keys; unowned blocks clamp to a single repeated fetch the
+    pipeline elides), kernel 2 consumes the scores in place, and the
+    partials flash kernel fetches only the shard's share of the SELECTED
+    blocks — block-granular, since the grid walks whole physical blocks.
+    The two collectives are context-length-independent
+    (`sharded_interconnect_bytes`). This is what the fused tick actually
+    moves: O(owned-active + owned-selected), against the legacy island's
+    capacity-shaped `sharded_gather_bytes_per_token`.
+    """
+    feat = kv_heads * (n / n_shards) * pre_bits_per_key(d, s_f) / 8.0
+    sel_blocks = -(-int(math.ceil(n * retention)) // block_size)
+    kv = (kv_heads * sel_blocks * block_size / n_shards
+          * kv_store_bits_per_key(d, kv_pool_dtype, block_size) / 8.0)
+    ic = sharded_interconnect_bytes(d, kv_heads, groups, -(-n // block_size),
+                                    n_shards, pool_window)
+    return ShardedDecodeBytes(
+        local_feature_stream=feat, local_kv_gather=kv,
+        interconnect=ic, local_total=feat + kv)
+
+
+def sharded_gather_bytes_per_token(n: int, d: int, kv_heads: int, groups: int,
+                                   s_f: float, retention: float,
+                                   n_shards: int, block_size: int,
+                                   max_blocks: int, slots: int = 1,
+                                   pool_window: int = 7,
+                                   kv_pool_dtype: str = "int8"
+                                   ) -> ShardedDecodeBytes:
+    """Per-shard traffic of the LEGACY (PR 5) gather island tick.
+
+    Each tick every shard re-materializes full-capacity logical views of
+    all seven pool leaves through the page table — (slots, max_blocks·BS,
+    KV, ·) copies shaped by pool CAPACITY, not by live tokens or local
+    ownership (unowned entries still write clamped rows). Each copy is
+    written once and re-read by the consuming op: 2× its bytes. ``n`` and
+    ``retention`` do not appear in the streamed terms — that invariance is
+    exactly the pathology the fused island removes.
+    """
+    l_cap = max_blocks * block_size
+    feat = 2.0 * slots * kv_heads * l_cap * pre_bits_per_key(d, s_f) / 8.0
+    kv = (2.0 * slots * kv_heads * l_cap
+          * kv_store_bits_per_key(d, kv_pool_dtype, block_size) / 8.0)
+    ic = sharded_interconnect_bytes(d, kv_heads, groups, max_blocks,
+                                    n_shards, pool_window)
+    return ShardedDecodeBytes(
+        local_feature_stream=feat, local_kv_gather=kv,
+        interconnect=ic, local_total=feat + kv)
+
+
 # ---------------------------------------------------------------------------
 # Tiered KV memory: pool capacity per HBM budget + host-spill PCIe traffic
 # ---------------------------------------------------------------------------

@@ -210,15 +210,29 @@ def score_bounds(s: jax.Array, axis: int = -1) -> tuple[jax.Array, jax.Array]:
     return lo, hi
 
 
+def binning_affine(lo: jax.Array, hi: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Global-bounds binning affine: (lo, hi) → (offset, scale) so that
+    ``bin = clip(round((s - offset)/scale) + 1, 1, 255)``.
+
+    THE definition of the INT8 binning arithmetic — `bins_from_bounds`, the
+    fused-selection kernels and their refs all derive bins from this exact
+    pair, so paths that merge raw per-shard bounds first (pmin/pmax) and
+    paths that bin locally land on bit-identical bins. All-masked rows (+inf
+    lo from `score_bounds`) clean up to offset 0 here."""
+    offset = jnp.where(jnp.isfinite(lo), lo, 0.0)
+    scale = jnp.maximum((hi - offset) / 254.0, _EPS)
+    return offset, scale
+
+
 def bins_from_bounds(s: jax.Array, lo: jax.Array, hi: jax.Array,
                      valid_mask: jax.Array | None = None) -> jax.Array:
     """Affine-map masked scores to uint8 bins given (possibly globally
     reduced) bounds; masked positions land on bin 0. The single definition
     of the binning arithmetic for the flat AND the sequence-sharded paths —
     identical bounds in, bit-identical bins out."""
-    lo = jnp.where(jnp.isfinite(lo), lo, 0.0)[..., None]
-    scale = jnp.maximum((hi[..., None] - lo) / 254.0, _EPS)
-    bins = jnp.clip(jnp.round((s - lo) / scale) + 1.0, 1.0, 255.0)
+    offset, scale = binning_affine(lo, hi)
+    offset, scale = offset[..., None], scale[..., None]
+    bins = jnp.clip(jnp.round((s - offset) / scale) + 1.0, 1.0, 255.0)
     if valid_mask is not None:
         bins = jnp.where(valid_mask, bins, 0.0)
     return bins.astype(jnp.uint8)

@@ -153,6 +153,36 @@ def estimate_relevance_paged(q_feat: jax.Array, pool, groups: int,
         impl=impl, interpret=interpret)
 
 
+def estimate_relevance_paged_bounds(q_feat: jax.Array, pool, groups: int,
+                                    blk_valid: jax.Array,
+                                    pages: jax.Array | None = None,
+                                    impl: str | None = None,
+                                    interpret: bool | None = None):
+    """Phase 1 of the sharded fused tick: streaming scores + raw bounds.
+
+    Like `estimate_relevance_paged` but the per-block validity columns
+    ``blk_valid`` (S, MB, BS) — this shard's owned-AND-stored positions —
+    ride into the scoring pass, which sentinel-masks the scores and
+    accumulates the raw (lo, hi) bounds in the same sweep. ``pages``
+    overrides the page table the stream walks (inside a sharded island pass
+    the shard-LOCALIZED clamped table; the pool's own table holds global
+    ids). Returns (scores (S, KV, L) sentinel-masked, lo (S, KV),
+    hi (S, KV)); the caller pmin/pmax-merges the bounds before binning.
+    """
+    from repro.flags import PERF
+    from repro.kernels.score_est.ops import paged_score_bounds
+    s, h, r = q_feat.shape
+    kv = pool.num_kv_heads
+    assert h == kv * groups
+    if pages is None:
+        pages = pool.clamped_pages()
+    qc, qs, qsum = _quantized_query_groups(q_feat, kv)
+    return paged_score_bounds(
+        qc, qs, qsum, pool.feat_words, pool.feat_scale, pool.feat_zero,
+        pages, blk_valid, bf16=PERF.bf16_collectives,
+        impl=impl, interpret=interpret)
+
+
 def select_sparse_pattern(scores: jax.Array, params: SalcaParams,
                           valid_mask: jax.Array | None = None) -> ht.Selection:
     """Phases 2-3: INT8 binning → maxpool → histogram threshold → compaction.

@@ -29,11 +29,12 @@ import jax.numpy as jnp
 from repro.core import histogram_topk as ht
 from repro.core import quantization as qz
 from repro.core.cache import (
-    PagedSalcaCache, SalcaCache, _encode_tokens, gather_selected_paged,
-    local_block_range)
+    PagedSalcaCache, SalcaCache, _encode_tokens, _resolve_pages,
+    gather_selected_paged, local_block_range)
 from repro.core.maxpool import maxpool1d_blocked_halo, maxpool1d_reuse
 from repro.core.selection import (
-    SalcaParams, estimate_relevance, query_heavy_features)
+    SalcaParams, estimate_relevance, estimate_relevance_paged_bounds,
+    query_heavy_features)
 from repro.core.attention import gather_selected, NEG_INF
 from repro import compat
 
@@ -258,28 +259,59 @@ def _local_logical(pool: PagedSalcaCache, local_pt: jax.Array):
 def sp_salca_decode_paged(q: jax.Array, pool: PagedSalcaCache,
                           params: SalcaParams, axis_name,
                           shard_cap: int | None = None,
-                          return_selection: bool = False):
+                          return_selection: bool = False,
+                          fused: bool | None = None,
+                          impl: str | None = None,
+                          interpret: bool | None = None):
     """Salca decode attention over a block-sharded paged pool, in shard_map.
 
     q: (S, H, HD) replicated; `pool` holds this shard's physical blocks plus
-    replicated metadata (see `models.blocks.paged_cache_pspec`). Composes
-    blocked scoring over locally-mapped blocks → psum'd histogram threshold
-    → local selection → local exact attention → online-softmax merge. The
+    replicated metadata (see `models.blocks.paged_cache_pspec`). The
     selection (token set, threshold, capacity truncation) is bit-identical
     to `attention.salca_decode_attention_paged` on the unsharded pool.
+
+    Two implementations of the same tick:
+
+    * ``fused=True`` (default via `PERF.sharded_fused_decode`) — the
+      fully-pipelined island: scoring streams each locally-owned physical
+      feature block once while accumulating the binning bounds, the fused
+      bin/pool/hist pass consumes the scores in place, and exact attention
+      walks only the shard-local selected blocks. Per-shard per-tick pool
+      traffic is O(owned-active + owned-selected) blocks. ``impl`` steers
+      the kernel legs ("pallas"/"ref"/"gather", default per platform).
+    * ``fused=False`` — the PR 5 logical-gather island: O(local pool)
+      feature/KV copies re-materialize through the page table each tick.
+      Kept as the structural baseline (same selection bit-for-bit — that is
+      the regression test).
 
     `shard_cap` is the per-shard index-buffer capacity; it defaults to the
     full `params.k_cap` so that even a maximally skewed placement (every
     selected block on one shard) drops exactly the tokens the flat path
     drops, keeping parity unconditional.
     """
+    if fused is None:
+        from repro.flags import PERF
+        fused = PERF.sharded_fused_decode
+    if shard_cap is None:
+        shard_cap = params.k_cap
+    if fused:
+        return _sp_salca_decode_paged_fused(q, pool, params, axis_name,
+                                            shard_cap, return_selection,
+                                            impl, interpret)
+    return _sp_salca_decode_paged_gather(q, pool, params, axis_name,
+                                         shard_cap, return_selection)
+
+
+def _sp_salca_decode_paged_gather(q: jax.Array, pool: PagedSalcaCache,
+                                  params: SalcaParams, axis_name,
+                                  shard_cap: int,
+                                  return_selection: bool = False):
+    """The PR 5 logical-gather island (see `sp_salca_decode_paged`)."""
     s_, h, hd = q.shape
     kv = pool.num_kv_heads
     groups = h // kv
     bs, mb = pool.block_size, pool.max_blocks
     n = pool.max_seq
-    if shard_cap is None:
-        shard_cap = params.k_cap
     block_range, owned_blk, local_pt = _shard_pool_view(pool, axis_name)
     own = jnp.broadcast_to(owned_blk[..., None],
                            owned_blk.shape + (bs,)).reshape(s_, n)   # (S, L)
@@ -370,6 +402,154 @@ def sp_salca_decode_paged(q: jax.Array, pool: PagedSalcaCache,
     return out
 
 
+def _sp_salca_decode_paged_fused(q: jax.Array, pool: PagedSalcaCache,
+                                 params: SalcaParams, axis_name,
+                                 shard_cap: int,
+                                 return_selection: bool = False,
+                                 impl: str | None = None,
+                                 interpret: bool | None = None):
+    """The fully-pipelined sharded island (see `sp_salca_decode_paged`).
+
+    A sharded decode tick is two kernel sweeps over the shard's owned pool
+    blocks bracketing two collective phases:
+
+      kernel 1  scoring+bounds: each owned feature block streams HBM→VMEM
+                once; sentinel-masked scores and the raw (lo, hi) binning
+                bounds come out of the same pass.
+      psums  1  pmin/pmax the bounds; psum the pre-pool block-edge bin
+                columns (the blocked-maxpool halo, O(MB·halo) u8) and —
+                after kernel 2 — the additive 256-bin histogram and the
+                per-block kept counts (the flat capacity-truncation rank).
+      kernel 2  fused selection: INT8 binning (global-bounds affine) +
+                stride-1 maxpool (psum'd halos) + histogram accumulation,
+                consuming the scores without re-reading the pool.
+      kernel 3  exact attention over the shard-local selected-block plan
+                (each selected owned block streams once).
+      psums  2  the online-softmax (m, l, acc) pmax/psum merge.
+
+    Selection set, threshold and capacity truncation are bit-identical to
+    the gather island AND the flat paged path: the scores share the dequant
+    chain, min/max/histogram/rank are exact integer/order-independent
+    reductions, and the binning affine is the same expression tree
+    (`quantization.binning_affine`) everywhere.
+    """
+    from repro.kernels.common import paged_impl_default
+    from repro.kernels.flash_decode.ops import sparse_flash_decode_paged_partials
+    from repro.kernels.selection_fused.ops import paged_fused_select
+    s_, h, hd = q.shape
+    kv = pool.num_kv_heads
+    groups = h // kv
+    bs, mb = pool.block_size, pool.max_blocks
+    n = pool.max_seq
+    block_range, owned_blk, local_pt = _shard_pool_view(pool, axis_name)
+    pos_blk = jnp.arange(n, dtype=jnp.int32).reshape(mb, bs)
+    stored = pos_blk[None] < pool.length[:, None, None]            # (S,MB,BS)
+    blk_valid = owned_blk[..., None] & stored                      # (S,MB,BS)
+    mask3 = blk_valid.reshape(s_, 1, n)
+
+    # --- Kernel 1: streaming scores + raw bounds over owned blocks ------
+    q_feat = query_heavy_features(q, pool.heavy_idx, groups)
+    qg = q.reshape(s_, kv, groups, hd).astype(jnp.float32)   # phase-4 operand
+    sm, lo_l, hi_l = estimate_relevance_paged_bounds(
+        q_feat, pool, groups, blk_valid, pages=local_pt,
+        impl=impl, interpret=interpret)                          # (S,KV,L)
+
+    # --- Collective 1a: merged binning bounds + pre-pool halo columns ---
+    lo = jax.lax.pmin(lo_l, axis_name)
+    hi = jax.lax.pmax(hi_l, axis_name)
+    blocked = sm.reshape(s_, kv, mb, bs)
+    use_pool = params.use_pool and params.pool_window > 1
+    w = params.pool_window if use_pool else 1
+    if use_pool:
+        halo = w // 2
+        # Bin ONLY each block's edge columns in XLA (O(MB·halo) work) with
+        # the merged global affine — bit-identical to slicing the full bins,
+        # which kernel 2 computes in VMEM. Each column is nonzero only on
+        # its owner, so one psum reconstructs every block's true edges.
+        edge_s = jnp.concatenate([blocked[..., -halo:],
+                                  blocked[..., :halo]], axis=-1)
+        edge_v = jnp.concatenate([blk_valid[..., -halo:],
+                                  blk_valid[..., :halo]], axis=-1)[:, None]
+        edge_bins = qz.bins_from_bounds(
+            edge_s.reshape(s_, kv, mb * 2 * halo), lo, hi,
+            edge_v.reshape(s_, 1, mb * 2 * halo)).reshape(s_, kv, mb, 2 * halo)
+        edges = jax.lax.psum(edge_bins.astype(jnp.int32), axis_name)
+        left, right = edges[..., :halo], edges[..., halo:]
+        zero = jnp.zeros(left.shape[:-2] + (1, halo), jnp.int32)
+        from_left = jnp.concatenate([zero, left[..., :-1, :]],
+                                    axis=-2).astype(jnp.uint8)
+        from_right = jnp.concatenate([right[..., 1:, :], zero],
+                                     axis=-2).astype(jnp.uint8)
+    else:
+        from_left = jnp.zeros((s_, kv, mb, 1), jnp.uint8)
+        from_right = jnp.zeros((s_, kv, mb, 1), jnp.uint8)
+    if params.sink_tokens or params.recent_tokens:
+        pos = jnp.arange(n)
+        forced = jnp.zeros((n,), bool)
+        if params.sink_tokens:
+            forced |= pos < params.sink_tokens
+        if params.recent_tokens:
+            length = jnp.sum(pool.valid_mask().astype(jnp.int32), axis=-1,
+                             keepdims=True)
+            forced = forced[None, :] | (pos[None, :]
+                                        >= (length - params.recent_tokens))
+        force = jnp.broadcast_to(forced, (s_, n)).reshape(s_, mb, bs)
+    else:
+        force = jnp.zeros((s_, mb, bs), jnp.bool_)
+
+    # --- Kernel 2: fused bin/pool/hist, scores consumed in place --------
+    pooled4, hist_l = paged_fused_select(
+        blocked, lo, hi, from_left, from_right, blk_valid, force,
+        window=w, impl=impl, interpret=interpret)
+    pooled = pooled4.reshape(s_, kv, n)
+
+    # --- Collective 1b: histogram psum → threshold; global rank ---------
+    # Identical XLA to the gather island from here to the Selection.
+    hist = jax.lax.psum(hist_l, axis_name)
+    t = ht.locate_threshold(hist, params.k)                          # (S, KV)
+    keep = pooled >= t[..., None].astype(pooled.dtype)
+    kb = keep.reshape(s_, kv, mb, bs)
+    blk_counts = jax.lax.psum(jnp.sum(kb.astype(jnp.int32), axis=-1),
+                              axis_name)                             # (S,KV,MB)
+    base = jnp.cumsum(blk_counts, axis=-1) - blk_counts              # exclusive
+    within = jnp.cumsum(kb.astype(jnp.int32), axis=-1) - 1
+    grank = (base[..., None] + within).reshape(s_, kv, n)
+    keep = keep & (grank < params.k_cap)
+    indices, mask, count = ht.compact_indices(keep, shard_cap)
+    sel = ht.Selection(indices, mask, count, t)
+
+    # --- Kernel 3 + collective 2: sharded exact attention ---------------
+    phase4 = impl
+    if phase4 is None:
+        phase4 = "pallas" if paged_impl_default() == "pallas" else "gather"
+    if phase4 == "gather":
+        # Row-gather + einsum partials with the gather island's merge
+        # (pmax BEFORE exp) — bitwise that path's phase 4, making the
+        # platform-default fused tick fully bitwise vs the gather island.
+        kc, ks, vc, vs = gather_selected_paged(pool, sel, block_range)
+        s = jnp.einsum("bkgd,bkcd->bkgc", qg, kc.astype(jnp.float32))
+        s = s * ks[:, :, None, :] / jnp.sqrt(hd).astype(jnp.float32)
+        s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+        m_g = jax.lax.pmax(jnp.max(s, axis=-1), axis_name)
+        p = jnp.exp(s - m_g[..., None])
+        p = jnp.where(mask[:, :, None, :], p, 0.0)
+        l_g = jax.lax.psum(jnp.sum(p, axis=-1), axis_name)
+        v = vc.astype(jnp.float32) * vs[..., None]
+        acc_g = jax.lax.psum(jnp.einsum("bkgc,bkcd->bkgd", p, v), axis_name)
+    else:
+        acc_l, m_l, l_l = sparse_flash_decode_paged_partials(
+            q, pool, sel, block_range=block_range, impl=phase4,
+            interpret=interpret)                                 # (S,KV,G,·)
+        m_g = jax.lax.pmax(m_l, axis_name)
+        corr = jnp.exp(m_l - m_g)
+        l_g = jax.lax.psum(l_l * corr, axis_name)
+        acc_g = jax.lax.psum(acc_l * corr[..., None], axis_name)
+    out = (acc_g / jnp.maximum(l_g, 1e-20)[..., None]).reshape(s_, h, hd)
+    if return_selection:
+        return out, sel
+    return out
+
+
 def sp_dense_decode_paged(q: jax.Array, pool: PagedSalcaCache, axis_name,
                           window: int = 0,
                           global_pos: jax.Array | None = None) -> jax.Array:
@@ -379,27 +559,37 @@ def sp_dense_decode_paged(q: jax.Array, pool: PagedSalcaCache, axis_name,
     K/V blocks it holds (unowned logical positions are masked) and the
     partials merge with the same online-softmax psum. ``window``>0 restricts
     to the trailing window of ``global_pos`` (per-slot positions) — the
-    sliding-window / dense-oracle path over a sharded pool."""
+    sliding-window / dense-oracle path over a sharded pool.
+
+    The fetch goes through the row-gather resolve (`cache._resolve_pages`):
+    one advanced-index gather per field straight into the (S, KV, L, ·)
+    attention layout — no (S, L, KV, ·) logical pool copy and no pool-wide
+    transpose (the previous form materialized both, per field, every tick).
+    Works for all three `kv_pool_dtype` modes (the old path was int8-only).
+    """
     s_, h, hd = q.shape
     kv = pool.num_kv_heads
     groups = h // kv
     n = pool.max_seq
-    _, owned_blk, local_pt = _shard_pool_view(pool, axis_name)
-    own = jnp.broadcast_to(owned_blk[..., None],
-                           owned_blk.shape + (pool.block_size,)).reshape(s_, n)
-    valid = pool.valid_mask() & own
+    block_range = local_block_range(pool, axis_name)
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (s_, n))
+    pg, off, owned = _resolve_pages(pool, idx, block_range)        # (S, L)
+    valid = pool.valid_mask() & owned
     if window > 0:
         assert global_pos is not None
         pos = jnp.arange(n, dtype=jnp.int32)[None, :]
         valid = valid & (pos > (global_pos[:, None] - window))
-    logical = _local_logical(pool, local_pt)
-    k = (logical(pool.k_codes).astype(jnp.float32)
-         * logical(pool.k_scale)[..., None])
-    v = (logical(pool.v_codes).astype(jnp.float32)
-         * logical(pool.v_scale)[..., None])
+    pgk, offk = pg[:, None, :], off[:, None, :]                    # (S, 1, L)
+    kvb = jnp.arange(kv)[None, :, None]                            # (1, KV, 1)
+    kc, vc = pool.k_codes[pgk, offk, kvb], pool.v_codes[pgk, offk, kvb]
+    mode = pool.kv_pool_dtype
+    if mode == "int4":
+        kc, vc = qz.unpack_int4(kc), qz.unpack_int4(vc)
+    soff = offk if mode == "int8" else jnp.zeros_like(offk)
+    ks, vs = pool.k_scale[pgk, soff, kvb], pool.v_scale[pgk, soff, kvb]
+    kk = kc.astype(jnp.float32) * ks[..., None]                    # (S,KV,L,HD)
+    vv = vc.astype(jnp.float32) * vs[..., None]
     qg = q.reshape(s_, kv, groups, hd).astype(jnp.float32)
-    kk = k.transpose(0, 2, 1, 3)                                # (S,KV,L,HD)
-    vv = v.transpose(0, 2, 1, 3)
     s = jnp.einsum("bkgd,bksd->bkgs", qg, kk) / jnp.sqrt(hd).astype(jnp.float32)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m_g = jax.lax.pmax(jnp.max(s, axis=-1), axis_name)

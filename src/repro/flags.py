@@ -49,6 +49,15 @@ class PerfFlags:
     # tick (baseline reproduces the PR 3 gather-everything path).
     paged_fused_decode: bool = True
 
+    # it-12 (sharded decode, memory term): fully-pipelined sharded island —
+    # each shard's decode tick runs the scalar-prefetched paged kernels over
+    # the physical blocks it owns (scoring streams owned feature blocks once
+    # and the fused bin/pool/hist pass consumes the scores in place), instead
+    # of re-materializing O(local pool) logical feature/KV copies through the
+    # page table every tick. Baseline reproduces the PR 5 logical-gather
+    # island (still bit-identical selection — that is the regression test).
+    sharded_fused_decode: bool = True
+
     def baseline(self) -> "PerfFlags":
         return replace(self, **{f.name: False for f in fields(self)})
 

@@ -1,7 +1,11 @@
 from repro.kernels.flash_decode.ops import (
-    sparse_flash_decode, sparse_flash_decode_paged)
+    sparse_flash_decode, sparse_flash_decode_paged,
+    sparse_flash_decode_paged_partials)
 from repro.kernels.flash_decode.ref import (
-    sparse_flash_decode_paged_ref, sparse_flash_decode_ref)
+    sparse_flash_decode_paged_partials_ref, sparse_flash_decode_paged_ref,
+    sparse_flash_decode_ref)
 
 __all__ = ["sparse_flash_decode", "sparse_flash_decode_ref",
-           "sparse_flash_decode_paged", "sparse_flash_decode_paged_ref"]
+           "sparse_flash_decode_paged", "sparse_flash_decode_paged_ref",
+           "sparse_flash_decode_paged_partials",
+           "sparse_flash_decode_paged_partials_ref"]

@@ -126,10 +126,11 @@ def _unpack_nibbles(codes):
     return jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], -1)
 
 
-def _paged_kernel(pblk_ref, cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
-                  mask_ref, out_ref, m_ref, l_ref, acc_ref, *, scale: float,
-                  nsb: int, int4: bool, per_block_scale: bool):
-    del pblk_ref  # consumed by the index_maps
+def _paged_step(cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref,
+                m_ref, l_ref, acc_ref, *, scale: float, int4: bool,
+                per_block_scale: bool):
+    """One (b, n) grid step of the paged online softmax — shared between the
+    normalizing kernel and the partials (sharded-merge) kernel."""
     b = pl.program_id(0)
     n = pl.program_id(1)
 
@@ -172,9 +173,34 @@ def _paged_kernel(pblk_ref, cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
         m_ref[...] = m_new
 
-    @pl.when(n == nsb - 1)
+
+def _paged_kernel(pblk_ref, cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                  mask_ref, out_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                  nsb: int, int4: bool, per_block_scale: bool):
+    del pblk_ref  # consumed by the index_maps
+    _paged_step(cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref,
+                m_ref, l_ref, acc_ref, scale=scale, int4=int4,
+                per_block_scale=per_block_scale)
+
+    @pl.when(pl.program_id(1) == nsb - 1)
     def _finalize():
         out_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+
+
+def _paged_partials_kernel(pblk_ref, cnt_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                           vs_ref, mask_ref, acc_out_ref, m_out_ref, l_out_ref,
+                           m_ref, l_ref, acc_ref, *, scale: float, nsb: int,
+                           int4: bool, per_block_scale: bool):
+    del pblk_ref  # consumed by the index_maps
+    _paged_step(cnt_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref,
+                m_ref, l_ref, acc_ref, scale=scale, int4=int4,
+                per_block_scale=per_block_scale)
+
+    @pl.when(pl.program_id(1) == nsb - 1)
+    def _finalize():
+        acc_out_ref[0] = acc_ref[...]
+        m_out_ref[0] = m_ref[...]
+        l_out_ref[0] = l_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("num_kv", "kv_dtype", "interpret"))
@@ -212,18 +238,7 @@ def sparse_flash_decode_paged_pallas(q: jax.Array, k_codes: jax.Array,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(bh, nsb),
-        in_specs=[
-            pl.BlockSpec((1, g, hd), lambda b, n, pb, ct: (b, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hdc),
-                         lambda b, n, pb, ct: (pb[b, n], 0, b % kv, 0)),
-            pl.BlockSpec((1, sb, 1),
-                         lambda b, n, pb, ct: (pb[b, n], 0, b % kv)),
-            pl.BlockSpec((1, bs, 1, hdc),
-                         lambda b, n, pb, ct: (pb[b, n], 0, b % kv, 0)),
-            pl.BlockSpec((1, sb, 1),
-                         lambda b, n, pb, ct: (pb[b, n], 0, b % kv)),
-            pl.BlockSpec((1, 1, bs), lambda b, n, pb, ct: (b, n, 0)),
-        ],
+        in_specs=_paged_in_specs(g, hd, bs, hdc, sb, kv),
         out_specs=pl.BlockSpec((1, g, hd), lambda b, n, pb, ct: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),
@@ -237,6 +252,76 @@ def sparse_flash_decode_paged_pallas(q: jax.Array, k_codes: jax.Array,
                           per_block_scale=(kv_dtype != "int8")),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(pblk, counts, q, k_codes, k_scale, v_codes, v_scale,
+      blk_mask.astype(jnp.int8))
+
+
+def _paged_in_specs(g, hd, bs, hdc, sb, kv):
+    return [
+        pl.BlockSpec((1, g, hd), lambda b, n, pb, ct: (b, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hdc),
+                     lambda b, n, pb, ct: (pb[b, n], 0, b % kv, 0)),
+        pl.BlockSpec((1, sb, 1),
+                     lambda b, n, pb, ct: (pb[b, n], 0, b % kv)),
+        pl.BlockSpec((1, bs, 1, hdc),
+                     lambda b, n, pb, ct: (pb[b, n], 0, b % kv, 0)),
+        pl.BlockSpec((1, sb, 1),
+                     lambda b, n, pb, ct: (pb[b, n], 0, b % kv)),
+        pl.BlockSpec((1, 1, bs), lambda b, n, pb, ct: (b, n, 0)),
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("num_kv", "kv_dtype", "interpret"))
+def sparse_flash_decode_paged_partials_pallas(
+        q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+        v_codes: jax.Array, v_scale: jax.Array, pblk: jax.Array,
+        counts: jax.Array, blk_mask: jax.Array, *, num_kv: int,
+        kv_dtype: str = "int8", interpret: bool | None = None):
+    """`sparse_flash_decode_paged_pallas` that stops before normalizing.
+
+    Same contract, but returns the raw online-softmax state
+    ``(acc (BH, G, HD), m (BH, G), l (BH, G))`` instead of ``acc / l`` —
+    the shard-local partials of the sharded fused tick, merged across chips
+    afterwards with the standard flash rescale
+    (``m* = pmax(m); out = psum(acc·e^{m−m*}) / psum(l·e^{m−m*})``).
+    Rows with ``counts == 0`` (shard owns nothing the selection touched)
+    come back as (0, NEG_INF, 0) and vanish in the merge.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    bh, g, hd = q.shape
+    bs = k_codes.shape[1]
+    hdc = k_codes.shape[3]
+    sb = k_scale.shape[1]
+    nsb = pblk.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    kv = num_kv
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, nsb),
+        in_specs=_paged_in_specs(g, hd, bs, hdc, sb, kv),
+        out_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, n, pb, ct: (b, 0, 0)),
+            pl.BlockSpec((1, g), lambda b, n, pb, ct: (b, 0)),
+            pl.BlockSpec((1, g), lambda b, n, pb, ct: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_partials_kernel, scale=scale, nsb=nsb,
+                          int4=(kv_dtype == "int4"),
+                          per_block_scale=(kv_dtype != "int8")),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, g), jnp.float32),
+            jax.ShapeDtypeStruct((bh, g), jnp.float32),
+        ],
         interpret=interpret,
     )(pblk, counts, q, k_codes, k_scale, v_codes, v_scale,
       blk_mask.astype(jnp.int8))

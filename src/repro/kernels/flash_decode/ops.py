@@ -18,9 +18,11 @@ import jax.numpy as jnp
 
 from repro.kernels.common import paged_impl_default
 from repro.kernels.flash_decode.kernel import (
-    sparse_flash_decode_paged_pallas, sparse_flash_decode_pallas)
+    sparse_flash_decode_paged_pallas, sparse_flash_decode_paged_partials_pallas,
+    sparse_flash_decode_pallas)
 from repro.kernels.flash_decode.ref import (
-    sparse_flash_decode_paged_ref, sparse_flash_decode_ref)
+    sparse_flash_decode_paged_partials_ref, sparse_flash_decode_paged_ref,
+    sparse_flash_decode_ref)
 
 
 def sparse_flash_decode(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
@@ -33,7 +35,7 @@ def sparse_flash_decode(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
     return sparse_flash_decode_ref(q, k_codes, k_scale, v_codes, v_scale, mask)
 
 
-def _selected_block_plan(pool, sel):
+def _selected_block_plan(pool, sel, block_range=None):
     """Resolve a Selection to per-(slot, kv-head) physical block lists.
 
     Host-of-the-trace prep for the paged-native kernel: the C selected
@@ -50,7 +52,14 @@ def _selected_block_plan(pool, sel):
 
     Unmapped resolutions clamp to block 0; a well-formed selection (gated to
     pos < length) never lands there, and padding is masked out regardless.
+
+    With ``block_range`` (inside a sharded island) the plan is SHARD-LOCAL:
+    only selected blocks this shard owns are listed, with their ids in the
+    local coordinate — each shard's kernel leg touches exactly the selected
+    blocks resident in its pool slice, and a shard owning none of a row's
+    selection gets counts == 0 (its partials vanish in the merge).
     """
+    from repro.core.cache import _localize_pages
     from repro.core.histogram_topk import compact_indices
     s, kv, c = sel.indices.shape
     bs, mb, l = pool.block_size, pool.max_blocks, pool.max_seq
@@ -61,9 +70,14 @@ def _selected_block_plan(pool, sel):
     rows = jnp.arange(bh)[:, None]
     tok = jnp.zeros((bh, l), jnp.bool_).at[rows, idx].max(m)
     blk_active = jnp.zeros((bh, mb), jnp.bool_).at[rows, idx // bs].max(m)
+    if block_range is None:
+        pt = pool.clamped_pages()                               # (S, MB)
+    else:
+        local = _localize_pages(pool.page_table, block_range)   # (S, MB)
+        blk_active &= jnp.repeat(local >= 0, kv, axis=0)
+        pt = jnp.where(local >= 0, local, 0)
     lblk, lmask, cnt = compact_indices(blk_active, nsb)         # (BH, NSB)
-    pt = jnp.repeat(pool.clamped_pages(), kv, axis=0)           # (BH, MB)
-    pblk = jnp.take_along_axis(pt, lblk, axis=1)
+    pblk = jnp.take_along_axis(jnp.repeat(pt, kv, axis=0), lblk, axis=1)
     bmask = jnp.take_along_axis(tok.reshape(bh, mb, bs),
                                 lblk[:, :, None], axis=1)       # (BH, NSB, BS)
     return pblk.astype(jnp.int32), cnt.astype(jnp.int32), bmask & lmask[:, :, None]
@@ -127,3 +141,38 @@ def sparse_flash_decode_paged(q: jax.Array, pool, sel, *, impl: str | None = Non
         raise ValueError(f"unknown impl {impl!r} "
                          "(expected 'pallas', 'ref' or 'gather')")
     return out.reshape(s, h, hd)
+
+
+def sparse_flash_decode_paged_partials(q: jax.Array, pool, sel, *,
+                                       block_range=None, impl: str | None = None,
+                                       interpret: bool | None = None):
+    """Shard-local leg of the sharded exact-attention phase.
+
+    Same inputs as `sparse_flash_decode_paged` plus ``block_range`` (the
+    island's `local_block_range`), but returns the UNNORMALIZED online-
+    softmax state ``(acc (S, KV, G, HD), m (S, KV, G), l (S, KV, G))`` over
+    the shard-local selected-block plan; the caller merges across chips with
+    the flash rescale (pmax on m, psum on corrected l/acc). impl: "pallas"
+    (scalar-prefetched kernel) or "ref" (blocked oracle); default follows
+    `paged_impl_default`.
+    """
+    s, h, hd = q.shape
+    kv = pool.num_kv_heads
+    g = h // kv
+    if impl is None:
+        impl = paged_impl_default()
+    pblk, counts, bmask = _selected_block_plan(pool, sel, block_range)
+    qr = q.reshape(s * kv, g, hd)
+    if impl == "pallas":
+        acc, m, l = sparse_flash_decode_paged_partials_pallas(
+            qr, pool.k_codes, pool.k_scale, pool.v_codes, pool.v_scale,
+            pblk, counts, bmask, num_kv=kv, kv_dtype=pool.kv_pool_dtype,
+            interpret=interpret)
+    elif impl == "ref":
+        acc, m, l = sparse_flash_decode_paged_partials_ref(
+            qr, pool.k_codes, pool.k_scale, pool.v_codes, pool.v_scale,
+            pblk, bmask, kv, kv_dtype=pool.kv_pool_dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r} (expected 'pallas' or 'ref')")
+    return (acc.reshape(s, kv, g, hd), m.reshape(s, kv, g),
+            l.reshape(s, kv, g))

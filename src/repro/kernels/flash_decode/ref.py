@@ -61,3 +61,55 @@ def sparse_flash_decode_paged_ref(q: jax.Array, k_codes: jax.Array,
     vs = v_scale[pb, stok, kvb].reshape(bh, nsb * bs)
     return sparse_flash_decode_ref(q, kc, ks, vc, vs,
                                    blk_mask.reshape(bh, nsb * bs))
+
+
+def sparse_flash_decode_partials_ref(q: jax.Array, k_codes: jax.Array,
+                                     k_scale: jax.Array, v_codes: jax.Array,
+                                     v_scale: jax.Array, mask: jax.Array):
+    """Flat oracle stopping before normalization: returns (acc, m, l).
+
+    All-masked rows come back as (0, NEG_INF, 0), matching the partials
+    kernel's counts == 0 rows, so they vanish in the cross-shard merge."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bgd,bcd->bgc", q.astype(jnp.float32),
+                   k_codes.astype(jnp.float32))
+    s = s * k_scale[:, None, :] / jnp.sqrt(hd)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)          # all-masked rows: exactly NEG_INF
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    v = v_codes.astype(jnp.float32) * v_scale[..., None]
+    acc = jnp.einsum("bgc,bcd->bgd", p, v)
+    return acc, m, l
+
+
+def sparse_flash_decode_paged_partials_ref(q: jax.Array, k_codes: jax.Array,
+                                           k_scale: jax.Array,
+                                           v_codes: jax.Array,
+                                           v_scale: jax.Array,
+                                           pblk: jax.Array,
+                                           blk_mask: jax.Array,
+                                           num_kv: int,
+                                           kv_dtype: str = "int8"):
+    """Paged partials oracle: `sparse_flash_decode_paged_ref`'s gather
+    followed by the unnormalized flat oracle — the reference for the
+    shard-local leg of the sharded fused tick."""
+    bh = q.shape[0]
+    bs = k_codes.shape[1]
+    nsb = pblk.shape[1]
+    kvb = (jnp.arange(bh) % num_kv)[:, None, None]
+    tok = jnp.arange(bs)[None, None, :]
+    pb = pblk[:, :, None]
+    kc = k_codes[pb, tok, kvb]
+    vc = v_codes[pb, tok, kvb]
+    if kv_dtype == "int4":
+        from repro.core import quantization as qz
+        kc, vc = qz.unpack_int4(kc), qz.unpack_int4(vc)
+    kc = kc.reshape(bh, nsb * bs, -1)
+    vc = vc.reshape(bh, nsb * bs, -1)
+    stok = tok if kv_dtype == "int8" else jnp.zeros_like(tok)
+    ks = k_scale[pb, stok, kvb].reshape(bh, nsb * bs)
+    vs = v_scale[pb, stok, kvb].reshape(bh, nsb * bs)
+    return sparse_flash_decode_partials_ref(q, kc, ks, vc, vs,
+                                            blk_mask.reshape(bh, nsb * bs))

@@ -1,6 +1,8 @@
-from repro.kernels.score_est.ops import paged_score_estimate, score_estimate
+from repro.kernels.score_est.ops import (
+    paged_score_bounds, paged_score_estimate, score_estimate)
 from repro.kernels.score_est.ref import (
-    paged_score_estimate_ref, score_estimate_ref)
+    paged_score_bounds_ref, paged_score_estimate_ref, score_estimate_ref)
 
 __all__ = ["score_estimate", "score_estimate_ref",
-           "paged_score_estimate", "paged_score_estimate_ref"]
+           "paged_score_estimate", "paged_score_estimate_ref",
+           "paged_score_bounds", "paged_score_bounds_ref"]

@@ -112,6 +112,109 @@ def _paged_kernel(pt_ref, qc_ref, qs_ref, qsum_ref, words_ref, fs_ref, fz_ref,
     out_ref[0] = jnp.sum(scores, axis=1, dtype=jnp.float32)    # (KV, BS)
 
 
+def _paged_bounds_kernel(pt_ref, qc_ref, qs_ref, qsum_ref, words_ref, fs_ref,
+                         fz_ref, valid_ref, out_ref, lo_ref, hi_ref,
+                         lo_acc, hi_acc, *, r: int, bf16: bool, mb: int):
+    """`_paged_kernel` + masking + running (lo, hi) bounds accumulation.
+
+    The sharded fused tick's phase 1: scores leave the kernel already masked
+    to the binning sentinel (`quantization.SCORE_NEG_INF`) and the per-row
+    raw score bounds — the operands of the cross-shard pmin/pmax — accumulate
+    in VMEM across the block grid, so the selection pipeline never re-reads
+    the feature stream. min/max are exact, so blockwise accumulation lands on
+    the same bounds as the flat `quantization.score_bounds` reduction."""
+    del pt_ref  # consumed by the index_maps
+    j = pl.program_id(1)
+    from repro.core.quantization import SCORE_NEG_INF, dequant_score_chain
+
+    @pl.when(j == 0)
+    def _init():
+        lo_acc[...] = jnp.full_like(lo_acc, jnp.inf)
+        hi_acc[...] = jnp.full_like(hi_acc, -jnp.inf)
+
+    words = words_ref[0]                                       # (BS, KV, W)
+    shifts = 2 * jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 16), 3)
+    codes = (words[:, :, :, None] >> shifts) & jnp.uint32(0x3)
+    codes = codes.reshape(words.shape[0], words.shape[1], r)   # (BS, KV, r)
+    kt = codes.astype(jnp.int32).transpose(1, 0, 2)            # (KV, BS, r)
+    qc = qc_ref[0].astype(jnp.int32)                           # (KV, G, r)
+    int_dot = jax.lax.dot_general(
+        qc, kt, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)                      # (KV, G, BS)
+    a = fs_ref[0].transpose(1, 0)[:, None, :]                  # (KV, 1, BS)
+    z = fz_ref[0].transpose(1, 0)[:, None, :]
+    qs = qs_ref[0][..., None]                                  # (KV, G, 1)
+    qsum = qsum_ref[0][..., None]                              # (KV, G, 1)
+    scores = dequant_score_chain(qs, a, z, int_dot, qsum, bf16)
+    s = jnp.sum(scores, axis=1, dtype=jnp.float32)             # (KV, BS)
+    valid = valid_ref[0, 0] != 0                               # (BS,)
+    sm = jnp.where(valid[None, :], s, jnp.float32(SCORE_NEG_INF))
+    out_ref[0] = sm
+    lo_acc[...] = jnp.minimum(
+        lo_acc[...], jnp.min(jnp.where(valid[None, :], s, jnp.inf), axis=1))
+    hi_acc[...] = jnp.maximum(hi_acc[...], jnp.max(sm, axis=1))
+
+    @pl.when(j == mb - 1)
+    def _finalize():
+        lo_ref[0] = lo_acc[...]
+        hi_ref[0] = hi_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bf16", "interpret"))
+def paged_score_bounds_pallas(q_codes: jax.Array, q_scale: jax.Array,
+                              q_sums: jax.Array, feat_words: jax.Array,
+                              feat_scale: jax.Array, feat_zero: jax.Array,
+                              pages: jax.Array, blk_valid: jax.Array,
+                              *, bf16: bool = True,
+                              interpret: bool | None = None):
+    """Sentinel-masked relevance scores + raw per-row score bounds, one pass.
+
+    Same operands as `paged_score_estimate_pallas` plus ``blk_valid``
+    (S, MB, BS) int8 — the per-block validity columns (owned ∧ stored for the
+    sharded tick). Returns (scores (S, KV, MB·BS) f32 with invalid positions
+    at `SCORE_NEG_INF`, lo (S, KV) f32, hi (S, KV) f32) where (lo, hi) are
+    the raw `quantization.score_bounds` partials ready for pmin/pmax.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    s, kv, g, r = q_codes.shape
+    bs, w = feat_words.shape[1], feat_words.shape[3]
+    mb = pages.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s, mb),
+        in_specs=[
+            pl.BlockSpec((1, kv, g, r), lambda i, j, pt: (i, 0, 0, 0)),
+            pl.BlockSpec((1, kv, g), lambda i, j, pt: (i, 0, 0)),
+            pl.BlockSpec((1, kv, g), lambda i, j, pt: (i, 0, 0)),
+            pl.BlockSpec((1, bs, kv, w), lambda i, j, pt: (pt[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, kv), lambda i, j, pt: (pt[i, j], 0, 0)),
+            pl.BlockSpec((1, bs, kv), lambda i, j, pt: (pt[i, j], 0, 0)),
+            pl.BlockSpec((1, 1, bs), lambda i, j, pt: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kv, bs), lambda i, j, pt: (i, 0, j)),
+            pl.BlockSpec((1, kv), lambda i, j, pt: (i, 0)),
+            pl.BlockSpec((1, kv), lambda i, j, pt: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kv,), jnp.float32),
+            pltpu.VMEM((kv,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_bounds_kernel, r=r, bf16=bf16, mb=mb),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((s, kv, mb * bs), jnp.float32),
+            jax.ShapeDtypeStruct((s, kv), jnp.float32),
+            jax.ShapeDtypeStruct((s, kv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pages, q_codes, q_scale, q_sums, feat_words, feat_scale, feat_zero,
+      blk_valid.astype(jnp.int8))
+
+
 @functools.partial(jax.jit, static_argnames=("bf16", "interpret"))
 def paged_score_estimate_pallas(q_codes: jax.Array, q_scale: jax.Array,
                                 q_sums: jax.Array, feat_words: jax.Array,

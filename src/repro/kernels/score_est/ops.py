@@ -10,9 +10,10 @@ import jax
 
 from repro.kernels.common import paged_impl_default
 from repro.kernels.score_est.kernel import (
-    paged_score_estimate_pallas, score_estimate_pallas)
+    paged_score_bounds_pallas, paged_score_estimate_pallas,
+    score_estimate_pallas)
 from repro.kernels.score_est.ref import (
-    paged_score_estimate_ref, score_estimate_ref)
+    paged_score_bounds_ref, paged_score_estimate_ref, score_estimate_ref)
 
 
 def score_estimate(q_codes: jax.Array, q_scale: jax.Array, words: jax.Array,
@@ -52,3 +53,31 @@ def paged_score_estimate(q_codes: jax.Array, q_scale: jax.Array,
         raise ValueError(f"unknown impl {impl!r} (expected 'pallas' or 'ref')")
     return paged_score_estimate_ref(q_codes, q_scale, q_sums, feat_words,
                                     feat_scale, feat_zero, pages, bf16=bf16)
+
+
+def paged_score_bounds(q_codes: jax.Array, q_scale: jax.Array,
+                       q_sums: jax.Array, feat_words: jax.Array,
+                       feat_scale: jax.Array, feat_zero: jax.Array,
+                       pages: jax.Array, blk_valid: jax.Array, *,
+                       bf16: bool = True, impl: str | None = None,
+                       interpret: bool | None = None):
+    """Sentinel-masked scores + raw (lo, hi) bounds in one streaming pass.
+
+    The sharded fused tick's phase 1: the per-block validity columns
+    ``blk_valid`` (S, MB, BS) gate masking and the bounds reduction inside
+    the scoring pass, so the (lo, hi) pair is ready for the cross-shard
+    pmin/pmax without another read of the scores. Same impl strings as
+    `paged_score_estimate`."""
+    if impl is None:
+        impl = paged_impl_default()
+    elif impl == "gather":
+        impl = "ref"
+    if impl == "pallas":
+        return paged_score_bounds_pallas(
+            q_codes, q_scale, q_sums, feat_words, feat_scale, feat_zero,
+            pages, blk_valid, bf16=bf16, interpret=interpret)
+    if impl != "ref":
+        raise ValueError(f"unknown impl {impl!r} (expected 'pallas' or 'ref')")
+    return paged_score_bounds_ref(q_codes, q_scale, q_sums, feat_words,
+                                  feat_scale, feat_zero, pages, blk_valid,
+                                  bf16=bf16)

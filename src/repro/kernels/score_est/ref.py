@@ -51,3 +51,25 @@ def paged_score_estimate_ref(q_codes: jax.Array, q_scale: jax.Array,
     scores = qz.dequant_score_chain(q_scale[..., None, None], a, z, int_dot,
                                     q_sums[..., None, None], bf16)
     return jnp.sum(scores, axis=2, dtype=jnp.float32).reshape(s, kv, mb * bs)
+
+
+def paged_score_bounds_ref(q_codes: jax.Array, q_scale: jax.Array,
+                           q_sums: jax.Array, feat_words: jax.Array,
+                           feat_scale: jax.Array, feat_zero: jax.Array,
+                           pages: jax.Array, blk_valid: jax.Array,
+                           bf16: bool = True):
+    """Same contract as `paged_score_bounds_pallas`, from jnp primitives.
+
+    Blocked scoring (`paged_score_estimate_ref` — widest temporaries carry
+    the (S, MB, BS, ·) block axes) followed by the library's sentinel mask
+    and raw bounds reduction, so the (scores, lo, hi) triple is bit-identical
+    to the kernel AND to the legacy `masked_scores`/`score_bounds` chain.
+    """
+    s, kv = q_codes.shape[:2]
+    mb, bs = blk_valid.shape[1], blk_valid.shape[2]
+    scores = paged_score_estimate_ref(q_codes, q_scale, q_sums, feat_words,
+                                      feat_scale, feat_zero, pages, bf16=bf16)
+    valid = (blk_valid != 0).reshape(s, 1, mb * bs)
+    sm = qz.masked_scores(scores, valid)
+    lo, hi = qz.score_bounds(sm)
+    return sm, lo, hi

@@ -1,4 +1,7 @@
-from repro.kernels.selection_fused.ops import fused_bin_pool_threshold
-from repro.kernels.selection_fused.ref import fused_bin_pool_threshold_ref
+from repro.kernels.selection_fused.ops import (
+    fused_bin_pool_threshold, paged_fused_select)
+from repro.kernels.selection_fused.ref import (
+    fused_bin_pool_threshold_ref, paged_fused_select_ref)
 
-__all__ = ["fused_bin_pool_threshold", "fused_bin_pool_threshold_ref"]
+__all__ = ["fused_bin_pool_threshold", "fused_bin_pool_threshold_ref",
+           "paged_fused_select", "paged_fused_select_ref"]

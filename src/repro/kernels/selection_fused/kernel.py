@@ -130,3 +130,106 @@ def fused_bin_pool_threshold_pallas(scores: jax.Array, lo: jax.Array,
         interpret=interpret,
     )(scores, scores, scores, lo.astype(jnp.float32), hi.astype(jnp.float32),
       k.astype(jnp.int32), lengths.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Paged / sharded variant: phases 2-3 over block-decomposed scores with
+# EXPLICIT halo columns and EXTERNAL bounds. The sharded tick computes its
+# binning affine from pmin/pmax-merged bounds and its maxpool halos from a
+# psum of pre-pool block edges — both cross-chip collectives — so unlike the
+# flat kernel above, this one takes (lo, hi) and the halo columns as inputs
+# and emits the raw (256,) histogram WITHOUT a threshold: the threshold is
+# located after the histogram psum. One grid step consumes one logical
+# block's scores in place (they never leave VMEM between binning, pooling
+# and histogram accumulation).
+# ---------------------------------------------------------------------------
+
+
+def _paged_select_kernel(s_ref, lo_ref, hi_ref, fl_ref, fr_ref, valid_ref,
+                         force_ref, pooled_ref, hist_ref, acc_ref,
+                         *, window: int, bs: int, mb: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Binning affine — `quantization.binning_affine` inlined (same f32
+    # expression tree ⇒ bit-identical bins to `bins_from_bounds`).
+    lo = lo_ref[0, 0]
+    offset = jnp.where(jnp.isfinite(lo), lo, 0.0)
+    scale = jnp.maximum((hi_ref[0, 0] - offset) / 254.0, _EPS)
+    s = s_ref[0, 0, 0]                                          # (BS,)
+    valid = valid_ref[0, 0] != 0                                # (BS,)
+    b = jnp.clip(jnp.round((s - offset) / scale) + 1.0, 1.0, 255.0)
+    bins = jnp.where(valid, b, 0.0).astype(jnp.int32)
+    if window > 1:
+        halo = window // 2
+        row = jnp.concatenate([fl_ref[0, 0, 0].astype(jnp.int32), bins,
+                               fr_ref[0, 0, 0].astype(jnp.int32)])
+        pooled = _pool_row(row, window)[halo:halo + bs]
+        # pooling never resurrects masked slots
+        pooled = jnp.where(bins > 0, pooled, 0)
+    else:
+        pooled = bins
+    pooled = jnp.where((force_ref[0, 0] != 0) & valid, 255, pooled)
+    pooled_ref[0, 0, 0] = pooled.astype(jnp.uint8)
+
+    bin_ids = jax.lax.broadcasted_iota(jnp.int32, (bs, NUM_BINS), 1)
+    acc_ref[...] += jnp.sum((pooled[:, None] == bin_ids).astype(jnp.int32),
+                            axis=0)
+
+    @pl.when(j == mb - 1)
+    def _finalize():
+        hist_ref[0, 0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_fused_select_pallas(scores: jax.Array, lo: jax.Array, hi: jax.Array,
+                              from_left: jax.Array, from_right: jax.Array,
+                              blk_valid: jax.Array, force: jax.Array,
+                              *, window: int = 7,
+                              interpret: bool | None = None):
+    """Fused INT8 binning + blocked maxpool + histogram over paged scores.
+
+    scores (S, KV, MB, BS) f32, sentinel-masked (`SCORE_NEG_INF` at invalid
+    positions); lo/hi (S, KV) f32 GLOBAL bounds (already pmin/pmax-merged);
+    from_left/from_right (S, KV, MB, halo) uint8 pre-pool halo bin columns
+    of each block's neighbours (already psum'd across shards; all-zero rows
+    at sequence boundaries; pass zeros with halo=1 when window == 1);
+    blk_valid/force (S, MB, BS) int8 validity / sink-recent forcing columns.
+    Returns (pooled (S, KV, MB, BS) u8, hist (S, KV, 256) i32). The
+    histogram is raw — threshold location happens AFTER the cross-shard
+    histogram psum.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    s, kv, mb, bs = scores.shape
+    halo = from_left.shape[-1]
+    assert window == 1 or window // 2 == halo, (window, halo)
+    vmap3 = lambda i, k, j: (i, j, 0)
+    return pl.pallas_call(
+        functools.partial(_paged_select_kernel, window=window, bs=bs, mb=mb),
+        grid=(s, kv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, bs), lambda i, k, j: (i, k, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, k, j: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, k, j: (i, k)),
+            pl.BlockSpec((1, 1, 1, halo), lambda i, k, j: (i, k, j, 0)),
+            pl.BlockSpec((1, 1, 1, halo), lambda i, k, j: (i, k, j, 0)),
+            pl.BlockSpec((1, 1, bs), vmap3),
+            pl.BlockSpec((1, 1, bs), vmap3),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, bs), lambda i, k, j: (i, k, j, 0)),
+            pl.BlockSpec((1, 1, NUM_BINS), lambda i, k, j: (i, k, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, kv, mb, bs), jnp.uint8),
+            jax.ShapeDtypeStruct((s, kv, NUM_BINS), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((NUM_BINS,), jnp.int32)],
+        interpret=interpret,
+    )(scores, lo.astype(jnp.float32), hi.astype(jnp.float32),
+      from_left, from_right, blk_valid.astype(jnp.int8),
+      force.astype(jnp.int8))

@@ -4,8 +4,11 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.selection_fused.kernel import fused_bin_pool_threshold_pallas
-from repro.kernels.selection_fused.ref import fused_bin_pool_threshold_ref
+from repro.kernels.common import paged_impl_default
+from repro.kernels.selection_fused.kernel import (
+    fused_bin_pool_threshold_pallas, paged_fused_select_pallas)
+from repro.kernels.selection_fused.ref import (
+    fused_bin_pool_threshold_ref, paged_fused_select_ref)
 
 
 def fused_bin_pool_threshold(scores: jax.Array, lo: jax.Array, hi: jax.Array,
@@ -22,3 +25,29 @@ def fused_bin_pool_threshold(scores: jax.Array, lo: jax.Array, hi: jax.Array,
                                                interpret=interpret)
     return fused_bin_pool_threshold_ref(scores, lo, hi, k, lengths,
                                         window=window)
+
+
+def paged_fused_select(scores: jax.Array, lo: jax.Array, hi: jax.Array,
+                       from_left: jax.Array, from_right: jax.Array,
+                       blk_valid: jax.Array, force: jax.Array, *,
+                       window: int = 7, impl: str | None = None,
+                       interpret: bool | None = None):
+    """Fused binning + blocked maxpool + raw histogram for the sharded tick.
+
+    scores (S, KV, MB, BS) sentinel-masked; lo/hi (S, KV) merged global
+    bounds; from_left/from_right (S, KV, MB, halo) psum'd neighbour-edge
+    bins; blk_valid/force (S, MB, BS). Returns (pooled u8, hist i32) —
+    threshold location happens after the histogram psum. impl strings match
+    `paged_score_estimate` ("gather" aliases "ref")."""
+    if impl is None:
+        impl = paged_impl_default()
+    elif impl == "gather":
+        impl = "ref"
+    if impl == "pallas":
+        return paged_fused_select_pallas(scores, lo, hi, from_left,
+                                         from_right, blk_valid, force,
+                                         window=window, interpret=interpret)
+    if impl != "ref":
+        raise ValueError(f"unknown impl {impl!r} (expected 'pallas' or 'ref')")
+    return paged_fused_select_ref(scores, lo, hi, from_left, from_right,
+                                  blk_valid, force, window=window)

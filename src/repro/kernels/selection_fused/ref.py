@@ -5,8 +5,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantization as qz
 from repro.core.histogram_topk import histogram256, locate_threshold
-from repro.core.maxpool import maxpool1d_direct
+from repro.core.maxpool import maxpool1d_blocked_halo, maxpool1d_direct
 
 _EPS = 1e-6
 
@@ -27,3 +28,30 @@ def fused_bin_pool_threshold_ref(scores: jax.Array, lo: jax.Array,
     hist = histogram256(pooled)
     thr = locate_threshold(hist, k)
     return pooled, hist, thr
+
+
+def paged_fused_select_ref(scores: jax.Array, lo: jax.Array, hi: jax.Array,
+                           from_left: jax.Array, from_right: jax.Array,
+                           blk_valid: jax.Array, force: jax.Array,
+                           *, window: int = 7):
+    """Same contract as `paged_fused_select_pallas`, from library primitives.
+
+    Built from the EXACT ops the legacy sharded tick chains
+    (`bins_from_bounds` → `maxpool1d_blocked_halo` → sink/recent force →
+    `histogram256`) so its pooled bins are bit-identical to that path — the
+    kernel's oracle *and* the parity anchor."""
+    s, kv, mb, bs = scores.shape
+    valid = (blk_valid != 0)[:, None]                         # (S, 1, MB, BS)
+    bins = qz.bins_from_bounds(scores.reshape(s, kv, mb * bs), lo, hi,
+                               valid.reshape(s, 1, mb * bs))
+    blocked = bins.reshape(s, kv, mb, bs)
+    if window > 1:
+        pooled = maxpool1d_blocked_halo(blocked, window,
+                                        from_left.astype(blocked.dtype),
+                                        from_right.astype(blocked.dtype))
+        pooled = jnp.where(valid, pooled, jnp.uint8(0))
+    else:
+        pooled = blocked
+    pooled = jnp.where((force != 0)[:, None] & valid, jnp.uint8(255), pooled)
+    hist = histogram256(pooled.reshape(s, kv, mb * bs))
+    return pooled, hist

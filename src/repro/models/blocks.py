@@ -301,6 +301,10 @@ def _attn_decode(params: dict, x: jax.Array, cache: SalcaCache, cfg: ModelConfig
         # blocks, and the partials merge with the online-softmax psum/pmax
         # (`sp_decode.sp_salca_decode_paged`). Selection is bit-identical to
         # the unsharded paged tick; batch stays replicated across the island.
+        # PERF.sharded_fused_decode picks the tick's data path inside:
+        # fused (default) streams each shard's owned physical blocks through
+        # the scalar-prefetched paged kernels; baseline re-materializes the
+        # PR 5 O(local pool) logical gathers.
         from jax.sharding import PartitionSpec as P
         from repro.compat import shard_map
         from repro.core.cache import local_block_range

@@ -300,9 +300,12 @@ class ServingEngine:
 
     ``fused_decode`` pins the paged decode-tick data path: ``True`` fuses
     the page-table walk into the decode kernels (physical-block streaming —
-    O(active + selected) pool traffic per tick), ``False`` forces the PR 3
-    gather path (logical-view rebuild per tick), ``None`` (default) follows
-    the global ``flags.PERF.paged_fused_decode`` switch. Outputs are
+    O(active + selected) pool traffic per tick), ``False`` forces the
+    gather baseline (logical-view rebuild per tick), ``None`` (default)
+    follows the global ``flags.PERF`` switch. On a mesh-sharded pool the
+    knob steers the sharded island (``PERF.sharded_fused_decode``:
+    fully-pipelined per-shard kernels vs the logical-gather island);
+    unsharded it steers ``PERF.paged_fused_decode``. Outputs are
     bit-identical between the two paths (same selection; greedy tokens
     match), so the knob is purely a performance/benchmarking control.
 
@@ -444,25 +447,24 @@ class ServingEngine:
             self.stats.host_spill = True
 
         # ``fused_decode`` pins the paged decode data path for this engine
-        # (None → follow the global PERF.paged_fused_decode flag). The flag
-        # is read at trace time, so wrapping the tick trace is sufficient —
-        # jit caches the traced program. A mesh-sharded pool has no fused
-        # path yet (the sharded island always takes the XLA gather path —
-        # ROADMAP follow-on), so pinning it there would be a silent no-op:
-        # reject instead of misleading a benchmark.
-        if fused_decode is not None and paged and self.n_shards > 1:
-            raise ValueError(
-                "fused_decode cannot be pinned on a mesh-sharded paged pool: "
-                "the sharded decode island always uses the XLA gather path "
-                "(leave fused_decode=None)")
+        # (None → follow the global PERF flags). The flags are read at trace
+        # time, so wrapping the tick trace is sufficient — jit caches the
+        # traced program. On a mesh-sharded pool the knob steers
+        # PERF.sharded_fused_decode (fully-pipelined island vs the PR 5
+        # logical-gather island); unsharded it steers
+        # PERF.paged_fused_decode (in-kernel page-table walk vs the PR 3
+        # gather path). Either way both settings produce the same selection
+        # bit-for-bit, so the knob stays a performance/benchmarking control.
         self.fused_decode = fused_decode
+        _fused_flag = ("sharded_fused_decode" if paged and self.n_shards > 1
+                       else "paged_fused_decode")
 
         def _tick_fn(p, s, tok, act):
             if self.fused_decode is None:
                 logits, s2 = self.api.decode_step(p, s, tok, ctx, active=act)
             else:
                 from repro.flags import perf_flags
-                with perf_flags(paged_fused_decode=self.fused_decode):
+                with perf_flags(**{_fused_flag: self.fused_decode}):
                     logits, s2 = self.api.decode_step(p, s, tok, ctx, active=act)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, logits, s2

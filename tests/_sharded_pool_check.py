@@ -8,6 +8,11 @@ set before jax initializes, hence the separate process). Three layers:
      the flat `salca_decode_attention_paged`, its merged output matches to
      float-merge tolerance, and the shard-local append composes to the
      bit-identical pool the global `append_token_paged` produces;
+  1b. fully-pipelined island: the fused sharded tick (two pallas_calls +
+     two psums) reproduces the legacy gather island's selection set,
+     threshold and — on the default data path — bitwise outputs at 2/4/8
+     shards, across int8/fp16/int4 pool modes and through prefix-shared +
+     copy-on-write page tables;
   2. serving engine: greedy outputs on 1/2/4/8 shards are bit-identical to
      the unsharded paged engine and the dense slot pool — including a
      prefix-shared + CoW workload — and a context larger than one shard's
@@ -35,17 +40,17 @@ from repro.core import (
     prefill_into_pages)
 from repro.core.attention import (
     dense_decode_from_paged, salca_decode_attention_paged)
-from repro.core.cache import local_block_range
+from repro.core.cache import cow_block, local_block_range, share_blocks
 from repro.core.sp_decode import sp_dense_decode_paged, sp_salca_decode_paged
 from repro.models.blocks import DecodeCtx, paged_cache_pspec
 
 
 def _scrambled_pool(rng, params, lengths, num_blocks=32, bs=16, mb=8,
-                    kv=2, hd=64):
+                    kv=2, hd=64, kv_pool_dtype="int8"):
     """Pool with each slot's blocks scattered randomly across the block ids
     (hence across shard ownership ranges)."""
     pool = empty_paged_cache(num_blocks, bs, len(lengths), mb, kv, hd,
-                             params.r(hd))
+                             params.r(hd), kv_pool_dtype=kv_pool_dtype)
     perm = rng.permutation(num_blocks)
     used = 0
     for s, t in enumerate(lengths):
@@ -148,6 +153,96 @@ def check_core_island() -> None:
     print("shard-local append composes to the global pool bitwise: OK")
 
 
+def _shared_cow_pool(rng, params, kv_pool_dtype="int8", num_blocks=32,
+                     bs=16, mb=8, kv=2, hd=64):
+    """Slot 1 prefix-shares slot 0's first 3 blocks, then CoW-faults the
+    middle one into a private physical block — page tables diverge while the
+    data stays identical, the exact state a shared-prompt first decode write
+    leaves behind."""
+    pool = empty_paged_cache(num_blocks, bs, 3, mb, kv, hd, params.r(hd),
+                             kv_pool_dtype=kv_pool_dtype)
+    perm = rng.permutation(num_blocks)
+    used = 0
+    for s, t in ((0, 70), (2, 33)):
+        k = jnp.asarray(rng.normal(size=(1, t, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, t, kv, hd)), jnp.float32)
+        src = prefill_cache(k, v, max_seq=mb * bs, params=params)
+        need = -(-t // bs)
+        pages = np.full(mb, -1, np.int32)
+        pages[:need] = perm[used:used + need]
+        used += need
+        pool = prefill_into_pages(pool, src, s, jnp.asarray(pages))
+    pool = share_blocks(pool, 0, 3, 1)
+    return cow_block(pool, 1, 1, int(perm[used]))
+
+
+def check_fused_island_parity() -> None:
+    """Fully-pipelined sharded tick (fused=True: two pallas_calls bracketing
+    two psums) vs the legacy gather island (fused=False) AND the unsharded
+    flat tick: identical threshold and selection set everywhere; outputs
+    bitwise on the default data path (shared gather phase 4), float-merge
+    close with the Pallas partials kernels."""
+    rng = np.random.default_rng(7)
+    S, KV, HD, BS, MB = 3, 2, 64, 16, 8
+    H = 2 * KV
+    params = SalcaParams(k=24, k_cap=32, pool_window=7, sink_tokens=2,
+                         recent_tokens=4)
+
+    def island_fn(pool, q, shards, fused, impl=None, interpret=None):
+        mesh = compat.make_mesh((shards,), ("seq",))
+        pspec = paged_cache_pspec(DecodeCtx(axis="seq", mesh=mesh))
+        rep = P(None, None, None)
+
+        def island(q_, pool_):
+            o, sel = sp_salca_decode_paged(q_, pool_, params, "seq",
+                                           return_selection=True, fused=fused,
+                                           impl=impl, interpret=interpret)
+            return o, (sel.indices[None], sel.mask[None], sel.threshold)
+
+        return jax.jit(compat.shard_map(
+            island, mesh=mesh, in_specs=(rep, pspec),
+            out_specs=(rep, (P("seq", None, None, None),
+                             P("seq", None, None, None), P(None, None))),
+            check_vma=False))(q, pool)
+
+    def compare(pool, q, shards, label, modes=("default", "pallas")):
+        _, sel_flat = salca_decode_attention_paged(q, pool, params,
+                                                   return_selection=True)
+        flat_set = _sel_set(sel_flat.indices, sel_flat.mask)
+        o_leg, (li, lm, lt) = island_fn(pool, q, shards, fused=False)
+        np.testing.assert_array_equal(np.asarray(lt),
+                                      np.asarray(sel_flat.threshold))
+        for mode in modes:
+            impl, interp = (("pallas", True) if mode == "pallas"
+                            else (None, None))
+            o_f, (fi, fm, ft) = island_fn(pool, q, shards, fused=True,
+                                          impl=impl, interpret=interp)
+            np.testing.assert_array_equal(np.asarray(ft), np.asarray(lt))
+            sets = [_sel_set(fi[i], fm[i]) for i in range(shards)]
+            assert set().union(*sets) == flat_set, (label, shards, mode)
+            if mode == "default":
+                np.testing.assert_array_equal(np.asarray(o_f),
+                                              np.asarray(o_leg))
+            else:
+                np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_leg),
+                                           rtol=1e-5, atol=1e-6)
+        print(f"fused island parity [{label}] at {shards} shards: OK")
+
+    pool = _scrambled_pool(rng, params, lengths=[120, 77, 33],
+                           bs=BS, mb=MB, kv=KV, hd=HD)
+    q = jnp.asarray(rng.normal(size=(S, H, HD)), jnp.float32)
+    for shards in (2, 4, 8):
+        compare(pool, q, shards, "int8 scrambled")
+    for mode in ("fp16", "int4"):
+        pool_m = _scrambled_pool(rng, params, lengths=[120, 77, 33], bs=BS,
+                                 mb=MB, kv=KV, hd=HD, kv_pool_dtype=mode)
+        compare(pool_m, q, 4, f"{mode} pool")
+    for mode in ("int8", "fp16", "int4"):
+        pool_c = _shared_cow_pool(rng, params, kv_pool_dtype=mode, bs=BS,
+                                  mb=MB, kv=KV, hd=HD)
+        compare(pool_c, q, 8, f"{mode} shared+CoW", modes=("default",))
+
+
 def check_engine_parity() -> None:
     from repro.configs import get_config
     from repro.models import get_model
@@ -166,14 +261,14 @@ def check_engine_parity() -> None:
                                .astype(np.int32)]) for _ in range(2)]
     prompts += [same.copy(), same.copy()]   # identical pair → CoW mid-decode
 
-    def run(paged, shards=1, share=False):
+    def run(paged, shards=1, share=False, fused=None):
         ctx = None
         if shards > 1:
             mesh = compat.make_mesh((shards,), ("seq",))
             ctx = DecodeCtx(axis="seq", mesh=mesh)
         eng = ServingEngine(cfg, params, max_seq=max_seq, slots=4, ctx=ctx,
                             paged=paged, block_size=bs, num_blocks=num_blocks,
-                            prefix_sharing=share)
+                            prefix_sharing=share, fused_decode=fused)
         reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=4)
                 for i, p in enumerate(prompts)]
         for r in reqs:
@@ -194,6 +289,13 @@ def check_engine_parity() -> None:
         assert (eng._refcount == 0).all()
         print(f"engine parity at {shards} shards (shared_blocks="
               f"{st.shared_blocks}, cow={st.cow_copies}): OK")
+
+    # The default sharded engine above runs the fused island
+    # (PERF.sharded_fused_decode). Pin the legacy gather island once to keep
+    # it covered — greedy tokens must stay bit-identical to both.
+    out_l, _, _ = run(paged=True, shards=4, share=True, fused=False)
+    assert out_l == out_flat, "legacy gather island diverged"
+    print("legacy (fused_decode=False) island parity at 4 shards: OK")
 
     # Spanning: a context needing more blocks than one shard holds (8 shards
     # × 3 blocks/shard) must admit by spilling across shards.
@@ -250,6 +352,7 @@ def check_paged_serve_step() -> None:
 def main() -> int:
     assert len(jax.devices()) == 8, jax.devices()
     check_core_island()
+    check_fused_island_parity()
     check_engine_parity()
     check_paged_serve_step()
     print("sharded paged pool: ALL OK")

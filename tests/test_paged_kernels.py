@@ -212,10 +212,14 @@ def _walk_jaxpr(jaxpr, banned, bad):
             if shape in banned:
                 bad.append((eqn.primitive.name, shape))
         for val in eqn.params.values():
-            for sub in jax.tree_util.tree_leaves(
-                    val, is_leaf=lambda x: isinstance(x, jax.core.ClosedJaxpr)):
+            # shard_map carries an OPEN Jaxpr param; pjit/scan carry Closed.
+            is_jaxpr = lambda x: isinstance(x, (jax.core.Jaxpr,
+                                                jax.core.ClosedJaxpr))
+            for sub in jax.tree_util.tree_leaves(val, is_leaf=is_jaxpr):
                 if isinstance(sub, jax.core.ClosedJaxpr):
                     _walk_jaxpr(sub.jaxpr, banned, bad)
+                elif isinstance(sub, jax.core.Jaxpr):
+                    _walk_jaxpr(sub, banned, bad)
 
 
 @pytest.mark.parametrize("impl", ["ref", "pallas"])
@@ -253,6 +257,46 @@ def test_fused_tick_has_no_pool_wide_ops(rng, impl):
     bad_u = []
     _walk_jaxpr(jaxpr_u.jaxpr, banned, bad_u)
     assert bad_u, "expected the gather path to materialize logical views"
+
+
+def test_sharded_fused_tick_has_no_pool_wide_ops(rng):
+    """Jaxpr scan of the SHARDED decode tick: the fully-pipelined island
+    (`sp_salca_decode_paged(fused=True)`) builds no logical-order
+    `(S, L, KV, ·)` copy of the feature stream or K/V and no flat pool
+    transpose outside the kernel calls; the legacy gather island still
+    materializes them (the per-shard O(local pool) copies this PR removes).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core.sp_decode import sp_salca_decode_paged
+
+    _, pool, _ = _scrambled_pool(rng, t=40)
+    s = 3
+    p_, bs_, kv_, hd_ = pool.k_codes.shape
+    l_ = pool.max_seq
+    w_ = pool.feat_words.shape[-1]
+    banned = {
+        (p_ * bs_, kv_, hd_), (kv_, p_ * bs_, hd_),      # flat pool transpose
+        (p_ * bs_, kv_), (kv_, p_ * bs_),                # flat scale transpose
+        (s, l_, kv_, w_), (s, l_, kv_, hd_), (s, l_, kv_),  # logical copies
+    }
+    q3 = jnp.zeros((s, 4, hd_), jnp.float32)
+    mesh = compat.make_mesh((1,), ("seq",))
+
+    def island(fused):
+        def f(q, pool):
+            return sp_salca_decode_paged(q, pool, PARAMS, "seq", fused=fused)
+        return compat.shard_map(f, mesh, in_specs=(P(), P()), out_specs=P(),
+                                check_vma=False)
+
+    bad = []
+    _walk_jaxpr(jax.make_jaxpr(island(True))(q3, pool).jaxpr, banned, bad)
+    assert not bad, f"pool-wide ops in the fused sharded tick: {bad}"
+
+    bad_u = []
+    _walk_jaxpr(jax.make_jaxpr(island(False))(q3, pool).jaxpr, banned, bad_u)
+    assert bad_u, "expected the gather island to materialize logical views"
 
 
 # ---------------------------------------------------------------------------

@@ -104,3 +104,42 @@ def test_pool_on_vs_off_consistency(rng):
         out = salca_decode_attention(q, cache, params)
         rel = float(jnp.linalg.norm(out - dense) / jnp.linalg.norm(dense))
         assert np.isfinite(np.asarray(out)).all() and rel < 0.6
+
+
+def test_fused_select_impl_bitwise(rng):
+    """impl="ref"/"pallas" (fused selection kernel) == the unfused XLA chain.
+
+    Same scores feed both paths; the fused path must reproduce the
+    Selection (threshold, indices, mask, count) and hence the attention
+    output bit-for-bit, including with a masked tail (ragged lengths) and
+    with pooling disabled.
+    """
+    q, k, v, _ = planted_case(rng, T=256)
+    for kw in ({"pool_window": 7}, {"use_pool": False}):
+        params = SalcaParams.for_seq(256, retention=0.1, **kw)
+        cache = prefill_cache(k, v, max_seq=256, params=params)
+        cache = cache._replace(length=jnp.asarray([100, 256], jnp.int32))
+        out0, sel0 = salca_decode_attention(q, cache, params,
+                                            return_selection=True)
+        for impl in ("ref", "pallas"):
+            out1, sel1 = salca_decode_attention(
+                q, cache, params, return_selection=True,
+                impl=impl, interpret=True)
+            assert jnp.array_equal(sel0.threshold, sel1.threshold), (kw, impl)
+            assert jnp.array_equal(sel0.indices, sel1.indices), (kw, impl)
+            assert jnp.array_equal(sel0.mask, sel1.mask), (kw, impl)
+            assert jnp.array_equal(sel0.count, sel1.count), (kw, impl)
+            assert jnp.array_equal(out0, out1), (kw, impl)
+
+
+def test_fused_select_forced_tokens_fall_back(rng):
+    """Sink/recent forcing isn't in the fused kernel's contract — those
+    configs must route back to the XLA chain and stay bitwise."""
+    q, k, v, _ = planted_case(rng, T=256)
+    params = SalcaParams.for_seq(256, retention=0.1, sink_tokens=4,
+                                 recent_tokens=16)
+    cache = prefill_cache(k, v, max_seq=256, params=params)
+    out0 = salca_decode_attention(q, cache, params)
+    out1 = salca_decode_attention(q, cache, params, impl="pallas",
+                                  interpret=True)
+    assert jnp.array_equal(out0, out1)

@@ -16,9 +16,11 @@ Covers the host/device substrate of the sharded-pool refactor:
   * shard-local `append_token_paged` (``block_range``) composes to the
     bit-identical global append;
   * the multi-device battery (8 forced host devices, subprocess): island
-    selection/threshold parity, 1/2/4/8-shard engine greedy parity incl.
-    prefix sharing + CoW, shard-spanning contexts, and the mesh-sharded
-    paged serving step — see `_sharded_pool_check.py`.
+    selection/threshold parity (legacy gather AND fully-pipelined fused
+    islands, at 2/4/8 shards, int8/fp16/int4 pools, prefix-shared + CoW
+    tables), 1/2/4/8-shard engine greedy parity incl. prefix sharing + CoW,
+    shard-spanning contexts, and the mesh-sharded paged serving step — see
+    `_sharded_pool_check.py`.
 """
 
 import os
@@ -278,8 +280,9 @@ if HAVE_HYPOTHESIS:
 
 @pytest.mark.slow
 def test_sharded_pool_multi_device_subprocess():
-    """8 forced host devices: island selection/output parity, engine greedy
-    parity on 1/2/4/8 shards (incl. prefix sharing + CoW), shard-spanning
+    """8 forced host devices: island selection/output parity (gather and
+    fused islands, all pool dtypes, shared+CoW tables), engine greedy parity
+    on 1/2/4/8 shards (incl. prefix sharing + CoW), shard-spanning
     admission, and the mesh-sharded paged serving step."""
     script = os.path.join(os.path.dirname(__file__), "_sharded_pool_check.py")
     env = dict(os.environ)
