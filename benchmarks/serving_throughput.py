@@ -437,6 +437,147 @@ def _sharded_sweep(cfg, params, smoke: bool):
             "(capacity must scale ~linearly with shard count)")
 
 
+def _bursty_trace(cfg, rng, n: int):
+    """Poisson-arrival mixed-length trace; half the requests share a
+    one-block system prefix (so parity covers prefix sharing + CoW)."""
+    from repro.runtime.serve import Request
+    prefix = rng.integers(0, cfg.vocab_size, BLOCK_SIZE).astype(np.int32)
+    lens = (12, 24, 48, 88)
+    t, trace = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(6.0))        # overload: λ ≫ service rate
+        pl = int(lens[int(rng.integers(len(lens)))])
+        body = rng.integers(0, cfg.vocab_size, pl).astype(np.int32)
+        if i % 2 == 0:
+            body = np.concatenate([prefix, body[:-BLOCK_SIZE]]) \
+                if pl > BLOCK_SIZE else body
+        trace.append((t, Request(rid=i, prompt=body, max_new_tokens=16)))
+    return trace
+
+
+def _simulate_bursty(eng, trace, max_passes: int = 200_000):
+    """Drive the engine pass by pass against a simulated clock: one pass
+    costs (prompt tokens prefilled this pass) + 1 decode-tick unit. The
+    unit charge makes head-of-line blocking measurable — a monolithic
+    admission stalls every active slot for the whole prompt, a chunked
+    admission for at most `prefill_chunk` tokens. Returns per-request TTFT
+    and inter-token gaps in those units."""
+    from collections import deque
+    pending = deque(trace)
+    reqs = [r for _, r in trace]
+    arrive = {r.rid: at for at, r in trace}
+    t = 0.0
+    ttft: dict[int, float] = {}
+    gaps: list[float] = []
+    last_len = {r.rid: 0 for r in reqs}
+    last_t: dict[int, float] = {}
+
+    def note(now):
+        for r in reqs:
+            n = len(r.output)
+            if n > last_len[r.rid]:
+                if r.rid not in ttft:
+                    ttft[r.rid] = now - arrive[r.rid]
+                elif r.rid in last_t:
+                    gaps.append(now - last_t[r.rid])
+                last_t[r.rid] = now
+                last_len[r.rid] = n
+            elif n < last_len[r.rid]:           # preempted: output cleared
+                last_len[r.rid] = n
+                last_t.pop(r.rid, None)
+
+    for _ in range(max_passes):
+        while pending and pending[0][0] <= t:
+            eng.submit(pending.popleft()[1])
+        if not (eng._queue or eng._active or eng._inflight is not None):
+            if not pending:
+                return ttft, gaps
+            t = pending[0][0]
+            continue
+        p0 = eng.stats.prefill_tokens
+        eng._admit()
+        t += float(eng.stats.prefill_tokens - p0)
+        note(t)
+        if eng._active:
+            eng._tick()
+            t += 1.0
+            note(t)
+    raise RuntimeError("bursty simulation did not drain")
+
+
+def _bursty_sweep(cfg, params, smoke: bool):
+    """Bursty Poisson arrivals against a tight block pool: the continuous-
+    batching acceptance gates. Monolithic admission reserves the whole
+    prompt's blocks at once — under memory pressure a long prompt waits at
+    the head of the queue until enough blocks are free simultaneously,
+    starving everything behind it. Chunked admission charges one chunk's
+    blocks at a time, consuming frees as decode produces them, and the
+    budgeted chunks bound how long any pass stalls decode. Gates (RAISE so
+    benchmarks/run.py exits 1):
+
+      * zero `overflow` stop reasons with preemption on (both engines);
+      * greedy outputs bit-identical to the big-pool non-preempting paged
+        engine, prefix sharing + CoW included;
+      * chunked TTFT p95 strictly below the monolithic baseline.
+    """
+    from repro.runtime.serve import ServingEngine
+
+    scfg = dataclasses.replace(cfg, salca_static_channels=True)
+    n = 10 if smoke else 24
+    slots, num_blocks, chunk = 3, 10, 8
+    yield ("serving_bursty,mode,requests,ttft_p50,ttft_p95,itl_p50,itl_p95,"
+           "preemptions,chunk_stalls,overflows,completed")
+    results = {}
+    for mode in ("reference", "monolithic", "chunked"):
+        rng = np.random.default_rng(23)
+        trace = _bursty_trace(scfg, rng, n)
+        kw = dict(paged=True, block_size=BLOCK_SIZE, prefix_sharing=True)
+        if mode == "reference":      # big pool, no preemption: parity target
+            eng = ServingEngine(scfg, params, max_seq=MAX_SEQ, slots=slots,
+                                num_blocks=slots * (MAX_SEQ // BLOCK_SIZE),
+                                **kw)
+        else:
+            eng = ServingEngine(scfg, params, max_seq=MAX_SEQ, slots=slots,
+                                num_blocks=num_blocks, preempt=True,
+                                prefill_chunk=chunk if mode == "chunked"
+                                else None, **kw)
+        ttft, gaps = _simulate_bursty(eng, trace)
+        st = eng.stats
+        reqs = [r for _, r in trace]
+        results[mode] = (reqs, st, ttft, gaps)
+        tv = sorted(ttft.values())
+        gv = sorted(gaps) or [0.0]
+        pct = lambda v, q: v[min(int(q * len(v)), len(v) - 1)]
+        yield (f"serving_bursty,{mode},{n},{pct(tv, 0.50):.0f},"
+               f"{pct(tv, 0.95):.0f},{pct(gv, 0.50):.0f},{pct(gv, 0.95):.0f},"
+               f"{st.preemptions},{st.chunk_stalls},{st.overflows},"
+               f"{st.completed}")
+    ref = results["reference"][0]
+    p95 = {m: sorted(results[m][2].values())[
+        min(int(0.95 * n), n - 1)] for m in results}
+    ratio = p95["chunked"] / max(p95["monolithic"], 1e-9)
+    yield (f"serving_bursty_ttft,chunked_vs_monolithic_p95,{ratio:.2f},"
+           f"{'bounded' if ratio < 1.0 else 'ABOVE-MONOLITHIC'}")
+    for mode in ("monolithic", "chunked"):
+        reqs, st, _, _ = results[mode]
+        match = all(a.output == b.output for a, b in zip(ref, reqs))
+        yield (f"serving_bursty_parity,{mode}_vs_reference_outputs,"
+               f"{'ok' if match else 'MISMATCH'}")
+        # Acceptance gates — raise so benchmarks/run.py exits 1.
+        if st.overflows or any(r.stop_reason == "overflow" for r in reqs):
+            raise RuntimeError(
+                f"bursty {mode}: overflow stop with preemption enabled")
+        if not match:
+            raise RuntimeError(
+                f"bursty {mode}: preemption broke greedy-output parity")
+        if st.completed != n:
+            raise RuntimeError(f"bursty {mode}: {st.completed}/{n} completed")
+    if ratio >= 1.0:
+        raise RuntimeError(
+            f"bursty: chunked TTFT p95 {p95['chunked']:.0f} not below "
+            f"monolithic {p95['monolithic']:.0f}")
+
+
 def run(smoke: bool = False):
     from repro.configs import get_config
     from repro.models import get_model
@@ -452,6 +593,7 @@ def run(smoke: bool = False):
     yield from _fused_sweep(cfg, params, smoke)
     yield from _capacity_sweep(cfg, params, smoke)
     yield from _sharded_sweep(cfg, params, smoke)
+    yield from _bursty_sweep(cfg, params, smoke)
 
 
 if __name__ == "__main__":

@@ -495,6 +495,98 @@ def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
     )
 
 
+def prefill_chunk_into_pages(pool: PagedSalcaCache, k: jax.Array, v: jax.Array,
+                             heavy_idx: jax.Array, slot, pages: jax.Array,
+                             start, n_shared=0) -> PagedSalcaCache:
+    """Stream one prefill chunk's raw K/V into a partially-filled paged slot.
+
+    The chunked-prefill cursor: `k`/`v` are (1, C, KV, HD) full-precision
+    chunk projections for logical positions [start, start+C), `heavy_idx` is
+    the (1, KV, R) static heavy-channel set (chunked prefill requires
+    `cfg.salca_static_channels` — the paper's per-input identification needs
+    the whole prompt's K at once, so it cannot stream). Encoding is per-token
+    (`_encode_tokens`), hence invariant to chunk boundaries: the pool rows a
+    chunked prefill writes are bitwise identical to a monolithic
+    `prefill_into_pages` install of the same prompt.
+
+    `pages` is the page row mapped SO FAR: the first `n_shared` entries are
+    always set (the shared prefix is pinned at admission), entries for every
+    fresh logical block covered through THIS chunk are physical ids, later
+    entries -1. The page table row is replaced wholesale; the refcount
+    increments every shared block on the first chunk and each fresh block on
+    the chunk that first covers it — so at any preemption point `free_pages`
+    on the row undoes precisely what has been charged. `start` and `slot`
+    may be traced; `C` is static.
+
+    The first `n_shared` logical blocks are mapped but never written (prefix
+    sharing); `length` is set to start+C absolutely — decode ticks clobber
+    pool.length from LMState.pos each tick (masked slots read valid_len 0),
+    so the engine threads the cursor through `start`, never through the pool.
+    int4 pools are rejected: their per-block requantization folds a whole
+    block's statistics into one scale, which is not chunk-incremental.
+    """
+    bs, mb, p = pool.block_size, pool.max_blocks, pool.num_blocks
+    mode = pool.kv_pool_dtype
+    if mode == "int4":
+        raise ValueError("chunked prefill does not support int4 pools "
+                         "(per-block requantization is not chunk-incremental)")
+    if k.shape[0] != 1:
+        raise ValueError(f"chunk must have batch 1, got {k.shape[0]}")
+    c = k.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    k8, v8, words, fs, fz = _encode_tokens(k, v, heavy_idx)
+
+    rows = start + jnp.arange(c, dtype=jnp.int32)               # (C,) logical
+    blk = jnp.clip(rows // bs, 0, mb - 1)
+    pg = pages[blk]
+    writable = (pg >= 0) & (blk >= jnp.asarray(n_shared, jnp.int32))
+    tgt_pg = jnp.where(writable, pg, p)                          # OOB → dropped
+    off = rows % bs
+
+    def upd(buf, vals):  # vals: (1, C, KV, ·) per-token field values
+        return buf.at[tgt_pg, off].set(vals[0].astype(buf.dtype), mode="drop")
+
+    if mode == "int8":
+        kc, ks = k8.codes, k8.scale
+        vc, vs = v8.codes, v8.scale
+        k_scale = upd(pool.k_scale, ks)
+        v_scale = upd(pool.v_scale, vs)
+    else:  # fp16: store dequantized int8 values verbatim; per-block scales
+        #        stay the unit ones `empty_paged_cache` installed.
+        kc = k8.codes.astype(jnp.float32) * k8.scale[..., None]
+        vc = v8.codes.astype(jnp.float32) * v8.scale[..., None]
+        k_scale, v_scale = pool.k_scale, pool.v_scale
+
+    # Charge fresh blocks exactly when this chunk first covers them (block
+    # j is covered once start+C > j·BS, so the newly covered range is
+    # [ceil(start/BS), ceil((start+C)/BS))). Shared-prefix blocks are all
+    # charged up front on the FIRST chunk: they are pinned at admission —
+    # lazily increfing them as chunks arrive would let the radix owner
+    # finish mid-prefill and free a block this prefill still plans to map.
+    bidx = jnp.arange(mb, dtype=jnp.int32)
+    cdiv = lambda n: (n + bs - 1) // bs
+    nsh = jnp.asarray(n_shared, jnp.int32)
+    first = start == 0
+    newly = ((bidx >= nsh) & (bidx >= cdiv(start)) & (bidx < cdiv(start + c))
+             | (bidx < nsh) & first)
+    return pool._replace(
+        k_codes=upd(pool.k_codes, kc),
+        k_scale=k_scale,
+        v_codes=upd(pool.v_codes, vc),
+        v_scale=v_scale,
+        feat_words=upd(pool.feat_words, words),
+        feat_scale=upd(pool.feat_scale, fs),
+        feat_zero=upd(pool.feat_zero, fz),
+        heavy_idx=pool.heavy_idx.at[slot].set(
+            jnp.where(first, heavy_idx[0], pool.heavy_idx[slot])),
+        length=pool.length.at[slot].set(start + c),
+        page_table=pool.page_table.at[slot].set(pages.astype(jnp.int32)),
+        refcount=_refcount_add(pool.refcount, pages, +1, valid=newly),
+        sel_hist=pool.sel_hist.at[slot].set(
+            jnp.where(first, 0, pool.sel_hist[slot])),
+    )
+
+
 def append_token_paged(pool: PagedSalcaCache, k: jax.Array, v: jax.Array,
                        block_range=None) -> PagedSalcaCache:
     """Append one decoded token's K/V (S, KV, HD) at each slot's cursor.

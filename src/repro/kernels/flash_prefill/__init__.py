@@ -1,4 +1,5 @@
-from repro.kernels.flash_prefill.ops import flash_attention
+from repro.kernels.flash_prefill.ops import (
+    flash_attention, flash_attention_chunked)
 from repro.kernels.flash_prefill.ref import flash_attention_ref
 
-__all__ = ["flash_attention", "flash_attention_ref"]
+__all__ = ["flash_attention", "flash_attention_chunked", "flash_attention_ref"]

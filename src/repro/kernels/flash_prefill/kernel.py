@@ -37,7 +37,8 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
-            *, scale: float, bq: int, bk: int, nk: int, causal: bool, window: int):
+            *, scale: float, bq: int, bk: int, nk: int, causal: bool,
+            window: int, q_offset: int):
     iq, ik = pl.program_id(1), pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -46,7 +47,10 @@ def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q_start = iq * bq
+    # q_offset shifts the queries' absolute positions (chunked prefill: a
+    # C-token chunk attends over the whole-prompt K/V buffer); the causal
+    # band test and the mask iotas both use the shifted coordinate.
+    q_start = q_offset + iq * bq
     k_start = ik * bk
 
     # Work only when the block intersects the (windowed) causal band.
@@ -89,13 +93,21 @@ def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+                   static_argnames=("causal", "window", "block_q", "block_k",
+                                    "q_offset", "interpret"))
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                            *, causal: bool = True, window: int = 0,
+                           q_offset: int = 0,
                            block_q: int = DEFAULT_BLOCK_Q,
                            block_k: int = DEFAULT_BLOCK_K,
                            interpret: bool | None = None) -> jax.Array:
-    """q (BH, T, HD), k/v (BH, S, HD) → out (BH, T, HD) (q dtype)."""
+    """q (BH, T, HD), k/v (BH, S, HD) → out (BH, T, HD) (q dtype).
+
+    ``q_offset`` is the chunked-prefill entry: queries sit at absolute
+    positions [q_offset, q_offset+T) over keys [0, S). It is static — the
+    engine calls with offsets that are multiples of a fixed chunk size, so
+    the compile cache stays small.
+    """
     if interpret is None:
         interpret = interpret_default()
     bh, t, hd = q.shape
@@ -107,7 +119,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     scale = 1.0 / (hd ** 0.5)
     return pl.pallas_call(
         functools.partial(_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
-                          causal=causal, window=window),
+                          causal=causal, window=window, q_offset=q_offset),
         grid=(bh, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),

@@ -16,3 +16,24 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       interpret=interpret)
     return flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def flash_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            q_offset: int, causal: bool = True,
+                            window: int = 0, impl: str = "pallas",
+                            interpret: bool | None = None) -> jax.Array:
+    """Chunked-prefill attention: a chunk of queries over the prompt buffer.
+
+    `q` (BH, C, HD) holds the chunk's queries at absolute positions
+    [q_offset, q_offset+C); `k`/`v` (BH, S, HD) are the whole-prompt K/V
+    buffers, filled through row q_offset+C (later rows may be garbage —
+    the causal mask excludes them). Calling this per chunk and concatenating
+    reproduces `flash_attention(q_full, k, v)` row for row: each row's
+    online-softmax reduction runs over the same S-length key axis with
+    masked contributions exactly zero.
+    """
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, interpret=interpret)
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)

@@ -9,13 +9,20 @@ NEG_INF = -1e30
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
-                        *, causal: bool = True, window: int = 0) -> jax.Array:
-    """q (BH, T, HD), k/v (BH, S, HD) → (BH, T, HD)."""
+                        *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0) -> jax.Array:
+    """q (BH, T, HD), k/v (BH, S, HD) → (BH, T, HD).
+
+    ``q_offset`` places the queries at absolute positions [q_offset,
+    q_offset+T) against keys at [0, S) — the chunked-prefill form, where a
+    chunk of queries attends over the (partially filled) whole-prompt K/V
+    buffer and rows beyond the chunk's last position are causally masked.
+    """
     hd = q.shape[-1]
     s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / jnp.sqrt(hd)
     t, sl = s.shape[-2:]
-    qpos = jnp.arange(t)[:, None]
+    qpos = q_offset + jnp.arange(t)[:, None]
     kpos = jnp.arange(sl)[None, :]
     mask = jnp.ones((t, sl), bool)
     if causal:

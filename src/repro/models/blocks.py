@@ -239,6 +239,36 @@ def block_prefill(params: dict, kind: str, x: jax.Array, cfg: ModelConfig,
     raise ValueError(kind)
 
 
+def block_prefill_chunk(params: dict, x: jax.Array, kbuf: jax.Array,
+                        vbuf: jax.Array, t0, cfg: ModelConfig):
+    """One layer's chunked-prefill step — global-attention ("A") blocks only.
+
+    `x`: (1, C, D) chunk activations; `kbuf`/`vbuf`: (1, T, KV, HD)
+    full-precision K/V carried across chunks (rows [0, t0) filled by earlier
+    chunks, the rest zero); `t0` is the chunk's first logical position (may
+    be traced; C and T are static).
+
+    Bit-identity with `block_prefill`: the chunk's queries run through the
+    same `flash_attention_xla` over the same T-length key axis (q_offset
+    shifts the causal mask), and masked key contributions are exact zeros in
+    that kernel — so each output row equals the monolithic forward's row at
+    the same position, bit for bit. Returns (x_out, kbuf, vbuf, k, v); the
+    raw chunk k/v feed the streaming pool install
+    (`cache.prefill_chunk_into_pages`).
+    """
+    xn = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    positions = jnp.asarray(t0) + jnp.arange(x.shape[1])
+    q, k, v = qkv_project(params["attn"], xn, cfg, positions)
+    t0 = jnp.asarray(t0, jnp.int32)
+    kbuf = jax.lax.dynamic_update_slice(kbuf, k.astype(kbuf.dtype), (0, t0, 0, 0))
+    vbuf = jax.lax.dynamic_update_slice(vbuf, v.astype(vbuf.dtype), (0, t0, 0, 0))
+    from repro.models.attention import flash_attention_xla
+    o = flash_attention_xla(q, kbuf, vbuf, causal=True, q_offset=t0)
+    x = x + o.reshape(x.shape[0], x.shape[1], -1) @ params["attn"]["wo"]
+    f, _ = ffn_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+    return x + f, kbuf, vbuf, k, v
+
+
 # ---------------------------------------------------------------------------
 # Decode: one token
 # ---------------------------------------------------------------------------

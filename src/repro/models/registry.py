@@ -53,6 +53,19 @@ class ModelAPI(NamedTuple):
     #   (pool_state, page, payload) -> pool_state
     selection_hist: Callable[..., Any] | None = None
     #   (pool_state,) -> (slots, max_blocks) i32
+    # Chunked prefill (continuous batching): begin an in-flight prefill
+    # cursor, advance it one budgeted chunk at a time (streaming the chunk's
+    # K/V straight into the paged pool), and report why a config can't use
+    # it. Bit-identical to the monolithic prefill where supported.
+    prefill_begin: Callable[..., Any] | None = None
+    #   (t_total,) -> cursor
+    prefill_chunk: Callable[..., Any] | None = None
+    #   (params, pool_state, tokens, cursor, slot, pages, n_shared, max_seq,
+    #    *, final) -> (logits | None, pool_state, cursor)
+    prefill_chunk_unsupported: Callable[..., Any] | None = None
+    #   () -> str | None
+    static_heavy: Callable[..., Any] | None = None
+    #   (params, max_seq) -> tuple of per-layer heavy sets, or None
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -109,6 +122,21 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         return transformer.lm_write_into_slot(pool, src, slot, pages=pages,
                                               n_shared=n_shared)
 
+    def prefill_begin(t_total):
+        return transformer.lm_prefill_begin(cfg, t_total)
+
+    def prefill_chunk(params, pool, tokens, cursor, slot, pages, n_shared,
+                      max_seq, *, final):
+        return transformer.lm_prefill_chunk(params, cfg, pool, tokens, cursor,
+                                            slot, pages, n_shared, max_seq,
+                                            final=final)
+
+    def prefill_chunk_unsupported():
+        return transformer.lm_prefill_chunk_unsupported(cfg)
+
+    def static_heavy(params, max_seq):
+        return transformer.lm_static_heavy(params, cfg, max_seq)
+
     return ModelAPI(init, loss, prefill, decode_step, init_state,
                     transformer.lm_write_into_slot, transformer.lm_reset_slot,
                     init_paged_state=init_paged_state,
@@ -118,7 +146,11 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
                     cow_block=transformer.lm_cow_block,
                     read_block=transformer.lm_read_block,
                     write_block=transformer.lm_write_block,
-                    selection_hist=transformer.lm_selection_hist)
+                    selection_hist=transformer.lm_selection_hist,
+                    prefill_begin=prefill_begin,
+                    prefill_chunk=prefill_chunk,
+                    prefill_chunk_unsupported=prefill_chunk_unsupported,
+                    static_heavy=static_heavy)
 
 
 __all__ = ["ModelAPI", "get_model", "DecodeCtx"]

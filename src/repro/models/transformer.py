@@ -160,6 +160,145 @@ def lm_prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, max_seq: int,
     return logits, LMState(tuple(period_states), tuple(tail_states), pos)
 
 
+# ---------------------------------------------------------------------------
+# Chunked prefill: budgeted admission for the continuous-batching scheduler.
+# A prompt is prefilled in C-token chunks interleaved with decode ticks; each
+# chunk attends over full-precision K/V buffers carried between chunks (NOT
+# the quantized pool), which keeps every activation row — and therefore the
+# final logits and all streamed pool rows — bit-identical to the monolithic
+# `lm_prefill` of the same prompt.
+# ---------------------------------------------------------------------------
+
+class PrefillCursor(NamedTuple):
+    """In-flight chunked-prefill state for one request (batch 1).
+
+    Per-attention-layer full-precision K/V buffers (pattern positions carry
+    a stacked (n_periods, 1, T, KV, HD) pair) plus the next logical
+    position. Rows [0, t0) are filled by earlier chunks; the rest are zeros,
+    causally masked out by `q_offset` in the chunk's attention."""
+    period_kv: tuple
+    tail_kv: tuple
+    t0: jax.Array           # scalar i32: logical position of the next chunk
+
+
+def lm_prefill_chunk_unsupported(cfg: ModelConfig) -> str | None:
+    """Why chunked prefill cannot run for this config — None when it can."""
+    pattern, _, tail = pattern_layout(cfg)
+    if set(pattern + tail) != {"A"}:
+        return (f"layer pattern {cfg.layer_pattern!r} has non-global layers; "
+                'chunked prefill supports all-"A" stacks only')
+    if cfg.moe:
+        return "MoE routing is not guaranteed chunk-invariant"
+    if cfg.frontend != "none":
+        return "modality frontends are not supported by chunked prefill"
+    if not cfg.salca_static_channels:
+        return ("per-input heavy-channel identification needs the full "
+                "prompt's K at once; chunked prefill requires "
+                "cfg.salca_static_channels")
+    return None
+
+
+def lm_prefill_begin(cfg: ModelConfig, t_total: int) -> PrefillCursor:
+    """Fresh cursor for a prompt of `t_total` tokens (batch 1)."""
+    pattern, n_periods, tail = pattern_layout(cfg)
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def bufs(lead):
+        z = jnp.zeros(lead + (1, t_total, kvh, hd), cdtype(cfg))
+        return (z, z)
+
+    period_kv = tuple(bufs((n_periods,)) for _ in pattern) if n_periods else ()
+    tail_kv = tuple(bufs(()) for _ in tail)
+    return PrefillCursor(period_kv, tail_kv, jnp.zeros((), jnp.int32))
+
+
+def lm_prefill_chunk(params: dict, cfg: ModelConfig, pool: LMState,
+                     tokens: jax.Array, cursor: PrefillCursor, slot,
+                     pages: jax.Array, n_shared, max_seq: int, *,
+                     final: bool):
+    """Advance an in-flight chunked prefill by one chunk of tokens.
+
+    `tokens`: (1, C) token ids for logical positions [t0, t0+C). Streams the
+    chunk's K/V into the paged pool at `slot` (which the engine keeps masked
+    off until the final chunk) and carries the full-precision buffers
+    forward. Returns (logits, pool', cursor'): `logits` is the (1, V)
+    next-token distribution on the final chunk and None otherwise. On the
+    final chunk the pool's `pos[slot]` is set so decode resumes exactly
+    where `lm_prefill` + `lm_write_into_slot` would have left it.
+    """
+    from repro.core.cache import prefill_chunk_into_pages
+    pattern, n_periods, tail = pattern_layout(cfg)
+    reason = lm_prefill_chunk_unsupported(cfg)
+    if reason is not None:
+        raise ValueError(f"chunked prefill unsupported: {reason}")
+    h = embed_inputs(params, cfg, tokens)
+    t0 = cursor.t0
+    sp = B.salca_params_for(cfg, max_seq)
+
+    period_kv, period_states = (), ()
+    if n_periods > 0:
+        def body(h, xs):
+            pps, kvs, psts = xs
+            new_kvs, new_psts = [], []
+            for i, _ in enumerate(pattern):
+                kb, vb = kvs[i]
+                h, kb, vb, k, v = B.block_prefill_chunk(pps[i], h, kb, vb,
+                                                        t0, cfg)
+                heavy = B.static_heavy_idx(pps[i]["attn"], cfg, sp, 1)
+                new_psts.append(prefill_chunk_into_pages(
+                    psts[i], k, v, heavy, slot, pages, t0, n_shared))
+                new_kvs.append((kb, vb))
+            return h, (tuple(new_kvs), tuple(new_psts))
+
+        h, (period_kv, period_states) = jax.lax.scan(
+            body, h, (params["periods"], cursor.period_kv, pool.period_states))
+
+    tail_kv, tail_states = [], list(pool.tail_states)
+    for i, _ in enumerate(tail):
+        kb, vb = cursor.tail_kv[i]
+        h, kb, vb, k, v = B.block_prefill_chunk(params["tail"][i], h, kb, vb,
+                                                t0, cfg)
+        heavy = B.static_heavy_idx(params["tail"][i]["attn"], cfg, sp, 1)
+        tail_states[i] = prefill_chunk_into_pages(
+            tail_states[i], k, v, heavy, slot, pages, t0, n_shared)
+        tail_kv.append((kb, vb))
+
+    c = tokens.shape[1]
+    if final:
+        hn = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+        logits = vocab_mask_logits(lm_logits(params["embed"], hn[:, -1], cfg),
+                                   cfg)
+        pos = pool.pos.at[slot].set(t0 + c)
+    else:
+        logits, pos = None, pool.pos
+    new_pool = LMState(period_states, tuple(tail_states), pos)
+    return logits, new_pool, PrefillCursor(period_kv, tuple(tail_kv), t0 + c)
+
+
+def lm_static_heavy(params: dict, cfg: ModelConfig, max_seq: int):
+    """Static heavy-channel sets per attention layer, in the same
+    (periods..., tail...) order and stacked shapes as a batch=1 prefill
+    state's cache `heavy_idx` leaves — the serving engine hashes these for
+    radix-map registration when a chunked prefill installs without ever
+    materializing a dense source cache. None unless the config uses the
+    static (weight-derived) selection."""
+    if not cfg.salca_static_channels:
+        return None
+    pattern, n_periods, tail = pattern_layout(cfg)
+    sp = B.salca_params_for(cfg, max_seq)
+    parts = []
+    for i, kind in enumerate(pattern):
+        if kind in ("A", "L") and n_periods:
+            parts.append(jax.vmap(
+                lambda p: B.static_heavy_idx(p["attn"], cfg, sp, 1)
+            )(params["periods"][i]))
+    for i, kind in enumerate(tail):
+        if kind in ("A", "L"):
+            parts.append(B.static_heavy_idx(params["tail"][i]["attn"],
+                                            cfg, sp, 1))
+    return tuple(parts)
+
+
 def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int,
                   prefill_len: int | jax.Array = 0) -> LMState:
     """Empty (or cursor-advanced) decode state, used for dry-run specs."""

@@ -102,24 +102,40 @@ class Request:
     stop_token: int | None = None      # finish early when sampled
     temperature: float = 0.0           # 0 = greedy; >0 = per-slot sampling
     submitted: float = field(default_factory=time.time)
-    admitted: float | None = None      # prefill start (end of queue wait)
+    admitted: float | None = None      # FIRST admission's work start
     first_token_time: float | None = None
     done_time: float | None = None
     stop_reason: str | None = None     # "length" | "stop" | "overflow"
     output: list = field(default_factory=list)
     shared_blocks: int = 0             # blocks admitted by prefix sharing
-    # Engine-internal stashes, kept across head-of-line retries and cleared
-    # at admission: prefill result, prompt prefix digests, heavy-set bytes.
-    _prefill: Any = field(default=None, repr=False, compare=False)
+    preemptions: int = 0               # times evicted and requeued
+    token_times: list = field(default_factory=list)  # wall time per fresh token
+    # Small host-side stashes kept across head-of-line retries: prompt
+    # prefix digests and heavy-set bytes (a few hundred bytes — these never
+    # pin device memory; the prefill STATE stash is engine-owned and bounded
+    # to one request, see `ServingEngine._ensure_prefill`).
     _digests: Any = field(default=None, repr=False, compare=False)
     _heavy: Any = field(default=None, repr=False, compare=False)
+    # Preemption/replay bookkeeping: recorded output to force-feed after
+    # re-prefill (KV for generated tokens is regenerated by replaying them
+    # through decode ticks — bit-exact even under temperature sampling),
+    # accumulated queue wait across admission cycles, the requeue timestamp,
+    # and whether the current admission cycle already counted its wait.
+    _replay: Any = field(default=None, repr=False, compare=False)
+    _queue_wait: float = field(default=0.0, repr=False, compare=False)
+    _requeued_at: Any = field(default=None, repr=False, compare=False)
+    _cycle_started: bool = field(default=False, repr=False, compare=False)
 
     @property
     def queue_wait_s(self) -> float | None:
-        return None if self.admitted is None else self.admitted - self.submitted
+        """Total time spent waiting in the queue, summed over the initial
+        submission and every preemption requeue. None until work starts."""
+        return None if self.admitted is None else self._queue_wait
 
     @property
     def ttft_s(self) -> float | None:
+        """Submit → first token. Never reset by preemption: the first token
+        streams to the caller once, whatever happens to the KV afterwards."""
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.submitted
@@ -133,6 +149,7 @@ class Request:
             "stop_reason": self.stop_reason,
             "queue_wait_s": self.queue_wait_s,
             "ttft_s": self.ttft_s,
+            "preemptions": self.preemptions,
         }
 
 
@@ -210,11 +227,19 @@ class ServeStats:
     decode_calls: int = 0      # jitted decode dispatches (== ticks by design)
     completed: int = 0
     tokens_generated: int = 0  # includes the prefill-produced first token
-    queue_wait_s: float = 0.0  # summed over completed admissions
-    ttft_s: float = 0.0        # summed over admitted requests
+    queue_wait_s: float = 0.0  # summed over admission cycles (see admissions)
+    ttft_s: float = 0.0        # summed over first tokens (see ttft_count)
+    admissions: int = 0        # admission cycles begun (re-admissions count)
+    ttft_count: int = 0        # requests that produced a first token
     peak_active_slots: int = 0
     overflows: int = 0         # requests finished with stop_reason="overflow"
     dropped_writes: int = 0    # KV writes that could not be stored
+    # Continuous batching (zero unless prefill_chunk / preempt are set):
+    preemptions: int = 0       # slots evicted to free blocks and requeued
+    replayed_tokens: int = 0   # recorded tokens force-fed after re-prefill
+    prefill_chunks: int = 0    # budgeted chunk steps executed
+    chunk_stalls: int = 0      # chunk ticks that waited on the block pool
+    prefill_tokens: int = 0    # prompt tokens prefilled (monolithic + chunks)
     # Paged-pool bookkeeping (zero in dense mode):
     block_pool_size: int = 0
     block_size: int = 0
@@ -247,11 +272,21 @@ class ServeStats:
             "tokens_generated": self.tokens_generated,
             "decode_ms_per_step": round(1e3 * self.decode_s / max(self.decode_steps, 1), 3),
             "decode_ms_per_tick": round(1e3 * self.decode_s / max(self.ticks, 1), 3),
-            "mean_queue_wait_s": round(self.queue_wait_s / max(self.completed, 1), 4),
-            "mean_ttft_s": round(self.ttft_s / max(self.completed, 1), 4),
+            # Means divide by the population that contributed a sample:
+            # queue waits are logged once per admission cycle (a preempted
+            # request waits again), TTFT once per request that produced a
+            # first token — NOT by `completed`, which undercounts whenever
+            # requests are still in flight and overcounts re-admissions.
+            "mean_queue_wait_s": round(self.queue_wait_s / max(self.admissions, 1), 4),
+            "mean_ttft_s": round(self.ttft_s / max(self.ttft_count, 1), 4),
+            "admissions": self.admissions,
             "peak_active_slots": self.peak_active_slots,
             "overflows": self.overflows,
             "dropped_writes": self.dropped_writes,
+            "preemptions": self.preemptions,
+            "replayed_tokens": self.replayed_tokens,
+            "prefill_chunks": self.prefill_chunks,
+            "chunk_stalls": self.chunk_stalls,
         }
         if self.block_pool_size:
             out["block_pool_size"] = self.block_pool_size
@@ -280,6 +315,24 @@ class ServeStats:
                 out["promotions"] = self.promotions
                 out["pcie_bytes"] = self.pcie_bytes
         return out
+
+
+@dataclass
+class _InflightPrefill:
+    """One chunked prefill in flight: the engine admits at most one at a
+    time (the chunk budget is per tick, so a second in-flight prefill could
+    not make progress anyway) — which also bounds the device-state stash to
+    a single cursor. The slot is reserved (popped from `_free`) but stays
+    masked OFF until the final chunk installs; `_slot_blocks`/`_slot_pos`
+    track the covered blocks so preemption releases exactly what was
+    charged."""
+    req: Request
+    slot: int
+    cursor: Any                         # PrefillCursor pytree (device)
+    consumed: int = 0                   # prompt tokens prefilled so far
+    n_shared: int = 0                   # radix-matched prefix blocks
+    shared_ids: list = field(default_factory=list)
+    pages: np.ndarray | None = None     # page row mapped so far (-1 beyond)
 
 
 class ServingEngine:
@@ -325,7 +378,8 @@ class ServingEngine:
                  fused_decode: bool | None = None,
                  kv_pool_dtype: str | None = None,
                  host_spill: bool = False, demote_after: int = 4,
-                 spill_keep_recent: int = 2, promote_headroom: int = 1):
+                 spill_keep_recent: int = 2, promote_headroom: int = 1,
+                 prefill_chunk: int | None = None, preempt: bool = False):
         # Per-engine override of the block pool's storage precision (the
         # tiered-KV first tier). Parameter shapes don't depend on the knob,
         # so the same params serve any pool precision.
@@ -479,6 +533,52 @@ class ServingEngine:
             lambda p, toks: self.api.prefill(p, {"tokens": toks}, self.max_seq))
         self._reset = jax.jit(self.api.reset_slot, donate_argnums=dn)
 
+        # Bounded prefill stash: AT MOST ONE head-of-line request keeps a
+        # batch=1 device prefill state between admission attempts (it used
+        # to live on every queued Request, pinning a full state per blocked
+        # request — a queued burst could exhaust HBM before admission).
+        self._stash: tuple[Request, tuple] | None = None
+
+        # -- continuous batching: chunked prefill + preemption ----------
+        self.prefill_chunk = prefill_chunk
+        self.preempt = preempt
+        self._inflight: _InflightPrefill | None = None
+        self._static_heavy_cache: bytes | None = None
+        if preempt and not paged:
+            raise ValueError("preempt requires paged=True (preemption frees "
+                             "pool blocks; dense slots have nothing to free)")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+            if not paged:
+                raise ValueError("prefill_chunk requires paged=True (chunks "
+                                 "stream into a partially-filled paged slot)")
+            if host_spill:
+                raise ValueError("prefill_chunk cannot combine with "
+                                 "host_spill's wave admission (one pressure "
+                                 "valve per engine; use preempt instead)")
+            if self.api.prefill_chunk is None:
+                raise ValueError(f"{cfg.name}: chunked prefill not supported "
+                                 "for this model family")
+            reason = self.api.prefill_chunk_unsupported()
+            if reason is not None:
+                raise ValueError(f"chunked prefill unsupported: {reason}")
+            if cfg.kv_pool_dtype == "int4":
+                raise ValueError("chunked prefill does not support int4 "
+                                 "pools (per-block requantization is not "
+                                 "chunk-incremental)")
+            # donate the pool state so the streaming install is in place;
+            # the cursor is NOT donated — a fresh cursor's zero K/V buffers
+            # can alias each other (XLA constant dedup) and donating aliased
+            # buffers is an error. `final` is static (two programs per
+            # chunk shape).
+            self._chunk_step = jax.jit(
+                lambda p, s, toks, cur, slot, pages, nsh, final: \
+                    self.api.prefill_chunk(p, s, toks, cur, slot, pages, nsh,
+                                           self.max_seq, final=final),
+                static_argnames=("final",),
+                donate_argnums=(1,) if donate else ())
+
     @staticmethod
     def _mesh_shards(ctx: DecodeCtx | None) -> int:
         """Pool shard count = product of the mesh sizes of ctx.axis."""
@@ -572,17 +672,46 @@ class ServingEngine:
         return req._digests
 
     def _ensure_prefill(self, req: Request):
-        """Prefill once per request; stash the result so head-of-line
-        retries (waiting on blocks) and the heavy-channel gate don't pay
-        it twice."""
-        if req._prefill is None:
-            t0 = time.time()
-            logits, state1 = self._prefill(
-                self.params, jnp.asarray(req.prompt[None]))
-            logits_row = np.asarray(logits)[0]          # blocks until ready
-            self.stats.prefill_s += time.time() - t0
-            req._prefill = (logits_row, state1)
-        return req._prefill
+        """Prefill once per request; the result is stashed ENGINE-side so
+        head-of-line retries (waiting on blocks) and the heavy-channel gate
+        don't pay it twice. The stash holds at most ONE request's batch=1
+        device state — only the queue head can be waiting on blocks, so a
+        bigger stash would just pin HBM for requests that cannot admit yet.
+        A different request taking the head (preemption requeue) replaces
+        the stash; `_drop_stash` clears it on requeue and admission."""
+        if self._stash is not None and self._stash[0] is req:
+            return self._stash[1]
+        t0 = time.time()
+        logits, state1 = self._prefill(
+            self.params, jnp.asarray(req.prompt[None]))
+        logits_row = np.asarray(logits)[0]              # blocks until ready
+        self.stats.prefill_s += time.time() - t0
+        self.stats.prefill_tokens += len(req.prompt)
+        self._stash = (req, (logits_row, state1))
+        return self._stash[1]
+
+    def _drop_stash(self, req: Request | None = None) -> None:
+        """Free the engine prefill stash (all requests, or only `req`'s)."""
+        if self._stash is not None and (req is None or self._stash[0] is req):
+            self._stash = None
+
+    def _begin_cycle(self, req: Request, t0: float) -> None:
+        """Account the start of one admission cycle: close the queue-wait
+        segment that began at submit (first cycle) or at the preemption
+        requeue (later cycles). Re-admission must NOT reset `submitted` —
+        TTFT keeps measuring from the original submit — and queue wait
+        accumulates across cycles. Idempotent within a cycle: the gate
+        prefill may start work on an attempt that then waits for blocks."""
+        if req._cycle_started:
+            return
+        req._cycle_started = True
+        since = req.submitted if req._requeued_at is None else req._requeued_at
+        wait = max(t0 - since, 0.0)
+        req._queue_wait += wait
+        self.stats.queue_wait_s += wait
+        self.stats.admissions += 1
+        if req.admitted is None:
+            req.admitted = t0
 
     def _heavy_bytes(self, state1) -> bytes:
         """Concatenated heavy-channel index bytes of every attention cache
@@ -771,16 +900,24 @@ class ServingEngine:
         Paged mode first secures `ceil(prompt/block_size)` physical blocks
         from the free list — minus any prefix-shared blocks, which are
         mapped by reference — and waits head-of-line if the pool can't
-        cover the divergent tail, keeping admission FIFO."""
+        cover the divergent tail, keeping admission FIFO.
+
+        With `prefill_chunk` set, admission instead advances the chunked
+        scheduler by one budgeted chunk per call (interleaved with decode
+        ticks by `run`), so a long prompt can no longer head-of-line block
+        the decode stream."""
+        if self.prefill_chunk is not None:
+            self._advance_prefill()
+            return
         while self._queue and self._free:
             req = self._queue[0]
             pages = None
             n_shared = 0
-            # Admission-processing start: `admitted` is stamped at the FIRST
-            # attempt that starts work on this request (the gate prefill may
-            # run on an attempt that then waits for blocks), so queue_wait
-            # and prefill stay disjoint segments of TTFT — nothing is
-            # counted in both.
+            # Admission-processing start: the cycle's queue-wait segment is
+            # closed at the FIRST attempt that starts work on this request
+            # (the gate prefill may run on an attempt that then waits for
+            # blocks), so queue_wait and prefill stay disjoint segments of
+            # TTFT — nothing is counted in both.
             t0 = time.time()
             if self.paged:
                 plen = len(req.prompt)
@@ -790,8 +927,7 @@ class ServingEngine:
                     cand = self._match_tokens(req)
                     if need_full - len(cand) > self._alloc.total_free:
                         break              # can't cover even if fully gated in
-                    if req.admitted is None:
-                        req.admitted = t0  # gate prefill follows: work begins
+                    self._begin_cycle(req, t0)  # gate prefill: work begins
                     _, state1 = self._ensure_prefill(req)
                     if req._heavy is None:
                         req._heavy = self._heavy_bytes(state1)
@@ -832,8 +968,7 @@ class ServingEngine:
                     pages[:need_full] = blocks
             self._queue.popleft()
             slot = self._free.pop()
-            if req.admitted is None:
-                req.admitted = t0
+            self._begin_cycle(req, t0)
             logits_row, state1 = self._ensure_prefill(req)
             if self.paged and pages is None:
                 # Wave admission (host_spill): write the prompt into the
@@ -881,21 +1016,49 @@ class ServingEngine:
                     self._register_blocks(req, blocks, n_shared, req._heavy)
             else:
                 self._state = self._write(self._state, state1, jnp.int32(slot))
-            req._prefill = req._digests = req._heavy = None  # free stashes
-            tok = self._sample(req, logits_row)
-            req.output.append(tok)
-            req.first_token_time = time.time()
+            self._drop_stash(req)       # free the batch=1 device state
+            self._activate(req, slot, logits_row)
+
+    def _next_token(self, req: Request, logits_row: np.ndarray | None,
+                    greedy_tok: int | None = None) -> int:
+        """The next output token: a recorded one while the request is inside
+        its preemption replay window (forced-feed — never re-sampled, so the
+        continuation is exact even under temperature), a fresh sample
+        otherwise. Replayed tokens don't re-count as generated and don't
+        restamp latency."""
+        idx = len(req.output)
+        if req._replay is not None and idx < len(req._replay):
+            tok = int(req._replay[idx])
+            self.stats.replayed_tokens += 1
+        else:
+            req._replay = None
+            tok = int(greedy_tok) if logits_row is None \
+                else self._sample(req, logits_row)
             self.stats.tokens_generated += 1
-            self._active[slot] = req
-            self._tokens[slot] = tok
-            self._mask[slot] = True
-            self.stats.peak_active_slots = max(self.stats.peak_active_slots,
-                                               int(self._mask.sum()))
-            # The prefill-produced token may already satisfy the stop rule.
-            if req.stop_token is not None and tok == req.stop_token:
-                self._finish(slot, req, time.time(), "stop")
-            elif req.max_new_tokens <= 1:
-                self._finish(slot, req, time.time(), "length")
+            req.token_times.append(time.time())
+        req.output.append(tok)
+        return tok
+
+    def _activate(self, req: Request, slot: int, logits_row: np.ndarray) -> None:
+        """Make a fully-prefilled request live: emit its first (or replayed)
+        token, mask the slot on, and apply the stop rules the first token
+        may already satisfy. Shared by monolithic admission and the final
+        chunk of a chunked prefill."""
+        tok = self._next_token(req, logits_row)
+        if req.first_token_time is None:
+            req.first_token_time = time.time()
+            self.stats.ttft_s += req.ttft_s
+            self.stats.ttft_count += 1
+        self._active[slot] = req
+        self._tokens[slot] = tok
+        self._mask[slot] = True
+        self.stats.peak_active_slots = max(self.stats.peak_active_slots,
+                                           int(self._mask.sum()))
+        # The prefill-produced token may already satisfy the stop rule.
+        if req.stop_token is not None and tok == req.stop_token:
+            self._finish(slot, req, time.time(), "stop")
+        elif req.max_new_tokens <= 1:
+            self._finish(slot, req, time.time(), "length")
 
     def _finish(self, slot: int, req: Request, now: float, reason: str) -> None:
         if self._active.get(slot) is not req:
@@ -903,8 +1066,6 @@ class ServingEngine:
         req.done_time = now
         req.stop_reason = reason
         self.stats.completed += 1
-        self.stats.queue_wait_s += req.queue_wait_s or 0.0
-        self.stats.ttft_s += req.ttft_s or 0.0
         del self._active[slot]
         self._mask[slot] = False
         self._free.append(slot)
@@ -912,6 +1073,175 @@ class ServingEngine:
         if self.paged:
             self._release_blocks(slot)  # decref; 0 → free list + radix prune
         self._state = self._reset(self._state, jnp.int32(slot))
+
+    # -- preemption ----------------------------------------------------
+
+    def _pick_victim(self) -> int | None:
+        """Lowest-priority occupant of the pool: the LATEST-submitted
+        request (ties broken by highest rid) among active slots and the
+        in-flight chunked prefill. FIFO fairness — the newest arrival gives
+        its blocks back first and loses the least progress."""
+        cands: list[tuple[float, int, int]] = [
+            (req.submitted, req.rid, slot)
+            for slot, req in self._active.items()]
+        if self._inflight is not None:
+            inf = self._inflight
+            cands.append((inf.req.submitted, inf.req.rid, inf.slot))
+        if not cands:
+            return None
+        return max(cands)[2]
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict one slot and requeue its request at the head of the queue.
+
+        The unmap goes through the same decref-idempotent path as overflow
+        finish — `_release_blocks` host-side and the `free_pages` form of
+        `reset_slot` device-side — so a preempt racing an overflow finish or
+        a reset on the same slot is a no-op, never a double free. Device
+        stashes are cleared; the recorded output becomes the replay window:
+        re-admission re-prefills the PROMPT only (cheap when the radix map
+        still holds the prefix) and force-feeds the recorded tokens through
+        normal decode ticks, regenerating identical KV — so outputs stay
+        bit-identical to a never-preempted run."""
+        now = time.time()
+        if self._inflight is not None and self._inflight.slot == slot:
+            req = self._inflight.req
+            self._inflight = None       # drop the cursor (device buffers)
+        else:
+            req = self._active.pop(slot)
+        self._mask[slot] = False
+        self.stats.preemptions += 1
+        req.preemptions += 1
+        # Keep the LONGEST recorded output: a request preempted again while
+        # replaying must not truncate its replay window to the replayed part.
+        if not (req._replay is not None
+                and len(req._replay) >= len(req.output)):
+            req._replay = list(req.output) or None
+        req.output = []
+        req.shared_blocks = 0
+        req._requeued_at = now
+        req._cycle_started = False
+        self._drop_stash(req)
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        self._release_blocks(slot)
+        self._state = self._reset(self._state, jnp.int32(slot))
+        self._queue.appendleft(req)
+
+    def _preempt_for_blocks(self, needy_slot: int | None = None) -> bool:
+        """Free pool blocks by preempting victims until the allocator has
+        at least one (a victim's blocks may all be shared — keep going).
+        Returns False once `needy_slot` itself was preempted (its request is
+        gone from the pool; the caller must stop growing it) or no victim
+        remains."""
+        while not self._alloc.total_free:
+            victim = self._pick_victim()
+            if victim is None:
+                return False
+            self._preempt_slot(victim)
+            if victim == needy_slot:
+                return False
+        return True
+
+    # -- chunked prefill -----------------------------------------------
+
+    def _static_heavy_bytes(self) -> bytes:
+        """Heavy-set identity bytes for the sharing gate when prefill is
+        chunked: derived once from the weights (chunked prefill requires
+        static channels, so every request's sets are identical by
+        construction) in the same layer order and layout `_heavy_bytes`
+        reads off a dense prefill state — the two admission paths publish
+        interchangeable radix entries."""
+        if self._static_heavy_cache is None:
+            parts = self.api.static_heavy(self.params, self.max_seq)
+            self._static_heavy_cache = b"".join(
+                np.asarray(p).tobytes() for p in parts)
+        return self._static_heavy_cache
+
+    def _advance_prefill(self) -> None:
+        """One budgeted prefill chunk per scheduler iteration.
+
+        At most one prefill is in flight. Starting one reserves a slot
+        (masked OFF until the final chunk), radix-matches the prompt, and
+        pins every shared-prefix block up front (increfed immediately —
+        lazy increfs would let the radix owner finish mid-prefill and free
+        a block this prefill still plans to map by reference); each call
+        then charges the FRESH blocks the next `prefill_chunk` tokens
+        cover — incrementally, not the whole prompt up front — and runs one
+        chunk step, which streams the chunk's K/V into the paged slot. A
+        dry free list stalls the chunk (decode keeps running and will free
+        or preempt blocks) rather than self-preempting: the in-flight
+        request is the newest occupant, so evicting others for it would
+        invert priority. The final chunk yields the first-token logits and
+        activates the slot exactly like monolithic admission."""
+        if self._inflight is None:
+            if not (self._queue and self._free):
+                return
+            req = self._queue.popleft()
+            self._begin_cycle(req, time.time())
+            slot = self._free.pop()
+            shared_ids: list[int] = []
+            if self.prefix_sharing:
+                heavy = self._static_heavy_bytes()
+                req._heavy = heavy
+                for _, block, owner_heavy in self._match_tokens(req):
+                    if owner_heavy != heavy:
+                        break           # unreachable with static channels
+                    shared_ids.append(block)
+            inf = _InflightPrefill(
+                req, slot, self.api.prefill_begin(len(req.prompt)),
+                n_shared=len(shared_ids), shared_ids=shared_ids,
+                pages=np.full((self.max_blocks,), -1, np.int32))
+            # Pin the shared prefix NOW; the device mirrors this incref on
+            # the first chunk (`prefill_chunk_into_pages` charges all
+            # n_shared blocks when start == 0).
+            for j, b in enumerate(shared_ids):
+                inf.pages[j] = b
+                self._refcount[b] += 1
+            self._inflight = inf
+            self._slot_blocks[slot] = list(shared_ids)
+            self._slot_pos[slot] = 0
+
+        inf = self._inflight
+        req, slot = inf.req, inf.slot
+        plen = len(req.prompt)
+        c = min(self.prefill_chunk, plen - inf.consumed)
+        held = self._slot_blocks[slot]
+        span = self._blocks_for(inf.consumed + c)   # blocks covered after
+        fresh_needed = max(span - len(held), 0)     # held ⊇ shared prefix
+        fresh = self._alloc.alloc(fresh_needed) if fresh_needed else []
+        if fresh is None:
+            self.stats.chunk_stalls += 1            # pool dry: try next tick
+            return
+        it = iter(fresh)
+        for j in range(len(held), span):
+            b = next(it)
+            inf.pages[j] = b
+            self._refcount[b] += 1
+            held.append(b)
+        self._note_block_usage()
+        t0 = time.time()
+        final = inf.consumed + c == plen
+        toks = jnp.asarray(req.prompt[None, inf.consumed:inf.consumed + c])
+        logits, self._state, inf.cursor = self._chunk_step(
+            self.params, self._state, toks, inf.cursor, jnp.int32(slot),
+            jnp.asarray(inf.pages), jnp.int32(inf.n_shared), final=final)
+        inf.consumed += c
+        self._slot_pos[slot] = inf.consumed
+        self.stats.prefill_chunks += 1
+        self.stats.prefill_tokens += c
+        if not final:
+            self.stats.prefill_s += time.time() - t0
+            return
+        logits_row = np.asarray(logits)[0]          # blocks until ready
+        self.stats.prefill_s += time.time() - t0
+        self._inflight = None
+        if self.prefix_sharing:
+            req.shared_blocks = inf.n_shared
+            self.stats.shared_blocks += inf.n_shared
+            self.stats.prefix_hits += 1 if inf.n_shared else 0
+            self._register_blocks(req, held, inf.n_shared, req._heavy)
+        self._activate(req, slot, logits_row)
 
     def _grow_or_overflow(self) -> None:
         """Before a tick, every active slot must be able to land its next KV
@@ -922,9 +1252,16 @@ class ServingEngine:
         copy-on-write fault `append_token_paged` would otherwise drop. If no
         block is free — or a dense slot hit max_seq — the request finishes
         with an ``overflow`` stop reason and the write that could not be
-        stored is counted, instead of `append_token`'s silent clip."""
+        stored is counted, instead of `append_token`'s silent clip.
+
+        With ``preempt=True`` a dry free list preempts the lowest-priority
+        pool occupant (possibly this very slot) instead of overflowing:
+        every `submit` guarantees one request alone fits the pool, so a
+        preempting engine never emits an ``overflow`` stop."""
         now = time.time()
         for slot, req in list(self._active.items()):
+            if self._active.get(slot) is not req:
+                continue                # preempted by an earlier iteration
             if self.paged:
                 pos = self._slot_pos[slot]
                 held = self._slot_blocks[slot]
@@ -940,6 +1277,15 @@ class ServingEngine:
                     cand = self._demote_candidates()
                     if cand:
                         self.demote_block(cand[0][1], cand[0][2])
+                if pos < self.max_seq and not self._alloc.total_free \
+                        and self.preempt:
+                    # Growth pressure under preemption: evict the newest
+                    # occupant(s) instead of overflowing anyone.
+                    if not self._preempt_for_blocks(slot):
+                        continue        # this slot itself was evicted
+                    if logical < len(held) and held[logical] >= 0 \
+                            and self._refcount[held[logical]] <= 1:
+                        continue        # victim release privatized our block
                 if pos < self.max_seq and self._alloc.total_free:
                     # Growth continues the slot's tail; CoW privatizes the
                     # faulted block. Either way, prefer the shard already
@@ -1001,14 +1347,12 @@ class ServingEngine:
             if self.paged:
                 self._slot_pos[slot] += 1
             if self.greedy or req.temperature <= 0.0:
-                tok = int(nxt_host[slot])
+                tok = self._next_token(req, None, greedy_tok=int(nxt_host[slot]))
             else:
                 if logits_host is None:
                     logits_host = np.asarray(logits)
-                tok = self._sample(req, logits_host[slot])
-            req.output.append(tok)
+                tok = self._next_token(req, logits_host[slot])
             self._tokens[slot] = tok
-            self.stats.tokens_generated += 1
             if req.stop_token is not None and tok == req.stop_token:
                 self._finish(slot, req, now, "stop")
             elif len(req.output) >= req.max_new_tokens:
@@ -1017,7 +1361,8 @@ class ServingEngine:
 
     def run(self, max_ticks: int = 10_000) -> ServeStats:
         ticks = 0
-        while (self._queue or self._active) and ticks < max_ticks:
+        while (self._queue or self._active or self._inflight is not None) \
+                and ticks < max_ticks:
             self._admit()
             if self._active:
                 self._tick()

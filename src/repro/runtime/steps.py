@@ -310,6 +310,72 @@ def make_serve_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
                                 block_size=block_size, num_blocks=num_blocks)
 
 
+def make_prefill_chunk_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
+                            block_size: int = 32,
+                            num_blocks: int | None = None):
+    """Chunked-prefill tick for the continuous-batching scheduler:
+
+        chunk_step(params, state, tokens, cursor, slot, pages, n_shared,
+                   final=...) → (logits | None, state, cursor)
+
+    One call encodes a ``(1, C)`` token chunk of a single request into its
+    slot of the shared paged pool, resuming from ``cursor`` (the dense
+    per-layer K/V prompt buffers plus the absolute start position). The pool
+    state keeps the block-sharded decode layout (`_paged_cache_spec`) so the
+    scheduler can interleave chunk ticks with masked decode ticks on the
+    same state buffers; the cursor and page row are replicated — they are
+    O(prompt · layers) scratch for one in-flight request, small next to the
+    pool. ``final=True`` (static) emits last-token logits and advances the
+    slot's decode cursor."""
+    api = get_model(cfg)
+    if api.prefill_chunk is None:
+        raise ValueError(f"{cfg.name}: chunked prefill not supported "
+                         "for this model family")
+    reason = api.prefill_chunk_unsupported()
+    if reason is not None:
+        raise ValueError(f"{cfg.name}: chunked prefill unsupported: {reason}")
+    bdp, seq_axes = plan.decode_axes(shape.global_batch)
+    sctx = decode_sharding_ctx(cfg, plan, bdp, shape.global_batch)
+
+    def step(params, state, tokens, cursor, slot, pages, n_shared, *,
+             final: bool):
+        with activation_sharding(sctx):
+            return api.prefill_chunk(params, state, tokens, cursor, slot,
+                                     pages, n_shared, shape.seq_len,
+                                     final=final)
+
+    def shapes():
+        pshape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        nb = num_blocks or shape.global_batch * (shape.seq_len // block_size)
+        sshape = jax.eval_shape(
+            lambda: api.init_paged_state(shape.global_batch, shape.seq_len,
+                                         block_size, nb))
+        pspec = param_specs(sctx, pshape)
+        sspec = state_specs(plan.mesh, sshape, bdp, seq_axes, plan.tp)
+        return (pshape, sshape), (pspec, sspec)
+
+    def jitted():
+        (_, _), (pspec, sspec) = shapes()
+        repl = NamedSharding(plan.mesh, P())
+        # `final` rides as a static positional (pjit rejects kwargs once
+        # in_shardings is given); callers use the keyword on the wrapper.
+        # Only the pool state is donated: a fresh cursor's zero-filled K/V
+        # buffers can alias each other (XLA dedupes identical constants),
+        # and donating aliased buffers is an error.
+        inner = jax.jit(
+            lambda p, s, t, c, sl, pg, ns, final: step(
+                p, s, t, c, sl, pg, ns, final=final),
+            static_argnums=(7,),
+            in_shardings=(_ns(plan.mesh, pspec), _ns(plan.mesh, sspec),
+                          repl, repl, repl, repl, repl),
+            donate_argnums=(1,),
+        )
+        return lambda p, s, t, c, sl, pg, ns, *, final: inner(
+            p, s, t, c, sl, pg, ns, final)
+
+    return step, jitted, shapes, sctx
+
+
 def make_prefill_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):
     """prefill(params, batch) → (logits, decode_state). State comes out in
     the decode layout (sequence-sharded caches)."""
