@@ -578,6 +578,79 @@ def _bursty_sweep(cfg, params, smoke: bool):
             f"monolithic {p95['monolithic']:.0f}")
 
 
+def _overload_sweep(cfg, params, smoke: bool):
+    """Sustained overload (arrivals ≫ service rate) against an unbounded
+    vs a `max_queue`-bounded engine on the simulated clock. An unbounded
+    queue converts overload into unbounded waiting: every admitted request
+    pays the whole backlog ahead of it, so TTFT p95 grows with the trace.
+    A bounded queue sheds at submit (`stop_reason="rejected"`) and keeps
+    the backlog — and therefore admitted-TTFT — flat. Gates (RAISE so
+    benchmarks/run.py exits 1):
+
+      * the bounded engine actually sheds (rejections > 0) but rejects
+        < 30% of the trace;
+      * every non-rejected request completes, zero overflow stops;
+      * bounded admitted-TTFT p95 ≤ the unbounded p95 (the shed requests
+        are the ones that would have blown the latency budget).
+    """
+    from repro.runtime.serve import ServingEngine
+
+    scfg = dataclasses.replace(cfg, salca_static_channels=True)
+    n = 12 if smoke else 24
+    slots, num_blocks, cap = 3, 10, 6
+    yield ("serving_overload,mode,requests,rejected,completed,ttft_p50,"
+           "ttft_p95,preemptions,overflows")
+    p95 = {}
+    for mode in ("unbounded", "bounded"):
+        rng = np.random.default_rng(29)
+        trace = _bursty_trace(scfg, rng, n)
+        for _, r in trace:                   # heavier overload than bursty:
+            r.max_new_tokens = 24            # longer service per admission
+        eng = ServingEngine(scfg, params, max_seq=MAX_SEQ, slots=slots,
+                            num_blocks=num_blocks, paged=True,
+                            block_size=BLOCK_SIZE, prefix_sharing=True,
+                            preempt=True,
+                            max_queue=cap if mode == "bounded" else None)
+        ttft, _ = _simulate_bursty(eng, trace)
+        st = eng.stats
+        reqs = [r for _, r in trace]
+        rejected = [r for r in reqs if r.stop_reason == "rejected"]
+        tv = sorted(ttft.values()) or [0.0]
+        pct = lambda v, q: v[min(int(q * len(v)), len(v) - 1)]
+        p95[mode] = pct(tv, 0.95)
+        yield (f"serving_overload,{mode},{n},{len(rejected)},{st.completed},"
+               f"{pct(tv, 0.50):.0f},{p95[mode]:.0f},{st.preemptions},"
+               f"{st.overflows}")
+        # Acceptance gates — raise so benchmarks/run.py exits 1.
+        if st.overflows:
+            raise RuntimeError(f"overload {mode}: overflow stop with "
+                               "preemption enabled")
+        if st.rejections != len(rejected):
+            raise RuntimeError(f"overload {mode}: rejections counter "
+                               f"{st.rejections} != {len(rejected)} shed")
+        survivors = [r for r in reqs if r.stop_reason != "rejected"]
+        if not all(r.stop_reason in ("length", "stop") for r in survivors):
+            raise RuntimeError(f"overload {mode}: admitted request did not "
+                               "complete normally")
+        if mode == "bounded":
+            if not rejected:
+                raise RuntimeError("overload bounded: queue cap never shed "
+                                   "(trace is not overloaded)")
+            if len(rejected) >= 0.30 * n:
+                raise RuntimeError(
+                    f"overload bounded: {len(rejected)}/{n} rejected — "
+                    "shedding above the 30% acceptance bar")
+        elif rejected:
+            raise RuntimeError("overload unbounded: rejected without a cap")
+    ratio = p95["bounded"] / max(p95["unbounded"], 1e-9)
+    yield (f"serving_overload_ttft,bounded_vs_unbounded_p95,{ratio:.2f},"
+           f"{'bounded' if ratio <= 1.0 else 'ABOVE-UNBOUNDED'}")
+    if ratio > 1.0:
+        raise RuntimeError(
+            f"overload: bounded TTFT p95 {p95['bounded']:.0f} above "
+            f"unbounded {p95['unbounded']:.0f} — shedding bought nothing")
+
+
 def run(smoke: bool = False):
     from repro.configs import get_config
     from repro.models import get_model
@@ -594,6 +667,7 @@ def run(smoke: bool = False):
     yield from _capacity_sweep(cfg, params, smoke)
     yield from _sharded_sweep(cfg, params, smoke)
     yield from _bursty_sweep(cfg, params, smoke)
+    yield from _overload_sweep(cfg, params, smoke)
 
 
 if __name__ == "__main__":

@@ -15,10 +15,12 @@ sequence on "model"/"data" (CP archs, long_500k).
 
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quantization as qz
 from repro.core import heavy_channels as hc
@@ -334,6 +336,146 @@ class PagedSalcaCache(NamedTuple):
         mapped logical position is always < length or beyond it, and reads
         are masked to pos < length)."""
         return jnp.where(self.page_table >= 0, self.page_table, 0)
+
+    def check_invariants(self, free_blocks=None, host_refcount=None,
+                         allow_holes: bool = False) -> "InvariantReport":
+        """Runtime integrity audit of this pool's bookkeeping.
+
+        The invariants the hypothesis batteries check offline become a
+        production self-check the engine can run every ``audit_every``
+        ticks. Verified here (host-side numpy; one device sync for the
+        three metadata leaves):
+
+        * ``refcount[b]`` equals the number of page-table entries mapping
+          block ``b``, for every block — no leaked or phantom references.
+        * refcounts are non-negative; page-table entries are ``-1`` or a
+          valid physical id; ``0 <= length <= max_seq`` (cursor bounds).
+        * ``free_blocks`` (the engine's free list), when given, is
+          duplicate-free, in range, and disjoint from every mapped block —
+          free ∩ mapped = ∅ — and covers exactly the unreferenced blocks.
+        * ``host_refcount`` (the engine's numpy mirror), when given,
+          matches the device refcount bit-for-bit.
+        * per-slot mapped entries are contiguous from logical 0 with no
+          holes below the cursor, unless ``allow_holes`` (host spill
+          legitimately unmaps cold blocks below the cursor).
+
+        Stack-aware: on instances carrying leading layer/period dims
+        (states inside scanned models), every layer is audited and all
+        layers must agree — the engine maps blocks into every layer's
+        page table in lockstep, so divergence is corruption.
+
+        Returns an `InvariantReport`; never raises on violation (the
+        caller decides whether an unclean report is fatal).
+        """
+        pt = np.asarray(self.page_table)
+        rc = np.asarray(self.refcount)
+        ln = np.asarray(self.length)
+        mb, s = self.max_blocks, self.num_slots
+        p = self.num_blocks
+        pt = pt.reshape(-1, s, mb)
+        rc = rc.reshape(-1, p)
+        ln = ln.reshape(-1, s)
+        layers = pt.shape[0]
+        rep = InvariantReport(
+            checked={"layers": layers, "slots": s, "blocks": p,
+                     "max_blocks": mb})
+
+        # Cross-layer agreement: the engine updates every layer in lockstep.
+        if layers > 1:
+            if not (pt == pt[0]).all():
+                rep.fail("page tables diverge across layers")
+            if not (rc == rc[0]).all():
+                rep.fail("refcounts diverge across layers")
+            if not (ln == ln[0]).all():
+                rep.fail("lengths diverge across layers")
+        pt0, rc0, ln0 = pt[0], rc[0], ln[0]
+
+        if ((ln0 < 0) | (ln0 > self.max_seq)).any():
+            bad = np.where((ln0 < 0) | (ln0 > self.max_seq))[0]
+            rep.fail(f"length out of [0, {self.max_seq}] at slots {bad.tolist()}")
+        if (rc0 < 0).any():
+            rep.fail(f"negative refcount at blocks "
+                     f"{np.where(rc0 < 0)[0].tolist()}")
+        if ((pt0 < PAGE_UNMAPPED) | (pt0 >= p)).any():
+            rep.fail("page-table entry outside [-1, num_blocks)")
+            pt0 = np.clip(pt0, PAGE_UNMAPPED, p - 1)
+
+        # refcount[b] == number of page-table references to b.
+        mapped = pt0[pt0 >= 0]
+        derived = np.bincount(mapped, minlength=p).astype(rc0.dtype)
+        if not (derived == rc0).all():
+            bad = np.where(derived != rc0)[0]
+            rep.fail(f"refcount mismatch at blocks {bad.tolist()[:8]}: "
+                     f"device={rc0[bad].tolist()[:8]} "
+                     f"page-table={derived[bad].tolist()[:8]}")
+
+        if host_refcount is not None:
+            hrc = np.asarray(host_refcount)
+            if hrc.shape != (p,) or not (hrc == rc0).all():
+                bad = np.where(hrc != rc0)[0] if hrc.shape == (p,) else []
+                rep.fail(f"host refcount mirror diverges from device at "
+                         f"blocks {list(bad)[:8]}")
+
+        if free_blocks is not None:
+            free = list(free_blocks)
+            if len(set(free)) != len(free):
+                rep.fail("duplicate ids in the free list")
+            fa = np.asarray(free, dtype=np.int64) if free else \
+                np.zeros((0,), np.int64)
+            if fa.size and ((fa < 0) | (fa >= p)).any():
+                rep.fail("free-list id outside the pool")
+            else:
+                free_mask = np.zeros((p,), bool)
+                free_mask[fa] = True
+                clash = free_mask & (derived > 0)
+                if clash.any():
+                    rep.fail(f"free ∩ mapped ≠ ∅: blocks "
+                             f"{np.where(clash)[0].tolist()[:8]}")
+                orphan = ~free_mask & (derived == 0)
+                if orphan.any():
+                    rep.fail(f"leaked blocks (unreferenced, not free): "
+                             f"{np.where(orphan)[0].tolist()[:8]}")
+
+        if not allow_holes:
+            # Mapped entries must be contiguous from logical 0: a hole
+            # below a mapped block means a write landed past an unmapped
+            # region (only host spill creates that state on purpose).
+            is_mapped = pt0 >= 0
+            first_unmapped = np.where(is_mapped.any(axis=1),
+                                      np.argmin(is_mapped, axis=1), mb)
+            first_unmapped[is_mapped.all(axis=1)] = mb
+            tail_mapped = is_mapped & (np.arange(mb)[None, :]
+                                       >= first_unmapped[:, None])
+            if tail_mapped.any():
+                rep.fail(f"page-table hole below a mapped block at slots "
+                         f"{np.where(tail_mapped.any(axis=1))[0].tolist()}")
+        return rep
+
+
+@dataclass
+class InvariantReport:
+    """Structured result of a `PagedSalcaCache.check_invariants` audit (or
+    the engine-level audit composing several of them)."""
+    violations: list = field(default_factory=list)
+    checked: dict = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def fail(self, msg: str) -> None:
+        self.violations.append(msg)
+
+    def merge(self, other: "InvariantReport", prefix: str = "") -> None:
+        for v in other.violations:
+            self.violations.append(f"{prefix}{v}" if prefix else v)
+        for k, v in other.checked.items():
+            self.checked.setdefault(k, v)
+
+    def __repr__(self) -> str:
+        state = "ok" if self.ok else f"{len(self.violations)} violation(s)"
+        body = "".join(f"\n  - {v}" for v in self.violations)
+        return f"InvariantReport({state}, checked={self.checked}){body}"
 
 
 def empty_paged_cache(num_blocks: int, block_size: int, slots: int,

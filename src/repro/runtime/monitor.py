@@ -59,12 +59,21 @@ class StepMonitor:
 
 
 class NaNGuard:
-    """Counts non-finite losses; trips after ``patience`` in a row."""
+    """Counts non-finite values; trips after ``patience`` in a row.
+
+    Two front-ends over the same policy: the scalar ``check`` guards a
+    trainer's loss (trip → restore from checkpoint), and the keyed
+    ``check_slot`` guards a serving engine's per-slot logits rows (trip →
+    quarantine that slot's request with ``stop_reason="error"`` while the
+    fused tick's other slots keep decoding). Serving uses ``patience=1``:
+    a non-finite logits row cannot yield a token, so there is nothing to
+    wait out."""
 
     def __init__(self, patience: int = 2):
         self.patience = patience
         self.streak = 0
         self.total = 0
+        self.slot_streaks: dict[int, int] = {}
 
     def check(self, loss: float) -> bool:
         """True → caller should restore from checkpoint."""
@@ -76,3 +85,18 @@ class NaNGuard:
             return self.streak >= self.patience
         self.streak = 0
         return False
+
+    def check_slot(self, slot: int, finite: bool) -> bool:
+        """Record one per-slot observation; True → quarantine the slot."""
+        if finite:
+            self.slot_streaks.pop(slot, None)
+            return False
+        n = self.slot_streaks.get(slot, 0) + 1
+        self.slot_streaks[slot] = n
+        self.total += 1
+        log.error("non-finite logits in slot %d (streak %d)", slot, n)
+        return n >= self.patience
+
+    def reset_slot(self, slot: int) -> None:
+        """Forget a slot's streak (its occupant finished or was evicted)."""
+        self.slot_streaks.pop(slot, None)

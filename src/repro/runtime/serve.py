@@ -70,6 +70,24 @@ free-pool-sized waves. Spilled blocks are unselectable
 Latency accounting separates queue wait (submit→admit), TTFT
 (submit→first token, i.e. queue wait + prefill), and decode (per tick and
 per token).
+
+Failure model (see docs/serving.md "Failure model & graceful degradation"):
+every failure path degrades instead of crashing. Requests carry an optional
+``deadline_ms`` (expiry finishes them with ``stop_reason="deadline"`` and
+full block/stash/radix cleanup, wherever they live — queued, mid-chunked-
+prefill, or resident), ``cancel(request_id)`` works on queued and resident
+requests alike, and a bounded queue (``max_queue``) sheds new submits with
+``stop_reason="rejected"`` instead of growing without bound. Failed spill
+transfers retry with capped exponential backoff; a promotion that exhausts
+its retries pins the block cold — Salca's `mapped_valid_mask` makes it
+unselectable, so decode continues with sparser attention (quality, not
+availability, degrades; `stats.degraded_ticks` counts these). A slot whose
+logits come back NaN/Inf is quarantined (`stop_reason="error"`) without
+touching the fused tick's other slots. A seeded `FaultPlan`
+(``faults=``, see `runtime.faults`) injects all of these deterministically,
+and ``audit_every`` runs the `PagedSalcaCache.check_invariants` integrity
+audit (refcounts == page-table references == host mirror, free ∩ mapped =
+∅, cursor bounds, spill-mirror consistency) as a production self-check.
 """
 
 from __future__ import annotations
@@ -88,6 +106,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import get_model
 from repro.models.blocks import DecodeCtx
+from repro.runtime.faults import FaultPlan
+from repro.runtime.monitor import NaNGuard, StepMonitor
 
 # `_slot_blocks` sentinel for a logical block whose data lives in the host
 # tier (its page-table entry is -1 and its rows sit in the numpy mirror).
@@ -101,11 +121,19 @@ class Request:
     max_new_tokens: int = 16
     stop_token: int | None = None      # finish early when sampled
     temperature: float = 0.0           # 0 = greedy; >0 = per-slot sampling
+    deadline_ms: float | None = None   # wall-clock budget measured from
+                                       # submit; expiry stops the request
+                                       # wherever it lives (queued/resident)
     submitted: float = field(default_factory=time.time)
     admitted: float | None = None      # FIRST admission's work start
     first_token_time: float | None = None
     done_time: float | None = None
-    stop_reason: str | None = None     # "length" | "stop" | "overflow"
+    # Terminal outcome. Normal: "length" | "stop". Capacity: "overflow"
+    # (paged pool contention without preempt; dense max_seq). Lifecycle:
+    # "deadline" (deadline_ms expired) | "cancelled" (cancel()) |
+    # "rejected" (bounded-queue shed at submit). Fault: "error" (slot
+    # quarantined on non-finite logits). See docs/serving.md.
+    stop_reason: str | None = None
     output: list = field(default_factory=list)
     shared_blocks: int = 0             # blocks admitted by prefix sharing
     preemptions: int = 0               # times evicted and requeued
@@ -260,6 +288,25 @@ class ServeStats:
     demotions: int = 0         # block moves device → host
     promotions: int = 0        # block moves host → device
     pcie_bytes: int = 0        # predicted transfer = block_bytes · moves
+    # Request lifecycle & fault tolerance (the robustness layer). The
+    # accounting invariant extends unchanged: `admissions` still equals
+    # `completed + preemptions` at drain — deadline/cancel/error stops of
+    # requests whose admission cycle began count in `completed`, while
+    # pure queue-side terminations (rejected at submit, shed or cancelled
+    # before any work started) never touched `admissions` and are tracked
+    # only by their own counters below.
+    deadline_stops: int = 0    # deadline expiries (queued, inflight, resident)
+    cancellations: int = 0     # cancel() calls that terminated a request
+    rejections: int = 0        # submits shed by the bounded queue (max_queue)
+    errors: int = 0            # slots quarantined on non-finite logits
+    retries: int = 0           # failed transfer/chunk attempts left to retry
+    degraded_ticks: int = 0    # ticks served degraded (stalled slot or a
+                               # cold-pinned block on an active slot)
+    faults_injected: int = 0   # FaultPlan injections that fired
+    audits: int = 0            # integrity audits run (audit_every)
+    audit_failures: int = 0    # audits that reported violations
+    straggler_ticks: int = 0   # ticks the StepMonitor EWMA flagged slow
+    tick_ewma_s: float = 0.0   # monitor's tick-time EWMA (0 = no monitor)
 
     def summary(self) -> dict:
         out = {
@@ -287,7 +334,21 @@ class ServeStats:
             "replayed_tokens": self.replayed_tokens,
             "prefill_chunks": self.prefill_chunks,
             "chunk_stalls": self.chunk_stalls,
+            "deadline_stops": self.deadline_stops,
+            "cancellations": self.cancellations,
+            "rejections": self.rejections,
+            "errors": self.errors,
+            "retries": self.retries,
+            "degraded_ticks": self.degraded_ticks,
         }
+        if self.faults_injected:
+            out["faults_injected"] = self.faults_injected
+        if self.audits:
+            out["audits"] = self.audits
+            out["audit_failures"] = self.audit_failures
+        if self.tick_ewma_s:
+            out["straggler_ticks"] = self.straggler_ticks
+            out["tick_ewma_ms"] = round(1e3 * self.tick_ewma_s, 3)
         if self.block_pool_size:
             out["block_pool_size"] = self.block_pool_size
             out["peak_blocks_in_use"] = self.peak_blocks_in_use
@@ -379,7 +440,14 @@ class ServingEngine:
                  kv_pool_dtype: str | None = None,
                  host_spill: bool = False, demote_after: int = 4,
                  spill_keep_recent: int = 2, promote_headroom: int = 1,
-                 prefill_chunk: int | None = None, preempt: bool = False):
+                 prefill_chunk: int | None = None, preempt: bool = False,
+                 max_queue: int | None = None,
+                 faults: FaultPlan | None = None,
+                 audit_every: int | None = None,
+                 spill_max_retries: int = 3, spill_backoff_base: int = 1,
+                 spill_backoff_cap: int = 8,
+                 monitor: StepMonitor | None = None,
+                 heartbeat_path: str | None = None):
         # Per-engine override of the block pool's storage precision (the
         # tiered-KV first tier). Parameter shapes don't depend on the knob,
         # so the same params serve any pool precision.
@@ -399,6 +467,49 @@ class ServingEngine:
         self.n_shards = 1           # pool shards (paged + mesh ctx only)
         self.stats = ServeStats()
         self._rng = np.random.default_rng(seed)
+        # -- fault tolerance / request lifecycle -----------------------
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if audit_every is not None and audit_every < 1:
+            raise ValueError(f"audit_every must be >= 1, got {audit_every}")
+        if spill_max_retries < 0 or spill_backoff_base < 1 \
+                or spill_backoff_cap < spill_backoff_base:
+            raise ValueError("need spill_max_retries >= 0 and "
+                             "1 <= spill_backoff_base <= spill_backoff_cap")
+        self.max_queue = max_queue
+        self._faults = faults
+        self.audit_every = audit_every
+        self.last_audit = None      # most recent InvariantReport
+        self._audited_tick = -1     # dedup: audit each tick index once
+        self.spill_max_retries = spill_max_retries
+        self.spill_backoff_base = spill_backoff_base
+        self.spill_backoff_cap = spill_backoff_cap
+        # Per-slot NaN/Inf quarantine: patience 1 — a non-finite logits
+        # row cannot yield a token, so the first hit quarantines the slot.
+        self._nan_guard = NaNGuard(patience=1)
+        self.monitor = monitor
+        if self.monitor is None and heartbeat_path is not None:
+            self.monitor = StepMonitor(heartbeat_path=heartbeat_path)
+        elif self.monitor is not None and heartbeat_path is not None \
+                and self.monitor.heartbeat_path is None:
+            self.monitor.heartbeat_path = heartbeat_path
+        # Slots whose growth was denied by an injected spurious-exhaustion
+        # or failed-demote fault: masked off for ONE tick (no decode, no
+        # cursor advance — the token stream pauses, nothing is lost) and
+        # re-armed at tick end to retry.
+        self._stalled: set[int] = set()
+        # Slots whose rows the last fused decode actually advanced — the
+        # audit may only compare host cursors against device lengths for
+        # these (the decode tick zeroes masked-off slots' lengths).
+        self._last_decoded: set[int] = set()
+        # Spill-transfer retry state, keyed (slot, logical): consecutive
+        # failures, the tick a retry unblocks at, and the pinned outcomes
+        # after retries exhaust (cold = stays spilled + masked, hot =
+        # stays resident).
+        self._xfer_attempts: dict[tuple[int, int], int] = {}
+        self._xfer_retry_at: dict[tuple[int, int], int] = {}
+        self._pinned_cold: set[tuple[int, int]] = set()
+        self._pinned_hot: set[tuple[int, int]] = set()
         self._queue: deque[Request] = deque()
         self._active: dict[int, Request] = {}       # slot -> request
         self._free: list[int] = sorted(range(slots), reverse=True)  # pop() → lowest
@@ -521,7 +632,11 @@ class ServingEngine:
                 with perf_flags(**{_fused_flag: self.fused_decode}):
                     logits, s2 = self.api.decode_step(p, s, tok, ctx, active=act)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return nxt, logits, s2
+            # Per-slot quarantine signal: one (slots,) bool riding the
+            # existing device→host sync — a poisoned slot is detected
+            # without fetching the full logits and without an extra sync.
+            finite = jnp.isfinite(logits).all(axis=-1)
+            return nxt, logits, finite, s2
 
         # One fused program per tick. jax.jit caches by shape, so the mask
         # flipping values never retraces. The pooled state is donated into
@@ -597,7 +712,12 @@ class ServingEngine:
         return self._alloc.free_ids()
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request. Returns False when the bounded queue shed it
+        (``stop_reason="rejected"``) — load shedding keeps queue wait (and
+        hence TTFT for everyone admitted) bounded instead of letting the
+        deque grow without limit under overload. Malformed requests still
+        raise: a config error is a bug, not load."""
         if len(req.prompt) + req.max_new_tokens > self.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt({len(req.prompt)}) + "
@@ -618,7 +738,140 @@ class ServingEngine:
                     f"request {req.rid}: needs {self._blocks_for(lifetime)} "
                     f"blocks over its lifetime but the pool only has "
                     f"{self.num_blocks}")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            req.done_time = time.time()
+            req.stop_reason = "rejected"
+            self.stats.rejections += 1
+            return False
         self._queue.append(req)
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by id wherever it lives: still queued (removed,
+        no admission cycle to settle), mid-chunked-prefill (the reserved
+        slot, charged blocks and device cursor are released), or resident
+        (finished through the normal decref path). Returns False when no
+        live request has that id (already finished or never submitted)."""
+        now = time.time()
+        for req in self._queue:
+            if req.rid == rid:
+                self._queue.remove(req)
+                self._terminate_queued(req, now, "cancelled")
+                self.stats.cancellations += 1
+                return True
+        if self._inflight is not None and self._inflight.req.rid == rid:
+            self._abort_inflight(now, "cancelled")
+            self.stats.cancellations += 1
+            return True
+        for slot, req in list(self._active.items()):
+            if req.rid == rid:
+                self._finish(slot, req, now, "cancelled")
+                self.stats.cancellations += 1
+                return True
+        return False
+
+    # -- deadlines & queue-side termination ----------------------------
+
+    @staticmethod
+    def _expired(req: Request, now: float) -> bool:
+        return req.deadline_ms is not None \
+            and (now - req.submitted) * 1e3 >= req.deadline_ms
+
+    def _terminate_queued(self, req: Request, now: float, reason: str) -> None:
+        """Settle a request that dies while still queued. If its admission
+        cycle already began (the prefix-sharing gate prefill can start work
+        on the queue head before blocks are available), the cycle is closed
+        in `completed` so `admissions == completed + preemptions` holds at
+        drain; a request that never started work touches no cycle counter."""
+        req.done_time = now
+        req.stop_reason = reason
+        self._drop_stash(req)
+        if req._cycle_started:
+            self.stats.completed += 1
+
+    def _abort_inflight(self, now: float, reason: str) -> None:
+        """Tear down the in-flight chunked prefill: the reserved slot, the
+        blocks its chunks charged, and the device cursor are all released;
+        the admission cycle (opened when the prefill started) closes in
+        `completed`."""
+        inf = self._inflight
+        self._inflight = None           # drop the cursor (device buffers)
+        req = inf.req
+        req.done_time = now
+        req.stop_reason = reason
+        self.stats.completed += 1
+        self._free.append(inf.slot)
+        self._free.sort(reverse=True)
+        self._release_blocks(inf.slot)
+        self._state = self._reset(self._state, jnp.int32(inf.slot))
+
+    def _shed_expired_queue(self) -> None:
+        """Drop queued requests whose deadline already passed — spending
+        prefill on a request nobody is waiting for anymore only delays the
+        live ones behind it."""
+        if not any(r.deadline_ms is not None for r in self._queue):
+            return
+        now = time.time()
+        keep: deque[Request] = deque()
+        while self._queue:
+            req = self._queue.popleft()
+            if self._expired(req, now):
+                self._terminate_queued(req, now, "deadline")
+                self.stats.deadline_stops += 1
+            else:
+                keep.append(req)
+        self._queue = keep
+
+    # -- fault-injection plumbing --------------------------------------
+
+    def _fault(self, site: str, **ctx) -> bool:
+        """Consult the engine's FaultPlan at one injection site."""
+        if self._faults is not None and self._faults.fires(site, **ctx):
+            self.stats.faults_injected += 1
+            return True
+        return False
+
+    def _alloc_blocks(self, need: int,
+                      prefer: int | None = None) -> list[int] | None:
+        """Allocator front-end with the ``alloc_exhausted`` injection site:
+        a fired fault makes this call spuriously report an empty pool —
+        callers then take the same degraded paths a genuinely dry pool
+        exercises (admission waits, chunk stalls, growth stalls the slot)."""
+        if need > 0 and self._fault("alloc_exhausted", need=need):
+            return None
+        return self._alloc.alloc(need, prefer)
+
+    def _stall(self, slot: int) -> None:
+        """Pause one active slot for the current tick: masked off, so the
+        fused decode neither reads nor writes it and its cursor holds; the
+        token stream resumes, bit-identical, once the fault clears."""
+        self._mask[slot] = False
+        self._stalled.add(slot)
+
+    def _xfer_failed(self, key: tuple[int, int], pin: str) -> None:
+        """Record one failed spill transfer: capped exponential backoff in
+        ticks (base·2^(n-1), capped), then — retries exhausted — pin the
+        block where it is: ``cold`` (stays spilled AND masked; decode
+        continues with sparser attention over the resident blocks) or
+        ``hot`` (stays device-resident; only spill capacity degrades)."""
+        self.stats.retries += 1
+        n = self._xfer_attempts.get(key, 0) + 1
+        self._xfer_attempts[key] = n
+        if n > self.spill_max_retries:
+            (self._pinned_cold if pin == "cold" else self._pinned_hot).add(key)
+            self._xfer_retry_at.pop(key, None)
+        else:
+            delay = min(self.spill_backoff_base * (2 ** (n - 1)),
+                        self.spill_backoff_cap)
+            self._xfer_retry_at[key] = self.stats.ticks + delay
+
+    def _xfer_ok(self, key: tuple[int, int]) -> None:
+        self._xfer_attempts.pop(key, None)
+        self._xfer_retry_at.pop(key, None)
+
+    def _xfer_blocked(self, key: tuple[int, int]) -> bool:
+        """True while a key is backing off (retry not due yet)."""
+        return self._xfer_retry_at.get(key, -1) > self.stats.ticks
 
     def _blocks_for(self, tokens: int) -> int:
         return max(1, -(-tokens // self.block_size))
@@ -780,20 +1033,40 @@ class ServingEngine:
                 self._spill_score.pop(key, None)
             self._hist_snap[slot] = 0
             self._cold_streak[slot] = 0
+            # Transfer retry/pin state is per-occupancy: the next request
+            # in this slot starts with a clean record.
+            for d in (self._xfer_attempts, self._xfer_retry_at):
+                for key in [k for k in d if k[0] == slot]:
+                    del d[key]
+            self._pinned_cold = {k for k in self._pinned_cold
+                                 if k[0] != slot}
+            self._pinned_hot = {k for k in self._pinned_hot if k[0] != slot}
         self._note_block_usage()
 
     # -- tiered KV memory: host spill of cold blocks -------------------
 
-    def demote_block(self, slot: int, logical: int) -> None:
+    def demote_block(self, slot: int, logical: int,
+                     _inject: bool = True) -> bool:
         """Move one mapped PRIVATE block device → host: copy its storage-
         format data rows into the numpy mirror, unmap the page-table entry
         (the block becomes unselectable via `mapped_valid_mask` — never
-        garbage-read) and return the physical id to the free list."""
+        garbage-read) and return the physical id to the free list.
+
+        Returns False when the transfer fails (``spill_transfer`` fault):
+        the block stays resident and intact, and the key backs off /
+        eventually pins hot. ``_inject=False`` bypasses the injection site
+        (wave admission — one atomic multi-wave transaction whose internal
+        demotes are not an injection point)."""
         held = self._slot_blocks[slot]
         blk = held[logical]
         assert blk >= 0 and self._refcount[blk] == 1, \
             f"demote needs a mapped private block, got (slot={slot}, " \
             f"logical={logical}) -> {blk} rc={self._refcount[max(blk, 0)]}"
+        if _inject and self._fault("spill_transfer", direction="demote",
+                                   slot=slot, logical=logical):
+            self._xfer_failed((slot, logical), pin="hot")
+            return False
+        self._xfer_ok((slot, logical))
         payload = jax.tree_util.tree_map(
             np.asarray, self._read_block(self._state, jnp.int32(blk)))
         self._spilled[(slot, logical)] = payload
@@ -810,16 +1083,25 @@ class ServingEngine:
         self.stats.demotions += 1
         self.stats.pcie_bytes += self._block_bytes
         self._note_block_usage()
+        return True
 
     def promote_block(self, slot: int, logical: int) -> bool:
         """Move one spilled block host → device: allocate a physical block,
         `jax.device_put` the mirrored rows back (bit-exact — storage format
-        both ways) and remap it. Returns False when no block is free."""
+        both ways) and remap it. Returns False when no block is free OR the
+        transfer fails (``spill_transfer`` fault) — a failed transfer backs
+        the key off and, with retries exhausted, pins it cold: the mirror
+        payload is untouched, the block stays masked, decode continues."""
         payload = self._spilled.get((slot, logical))
         assert payload is not None, f"({slot}, {logical}) is not spilled"
-        fresh = self._alloc.alloc(1)
+        if self._fault("spill_transfer", direction="promote",
+                       slot=slot, logical=logical):
+            self._xfer_failed((slot, logical), pin="cold")
+            return False
+        fresh = self._alloc_blocks(1)
         if fresh is None:
             return False
+        self._xfer_ok((slot, logical))
         blk = fresh[0]
         self._state = self._write_block(self._state, jnp.int32(blk),
                                         jax.device_put(payload))
@@ -859,6 +1141,8 @@ class ServingEngine:
                 b = held[j]
                 if b == SPILLED or self._refcount[b] != 1:
                     continue
+                if (slot, j) in self._pinned_hot or self._xfer_blocked((slot, j)):
+                    continue            # demote retries exhausted / backing off
                 out.append((-int(self._cold_streak[slot, j]), slot, j))
         out.sort()
         return out
@@ -884,6 +1168,9 @@ class ServingEngine:
         best: dict[int, tuple[float, int]] = {}
         for (slot, j), score in self._spill_score.items():
             if slot in self._active:
+                if (slot, j) in self._pinned_cold \
+                        or self._xfer_blocked((slot, j)):
+                    continue        # degraded to cold-and-masked / backing off
                 cur = best.get(slot)
                 if cur is None or (score, -j) > (cur[0], -cur[1]):
                     best[slot] = (score, j)
@@ -906,6 +1193,7 @@ class ServingEngine:
         scheduler by one budgeted chunk per call (interleaved with decode
         ticks by `run`), so a long prompt can no longer head-of-line block
         the decode stream."""
+        self._shed_expired_queue()
         if self.prefill_chunk is not None:
             self._advance_prefill()
             return
@@ -959,7 +1247,7 @@ class ServingEngine:
                     pages = None           # marks the wave path below
                     blocks = []
                 else:
-                    fresh = self._alloc.alloc(need)  # least-loaded first
+                    fresh = self._alloc_blocks(need)  # least-loaded first
                     if fresh is None:
                         break              # wait for blocks to free up
                     n_shared = len(shared_ids)
@@ -996,7 +1284,7 @@ class ServingEngine:
                     lo += w
                     if lo < need_full:     # not the tail: spill the wave
                         for j in range(lo - w, lo):
-                            self.demote_block(slot, j)
+                            self.demote_block(slot, j, _inject=False)
             elif self.paged:
                 for b in blocks:           # shared: n → n+1; fresh: 0 → 1
                     self._refcount[b] += 1
@@ -1068,6 +1356,8 @@ class ServingEngine:
         self.stats.completed += 1
         del self._active[slot]
         self._mask[slot] = False
+        self._stalled.discard(slot)
+        self._nan_guard.reset_slot(slot)
         self._free.append(slot)
         self._free.sort(reverse=True)
         if self.paged:
@@ -1110,6 +1400,8 @@ class ServingEngine:
         else:
             req = self._active.pop(slot)
         self._mask[slot] = False
+        self._stalled.discard(slot)
+        self._nan_guard.reset_slot(slot)
         self.stats.preemptions += 1
         req.preemptions += 1
         # Keep the LONGEST recorded output: a request preempted again while
@@ -1174,6 +1466,10 @@ class ServingEngine:
         request is the newest occupant, so evicting others for it would
         invert priority. The final chunk yields the first-token logits and
         activates the slot exactly like monolithic admission."""
+        if self._inflight is not None \
+                and self._expired(self._inflight.req, time.time()):
+            self.stats.deadline_stops += 1
+            self._abort_inflight(time.time(), "deadline")
         if self._inflight is None:
             if not (self._queue and self._free):
                 return
@@ -1204,12 +1500,17 @@ class ServingEngine:
 
         inf = self._inflight
         req, slot = inf.req, inf.slot
+        if self._fault("prefill_chunk", rid=req.rid, consumed=inf.consumed):
+            # The chunk step failed before executing: nothing was charged
+            # or written, so the next scheduler pass retries it exactly.
+            self.stats.retries += 1
+            return
         plen = len(req.prompt)
         c = min(self.prefill_chunk, plen - inf.consumed)
         held = self._slot_blocks[slot]
         span = self._blocks_for(inf.consumed + c)   # blocks covered after
         fresh_needed = max(span - len(held), 0)     # held ⊇ shared prefix
-        fresh = self._alloc.alloc(fresh_needed) if fresh_needed else []
+        fresh = self._alloc_blocks(fresh_needed) if fresh_needed else []
         if fresh is None:
             self.stats.chunk_stalls += 1            # pool dry: try next tick
             return
@@ -1273,10 +1574,14 @@ class ServingEngine:
                 if pos < self.max_seq and not self._alloc.total_free \
                         and self.host_spill:
                     # Growth pressure under the host tier: demote the
-                    # coldest eligible block instead of overflowing.
+                    # coldest eligible block instead of overflowing. A
+                    # FAILED demote (injected spill_transfer fault) is
+                    # transient — stall the slot one tick and retry,
+                    # rather than overflowing a recoverable request.
                     cand = self._demote_candidates()
-                    if cand:
-                        self.demote_block(cand[0][1], cand[0][2])
+                    if cand and not self.demote_block(cand[0][1], cand[0][2]):
+                        self._stall(slot)
+                        continue
                 if pos < self.max_seq and not self._alloc.total_free \
                         and self.preempt:
                     # Growth pressure under preemption: evict the newest
@@ -1293,7 +1598,16 @@ class ServingEngine:
                     # writes local (falls back to the least-loaded shard).
                     near = held[logical] if logical < len(held) else held[-1]
                     prefer = self._alloc.shard_of(near) if near >= 0 else None
-                    blk = self._alloc.alloc(1, prefer=prefer)[0]
+                    got = self._alloc_blocks(1, prefer=prefer)
+                    if got is None:
+                        # Spurious exhaustion (alloc_exhausted fault) with
+                        # a non-empty free list: the slot cannot land its
+                        # next KV write, so it pauses for one tick — not
+                        # an overflow, nothing is lost, the stream resumes
+                        # bit-identically when the allocator recovers.
+                        self._stall(slot)
+                        continue
+                    blk = got[0]
                     self._refcount[blk] += 1       # 0 → 1
                     if logical == len(held):       # growth: map a fresh block
                         held.append(blk)
@@ -1325,39 +1639,186 @@ class ServingEngine:
 
     def _tick(self) -> None:
         """ONE fused decode call advancing every active slot."""
+        now = time.time()
+        for slot, req in list(self._active.items()):
+            if self._active.get(slot) is req and self._expired(req, now):
+                self.stats.deadline_stops += 1
+                self._finish(slot, req, now, "deadline")
         self._promote_resurrected()
         self._grow_or_overflow()
         if not self._active:
             return
-        self.stats.peak_active_slots = max(self.stats.peak_active_slots,
-                                           int(self._mask.sum()))
-        t0 = time.time()
-        nxt, logits, self._state = self._decode(
-            self.params, self._state, jnp.asarray(self._tokens),
-            jnp.asarray(self._mask))
-        nxt_host = np.asarray(nxt)                      # blocks until ready
-        self.stats.decode_s += time.time() - t0
-        self.stats.decode_calls += 1
-        self.stats.ticks += 1
-        self.stats.decode_steps += int(self._mask.sum())
-        logits_host = None                              # fetched only if sampling
-        now = time.time()
-        for slot in list(self._active):
-            req = self._active[slot]
-            if self.paged:
-                self._slot_pos[slot] += 1
-            if self.greedy or req.temperature <= 0.0:
-                tok = self._next_token(req, None, greedy_tok=int(nxt_host[slot]))
-            else:
-                if logits_host is None:
-                    logits_host = np.asarray(logits)
-                tok = self._next_token(req, logits_host[slot])
-            self._tokens[slot] = tok
-            if req.stop_token is not None and tok == req.stop_token:
-                self._finish(slot, req, now, "stop")
-            elif len(req.output) >= req.max_new_tokens:
-                self._finish(slot, req, now, "length")
+        if self._mask.any():        # some slot may decode (not all stalled)
+            self.stats.peak_active_slots = max(self.stats.peak_active_slots,
+                                               int(self._mask.sum()))
+            self._last_decoded = set(np.flatnonzero(self._mask).tolist())
+            t0 = time.time()
+            nxt, logits, finite, self._state = self._decode(
+                self.params, self._state, jnp.asarray(self._tokens),
+                jnp.asarray(self._mask))
+            nxt_host = np.asarray(nxt)                  # blocks until ready
+            finite_host = np.array(finite)              # writable host copy
+            tick_s = time.time() - t0
+            self.stats.decode_s += tick_s
+            self.stats.decode_calls += 1
+            self.stats.ticks += 1
+            self.stats.decode_steps += int(self._mask.sum())
+            if self.monitor is not None:
+                rec = self.monitor.record(self.stats.ticks, tick_s)
+                self.stats.tick_ewma_s = float(rec["ewma"] or 0.0)
+                if rec["flagged"]:
+                    self.stats.straggler_ticks += 1
+            # decode_logits injection: poison selected slots' rows after
+            # the fact — the detection below is the same path a real
+            # non-finite matmul result takes.
+            if self._faults is not None:
+                for slot, req in list(self._active.items()):
+                    if slot not in self._stalled and self._fault(
+                            "decode_logits", rid=req.rid, slot=slot,
+                            tick=self.stats.ticks):
+                        finite_host[slot] = False
+            logits_host = None                          # fetched only if sampling
+            now = time.time()
+            for slot in list(self._active):
+                req = self._active[slot]
+                if slot in self._stalled:
+                    continue        # paused this tick: nothing advanced
+                if self.paged:
+                    self._slot_pos[slot] += 1
+                if not bool(finite_host[slot]):
+                    # Per-slot quarantine: this slot's logits are NaN/Inf.
+                    # Its request ends with a truthful "error" stop; the
+                    # other slots' rows are independent and proceed
+                    # untouched — one poisoned slot never contaminates
+                    # the fused tick.
+                    if self._nan_guard.check_slot(slot, False):
+                        self.stats.errors += 1
+                        self._finish(slot, req, now, "error")
+                        continue
+                if self.greedy or req.temperature <= 0.0:
+                    tok = self._next_token(req, None,
+                                           greedy_tok=int(nxt_host[slot]))
+                else:
+                    if logits_host is None:
+                        logits_host = np.asarray(logits)
+                    tok = self._next_token(req, logits_host[slot])
+                self._tokens[slot] = tok
+                if req.stop_token is not None and tok == req.stop_token:
+                    self._finish(slot, req, now, "stop")
+                elif len(req.output) >= req.max_new_tokens:
+                    self._finish(slot, req, now, "length")
+        # Degraded-mode accounting: a tick that ran with a stalled slot or
+        # with a cold-pinned block on an active slot served degraded —
+        # available, but paused or at reduced attention quality.
+        if self._stalled or any(k[0] in self._active
+                                for k in self._pinned_cold):
+            self.stats.degraded_ticks += 1
+        # Re-arm stalled slots: the stall lasts exactly one tick, then the
+        # growth path retries (the fault may have cleared or backed off).
+        for slot in self._stalled:
+            if slot in self._active:
+                self._mask[slot] = True
+        self._stalled.clear()
         self._spill_policy()
+        if self.audit_every and self.stats.ticks != self._audited_tick \
+                and self.stats.ticks % self.audit_every == 0:
+            self._audited_tick = self.stats.ticks
+            self.stats.audits += 1
+            rep = self.check_invariants()
+            self.last_audit = rep
+            if not rep.ok:
+                self.stats.audit_failures += 1
+                raise RuntimeError(
+                    f"integrity audit failed at tick {self.stats.ticks}: "
+                    f"{rep}")
+
+    # -- runtime integrity audit ---------------------------------------
+
+    def check_invariants(self):
+        """Audit the engine's bookkeeping against the device state: every
+        paged layer's pool passes `PagedSalcaCache.check_invariants` (device
+        refcount == page-table references == the engine's numpy mirror,
+        free ∩ mapped = ∅, no leaked blocks, cursor bounds), the host-side
+        `_slot_blocks` rows agree entry-for-entry with the device page
+        table, `_slot_pos` cursors agree with the device lengths, and —
+        under host spill — the SPILLED sentinels and the numpy mirror's
+        payload keys describe exactly the same set of cold blocks.
+
+        Returns an `InvariantReport`; `audit_every` runs this after every
+        N-th tick and raises on violations (an unclean audit is a bug, not
+        load — fail loudly before corruption spreads)."""
+        from repro.core.cache import InvariantReport, PagedSalcaCache
+        rep = InvariantReport()
+        if not self.paged:
+            rep.checked["paged"] = 0    # dense engines: nothing to audit
+            return rep
+        if self._inflight is not None and self._inflight.consumed == 0 \
+                and self._inflight.n_shared > 0:
+            # Transient pin window: the shared prefix is increfed host-side
+            # at inflight creation but the device mirrors the charge on the
+            # FIRST chunk — which hasn't run yet (fault/stall). Skip rather
+            # than report the expected one-pass divergence.
+            rep.checked["skipped"] = "inflight shared-pin window"
+            return rep
+        free = self._alloc.free_ids()
+        # Allocator structure: every free id inside its owner shard's range.
+        for s in range(self.n_shards):
+            for b in self._alloc._free[s]:
+                if self._alloc.shard_of(b) != s:
+                    rep.fail(f"free id {b} filed under shard {s}, owned by "
+                             f"{self._alloc.shard_of(b)}")
+        pools = [st for st in (list(self._state.period_states)
+                               + list(self._state.tail_states))
+                 if isinstance(st, PagedSalcaCache)]
+        rep.checked["pools"] = len(pools)
+        for i, pool in enumerate(pools):
+            rep.merge(pool.check_invariants(
+                free_blocks=free, host_refcount=self._refcount,
+                allow_holes=self.host_spill), prefix=f"pool[{i}]: ")
+        if not pools:
+            rep.fail("paged engine with no PagedSalcaCache substates")
+            return rep
+        # Host ↔ device page-table agreement, on layer 0 of the first pool
+        # (cross-layer/cross-pool lockstep is checked above).
+        s, mb = self.slots, self.max_blocks
+        pt = np.asarray(pools[0].page_table).reshape(-1, s, mb)[0]
+        ln = np.asarray(pools[0].length).reshape(-1, s)[0]
+        for slot in range(s):
+            held = self._slot_blocks.get(slot)
+            if held is None:
+                if (pt[slot] >= 0).any():
+                    rep.fail(f"slot {slot} holds no blocks host-side but "
+                             f"has mapped page-table entries")
+                continue
+            for j in range(mb):
+                want = -1 if j >= len(held) or held[j] == SPILLED else held[j]
+                if pt[slot, j] != want:
+                    rep.fail(f"slot {slot} logical {j}: host says "
+                             f"{want}, device page table says "
+                             f"{int(pt[slot, j])}")
+                    break
+            # Cursor agreement, only where the device length is
+            # authoritative: the fused decode writes length = pos+1 for
+            # slots it advanced and ZERO for masked-off slots, so only the
+            # last tick's decoded-and-still-active slots can be compared.
+            pos = self._slot_pos.get(slot)
+            if pos is not None and slot in self._active \
+                    and slot in self._last_decoded \
+                    and int(ln[slot]) != pos:
+                rep.fail(f"slot {slot}: host cursor {pos} != device "
+                         f"length {int(ln[slot])}")
+            if pos is not None and not 0 <= pos <= self.max_seq:
+                rep.fail(f"slot {slot}: host cursor {pos} out of "
+                         f"[0, {self.max_seq}]")
+        if self.host_spill:
+            cold = {(slot, j)
+                    for slot, held in self._slot_blocks.items()
+                    for j, b in enumerate(held) if b == SPILLED}
+            if cold != set(self._spilled):
+                rep.fail(f"spill-mirror mismatch: SPILLED sentinels "
+                         f"{sorted(cold)} vs mirror payloads "
+                         f"{sorted(self._spilled)}")
+        return rep
 
     def run(self, max_ticks: int = 10_000) -> ServeStats:
         ticks = 0

@@ -231,12 +231,16 @@ def decode_sharding_ctx(cfg: ModelConfig, plan: MeshPlan, bdp,
 
 def _decode_step_builder(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
                          masked: bool, paged: bool = False,
-                         block_size: int = 32, num_blocks: int | None = None):
+                         block_size: int = 32, num_blocks: int | None = None,
+                         nan_flags: bool = False):
     """Shared plumbing for the plain and active-masked decode steps: same
     sharding contexts, state specs, and jit wiring — `masked` only threads
-    the (B,) active-slot mask through as a fourth argument, and `paged`
-    builds the state shapes/specs for a block-sharded paged pool (physical
-    block dim over the decode sequence axes) instead of dense slot stripes."""
+    the (B,) active-slot mask through as a fourth argument, `paged` builds
+    the state shapes/specs for a block-sharded paged pool (physical block
+    dim over the decode sequence axes) instead of dense slot stripes, and
+    `nan_flags` appends a per-slot logits-finite bool vector to the outputs
+    (the serving engine's NaN/Inf quarantine signal — computed inside the
+    step so detection rides the existing device→host sync)."""
     api = get_model(cfg)
     bdp, seq_axes = plan.decode_axes(shape.global_batch)
     dctx = DecodeCtx(axis=seq_axes, mesh=plan.mesh, batch_axes=bdp,
@@ -251,6 +255,9 @@ def _decode_step_builder(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
             logits, new_state = api.decode_step(params, state, token, dctx,
                                                 active=active)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if nan_flags:
+            finite = jnp.isfinite(logits).all(axis=-1)
+            return next_token, logits, finite, new_state
         return next_token, logits, new_state
 
     def shapes():
@@ -289,9 +296,13 @@ def make_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig):
 
 def make_serve_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
                            paged: bool = False, block_size: int = 32,
-                           num_blocks: int | None = None):
+                           num_blocks: int | None = None,
+                           nan_flags: bool = False):
     """Slot-pooled serving tick:
-    serve_step(params, state, token, active) → (next_token, logits, state).
+    serve_step(params, state, token, active) → (next_token, logits, state)
+    — or, with ``nan_flags=True``, → (next_token, logits, finite, state)
+    where ``finite`` is the (B,) per-slot logits-finite vector the serving
+    engine's NaN/Inf quarantine consumes.
 
     Identical sharding layout to `make_decode_step`, plus an (B,) bool
     active-slot mask: the batch dimension is a pool of request slots and one
@@ -307,7 +318,8 @@ def make_serve_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,
     merge). ``num_blocks`` defaults to the dense-equivalent budget
     (slots × max_seq tokens); pass less — that is the point of paging."""
     return _decode_step_builder(cfg, plan, shape, masked=True, paged=paged,
-                                block_size=block_size, num_blocks=num_blocks)
+                                block_size=block_size, num_blocks=num_blocks,
+                                nan_flags=nan_flags)
 
 
 def make_prefill_chunk_step(cfg: ModelConfig, plan: MeshPlan, shape: ShapeConfig,

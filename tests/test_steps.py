@@ -78,6 +78,28 @@ def test_serve_decode_step_masked_slots():
     assert int(state2.pos[0]) == 17 and int(state2.pos[1]) == 16
 
 
+def test_serve_decode_step_nan_flags():
+    """With nan_flags=True the serving tick appends the per-slot
+    logits-finite vector (the NaN-quarantine signal) to its outputs; the
+    default 3-tuple contract is unchanged (asserted above)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    shape = ShapeConfig("s", seq_len=128, global_batch=2, kind="decode")
+    plan = _plan()
+    _, jitted, shapes, _ = make_serve_decode_step(cfg, plan, shape,
+                                                  nan_flags=True)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    state = api.init_state(shape.global_batch, shape.seq_len, prefill_len=16)
+    tok = jnp.zeros((2,), jnp.int32)
+    active = jnp.asarray([True, True])
+    step = jitted()
+    nxt, logits, finite, state2 = step(params, state, tok, active)
+    assert finite.shape == (2,) and finite.dtype == jnp.bool_
+    assert bool(np.asarray(finite).all())       # healthy params → all finite
+    assert np.array_equal(np.asarray(finite),
+                          np.isfinite(np.asarray(logits)).all(axis=-1))
+
+
 def test_flags_baseline_opt_equivalent_selection(rng):
     """Baseline vs optimized flags: identical selections & close outputs."""
     from repro import flags
