@@ -81,6 +81,7 @@ def run(seed: int = 0, T: int = 2048, s_f: float = 0.5) -> list[str]:
         out.append(f"table7_quant,q_{bits}_sym,{_overlap_topfrac(baseline, s):.3f}")
 
     out.extend(_kv_pool_rows(seed, T))
+    out.extend(_calib_rows(seed, T))
     return out
 
 
@@ -140,6 +141,43 @@ def _kv_pool_rows(seed: int, T: int, steps: int = 8) -> list[str]:
                                for a, b in zip(ref_logs, logs)]))
         drift = float(max(np.abs(a - b).max() for a, b in zip(ref_logs, logs)))
         rows.append(f"kv_pool,{dt},{agree:.3f},{drift:.4f}")
+    return rows
+
+
+def _calib_rows(seed: int, T: int) -> list[str]:
+    """Calibrated-vs-weight-derived static heavy-channel agreement: per
+    attention layer, the top-r overlap between the weight-derived set
+    (Σ|W_k| mass — the default) and the activation-calibrated set
+    (Σ|K| over a calibration batch, installed by ``api.calibrate``). High
+    overlap means the weight proxy already captures the deployed salience;
+    the residual disagreement is what calibration buys."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              salca_static_channels=True)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    t = max(32, min(128, T // 2))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, t)), jnp.int32)
+    calib = api.calibrate(params, tokens)
+    base = api.static_heavy(params, t)
+    cal = api.static_heavy(calib, t)
+    rows = ["calib_static,layer,top_r_overlap"]
+    ovs = []
+    for li, (a, b) in enumerate(zip(base, cal)):
+        a = np.asarray(a).reshape(-1, np.asarray(a).shape[-1])
+        b = np.asarray(b).reshape(-1, np.asarray(b).shape[-1])
+        ov = float(np.mean([len(set(x.tolist()) & set(y.tolist())) / len(x)
+                            for x, y in zip(a, b)]))
+        ovs.append(ov)
+        rows.append(f"calib_static,{li},{ov:.3f}")
+    rows.append(f"calib_static,mean,{float(np.mean(ovs)):.3f}")
     return rows
 
 

@@ -12,9 +12,9 @@ from repro.core.selection import (
 from repro.core.cache import (
     SalcaCache, empty_cache, prefill_cache, append_token, append_token_masked,
     cache_bytes, write_prefill_into_slot, reset_slot,
-    PagedSalcaCache, empty_paged_cache, prefill_into_pages, append_token_paged,
-    map_block, free_pages, gather_selected_paged, paged_cache_bytes,
-    share_blocks, cow_block, local_block_range)
+    PagedSalcaCache, empty_paged_cache, prefill_into_pages, adopt_pages,
+    append_token_paged, map_block, free_pages, gather_selected_paged,
+    paged_cache_bytes, share_blocks, cow_block, local_block_range)
 from repro.core.attention import (
     salca_decode_attention,
     salca_decode_attention_paged,
@@ -50,7 +50,7 @@ from repro.core import conflict_sim
 __all__ = [
     "SalcaParams", "SalcaCache", "empty_cache", "prefill_cache", "append_token",
     "append_token_masked", "cache_bytes", "write_prefill_into_slot", "reset_slot",
-    "PagedSalcaCache", "empty_paged_cache", "prefill_into_pages",
+    "PagedSalcaCache", "empty_paged_cache", "prefill_into_pages", "adopt_pages",
     "append_token_paged", "map_block", "free_pages", "gather_selected_paged",
     "paged_cache_bytes", "share_blocks", "cow_block", "local_block_range",
     "salca_select", "select_sparse_pattern", "select_sparse_pattern_blocked",

@@ -338,7 +338,8 @@ class PagedSalcaCache(NamedTuple):
         return jnp.where(self.page_table >= 0, self.page_table, 0)
 
     def check_invariants(self, free_blocks=None, host_refcount=None,
-                         allow_holes: bool = False) -> "InvariantReport":
+                         allow_holes: bool = False,
+                         cache_pinned=None) -> "InvariantReport":
         """Runtime integrity audit of this pool's bookkeeping.
 
         The invariants the hypothesis batteries check offline become a
@@ -355,6 +356,11 @@ class PagedSalcaCache(NamedTuple):
           free ∩ mapped = ∅ — and covers exactly the unreferenced blocks.
         * ``host_refcount`` (the engine's numpy mirror), when given,
           matches the device refcount bit-for-bit.
+        * ``cache_pinned`` (the engine's persistent prefix cache), when
+          given, names blocks retained by the ENGINE after their last
+          resident owner released: each must be fully unreferenced
+          (derived refcount 0), off the free list, and is excluded from
+          the leak check — a pin IS its accounting.
         * per-slot mapped entries are contiguous from logical 0 with no
           holes below the cursor, unless ``allow_holes`` (host spill
           legitimately unmaps cold blocks below the cursor).
@@ -416,6 +422,24 @@ class PagedSalcaCache(NamedTuple):
                 rep.fail(f"host refcount mirror diverges from device at "
                          f"blocks {list(bad)[:8]}")
 
+        pinned_mask = np.zeros((p,), bool)
+        if cache_pinned is not None:
+            pins = list(cache_pinned)
+            rep.checked["cache_pinned"] = len(pins)
+            if len(set(pins)) != len(pins):
+                rep.fail("duplicate ids in the cache-pin set")
+            pa = np.asarray(pins, dtype=np.int64) if pins else \
+                np.zeros((0,), np.int64)
+            if pa.size and ((pa < 0) | (pa >= p)).any():
+                rep.fail("cache-pinned id outside the pool")
+                pa = pa[(pa >= 0) & (pa < p)]
+            pinned_mask[pa] = True
+            clash = pinned_mask & (derived > 0)
+            if clash.any():
+                rep.fail(f"cache-pinned ∩ mapped ≠ ∅: blocks "
+                         f"{np.where(clash)[0].tolist()[:8]} (a pin holds "
+                         f"zero page-table references by definition)")
+
         if free_blocks is not None:
             free = list(free_blocks)
             if len(set(free)) != len(free):
@@ -431,9 +455,14 @@ class PagedSalcaCache(NamedTuple):
                 if clash.any():
                     rep.fail(f"free ∩ mapped ≠ ∅: blocks "
                              f"{np.where(clash)[0].tolist()[:8]}")
-                orphan = ~free_mask & (derived == 0)
+                clash = free_mask & pinned_mask
+                if clash.any():
+                    rep.fail(f"cache-pinned ∩ free ≠ ∅: blocks "
+                             f"{np.where(clash)[0].tolist()[:8]}")
+                orphan = ~free_mask & ~pinned_mask & (derived == 0)
                 if orphan.any():
-                    rep.fail(f"leaked blocks (unreferenced, not free): "
+                    rep.fail(f"leaked blocks (unreferenced, not free, not "
+                             f"cache-pinned): "
                              f"{np.where(orphan)[0].tolist()[:8]}")
 
         if not allow_holes:
@@ -631,6 +660,28 @@ def prefill_into_pages(pool: PagedSalcaCache, src: SalcaCache, slot,
         feat_zero=upd(pool.feat_zero, to_blocks(src.feat_zero)),
         heavy_idx=pool.heavy_idx.at[slot].set(src.heavy_idx[0]),
         length=pool.length.at[slot].set(src.length[0]),
+        page_table=pool.page_table.at[slot].set(pages.astype(jnp.int32)),
+        refcount=_refcount_add(pool.refcount, pages, +1),
+        sel_hist=pool.sel_hist.at[slot].set(0),
+    )
+
+
+def adopt_pages(pool: PagedSalcaCache, slot, pages: jax.Array, length,
+                heavy_idx: jax.Array) -> PagedSalcaCache:
+    """Map an ALREADY-WRITTEN prefix into `slot` without touching data rows.
+
+    The zero-prefill warm path of the persistent prefix cache: every block
+    named by `pages` still holds the prompt's rows (written by the original
+    cold prefill and retained under the engine's cache pin), so admission
+    only needs the metadata side of `prefill_into_pages` — install the page
+    table row, bump refcounts, set the cursor to the prompt length and the
+    slot's heavy-channel set to the static set (1, KV, R) the retained rows
+    were encoded against. `slot`, `pages` and `length` may be traced, so the
+    engine compiles this once. The slot must be unmapped (fresh or freed)
+    before this call, exactly like `prefill_into_pages`."""
+    return pool._replace(
+        heavy_idx=pool.heavy_idx.at[slot].set(heavy_idx[0]),
+        length=pool.length.at[slot].set(jnp.asarray(length, jnp.int32)),
         page_table=pool.page_table.at[slot].set(pages.astype(jnp.int32)),
         refcount=_refcount_add(pool.refcount, pages, +1),
         sel_hist=pool.sel_hist.at[slot].set(0),

@@ -348,6 +348,19 @@ def max_context_tokens(hbm_bytes: float, d: int, kv_heads: int, layers: int,
     return int(hbm_bytes // per_block) * block_size
 
 
+def cached_prefill_bytes_avoided(hit_blocks: int, *, d: int, kv_heads: int,
+                                 block_size: int, layers: int,
+                                 s_f: float = 0.5,
+                                 kv_pool_dtype: str = "int8") -> float:
+    """HBM write traffic a persistent prefix cache saved: every cross-request
+    cache-hit block is adopted by reference instead of being re-prefilled,
+    skipping the K/V quantize + feature-stream write for that block across
+    all `layers`. (Compute savings are strictly larger — this counts only
+    the memory-side term the rest of this model is denominated in.)"""
+    return hit_blocks * layers * pool_block_bytes(d, kv_heads, block_size,
+                                                  s_f, kv_pool_dtype)
+
+
 @dataclass(frozen=True)
 class SpillTraffic:
     """Predicted PCIe cost of a host-spill run (demote + promote moves)."""

@@ -187,13 +187,21 @@ def static_heavy_idx(attn_params: dict, cfg: ModelConfig, sp: SalcaParams,
                      batch: int) -> jax.Array | None:
     """Request-independent heavy-channel set (cfg.salca_static_channels):
     per-kv-head top-r channels by key-projection weight mass Σ_d |W_k[d,·,j]|
-    — the Loki-style offline selection. Returns (B, KV, R) broadcast over
-    the batch, or None to keep the paper's per-input identification. A
-    static set is what makes prefix-shared feature blocks valid across
-    requests whose prompts (and hence per-input sets) diverge."""
+    — the Loki-style offline selection. When the layer carries a
+    ``calib_salience`` leaf (installed by ``lm_calibrate_static_heavy`` from
+    K-activation statistics over a sample batch), that salience replaces the
+    weight-derived mass; the weight-derived path stays the default. Returns
+    (B, KV, R) broadcast over the batch, or None to keep the paper's
+    per-input identification. A static set is what makes prefix-shared
+    feature blocks valid across requests whose prompts (and hence per-input
+    sets) diverge."""
     if not cfg.salca_static_channels:
         return None
-    sal = jnp.sum(jnp.abs(attn_params["wk"].astype(jnp.float32)), axis=0)
+    sal = attn_params.get("calib_salience")
+    if sal is None:
+        sal = jnp.sum(jnp.abs(attn_params["wk"].astype(jnp.float32)), axis=0)
+    else:
+        sal = sal.astype(jnp.float32)
     _, idx = jax.lax.top_k(sal, sp.r(cfg.resolved_head_dim))    # (KV, R)
     idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
     return jnp.broadcast_to(idx[None], (batch,) + idx.shape)

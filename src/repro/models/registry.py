@@ -66,6 +66,14 @@ class ModelAPI(NamedTuple):
     #   () -> str | None
     static_heavy: Callable[..., Any] | None = None
     #   (params, max_seq) -> tuple of per-layer heavy sets, or None
+    # Persistent prefix cache: install an already-written (cache-pinned)
+    # prefix into a slot by reference — metadata only, zero prefill — and
+    # derive the static heavy-channel sets from activation statistics over
+    # a calibration batch.
+    adopt_pages: Callable[..., Any] | None = None
+    #   (params, pool_state, slot, pages, length) -> pool_state
+    calibrate: Callable[..., Any] | None = None
+    #   (params, tokens) -> params with calib_salience leaves installed
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -137,6 +145,13 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
     def static_heavy(params, max_seq):
         return transformer.lm_static_heavy(params, cfg, max_seq)
 
+    def adopt_pages(params, pool, slot, pages, length):
+        return transformer.lm_adopt_pages(params, cfg, pool, slot, pages,
+                                          length)
+
+    def calibrate(params, tokens):
+        return transformer.lm_calibrate_static_heavy(params, cfg, tokens)
+
     return ModelAPI(init, loss, prefill, decode_step, init_state,
                     transformer.lm_write_into_slot, transformer.lm_reset_slot,
                     init_paged_state=init_paged_state,
@@ -150,7 +165,9 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
                     prefill_begin=prefill_begin,
                     prefill_chunk=prefill_chunk,
                     prefill_chunk_unsupported=prefill_chunk_unsupported,
-                    static_heavy=static_heavy)
+                    static_heavy=static_heavy,
+                    adopt_pages=adopt_pages,
+                    calibrate=calibrate)
 
 
 __all__ = ["ModelAPI", "get_model", "DecodeCtx"]

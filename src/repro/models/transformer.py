@@ -299,6 +299,93 @@ def lm_static_heavy(params: dict, cfg: ModelConfig, max_seq: int):
     return tuple(parts)
 
 
+def lm_adopt_pages(params: dict, cfg: ModelConfig, pool: LMState, slot,
+                   pages: jax.Array, length) -> LMState:
+    """Zero-prefill warm admission: map an ALREADY-WRITTEN (cache-pinned)
+    prefix into row `slot` of every paged layer without touching data rows.
+
+    The metadata-only counterpart of `lm_write_into_slot`: per-layer page
+    table row, refcounts, cursor, and the slot's heavy-channel set — the
+    static set the retained rows were encoded against, which is why adoption
+    requires `cfg.salca_static_channels` (each layer's set differs, so the
+    per-layer sets are recomputed here rather than mapped uniformly).
+    `pages` (max_blocks,) int32 must cover exactly the prompt's blocks
+    (-1 beyond); `slot`, `pages` and `length` may be traced."""
+    if not cfg.salca_static_channels:
+        raise ValueError("adopt_pages requires cfg.salca_static_channels: "
+                         "retained rows were encoded against the static "
+                         "heavy-channel set")
+    from repro.core.cache import adopt_pages
+    pattern, n_periods, tail = pattern_layout(cfg)
+    max_seq = None
+    for st in list(pool.period_states) + list(pool.tail_states):
+        if isinstance(st, B.PagedSalcaCache):
+            max_seq = int(st.max_seq)
+            break
+    if max_seq is None:
+        raise ValueError("adopt_pages requires a paged pool state")
+    sp = B.salca_params_for(cfg, max_seq)
+    ln = jnp.asarray(length, jnp.int32)
+    periods = tuple(
+        jax.vmap(lambda st, p: adopt_pages(
+            st, slot, pages, ln, B.static_heavy_idx(p["attn"], cfg, sp, 1)
+        ))(pp, params["periods"][i])
+        if isinstance(pp, B.PagedSalcaCache) else pp
+        for i, pp in enumerate(pool.period_states))
+    tails = tuple(
+        adopt_pages(st, slot, pages, ln,
+                    B.static_heavy_idx(params["tail"][i]["attn"], cfg, sp, 1))
+        if isinstance(st, B.PagedSalcaCache) else st
+        for i, st in enumerate(pool.tail_states))
+    return LMState(periods, tails, pool.pos.at[slot].set(ln))
+
+
+def lm_calibrate_static_heavy(params: dict, cfg: ModelConfig,
+                              tokens: jax.Array) -> dict:
+    """Calibration-based static heavy-channel selection: run a prefill over
+    a sample batch, accumulate per-layer K-activation channel salience
+    Σ_{b,t} |K[b,t,·,·]| from the caches (dequantized, valid rows only), and
+    install it as a ``calib_salience`` leaf next to each attention layer's
+    weights. `blocks.static_heavy_idx` prefers that leaf over the
+    weight-derived Σ|W_k| mass, so hit rates track the deployed prompt
+    distribution instead of the weights alone. Returns a NEW params tree;
+    the input params (and the weight-derived default) are untouched.
+
+    `tokens` (B, T) is the calibration batch — a few representative prompts
+    suffice; salience is r-robust because top-r is taken at use time."""
+    pattern, n_periods, tail = pattern_layout(cfg)
+    t = int(tokens.shape[1])
+    _, state = lm_prefill(params, cfg, tokens, max_seq=t)
+
+    def sal_of(st):
+        # (B, S, KV, HD) int8 codes × (B, S, KV) per-token scales → |K| mass
+        # over valid rows, summed over batch and tokens → (KV, HD) f32.
+        k = st.k_codes.astype(jnp.float32) * st.k_scale[..., None]
+        valid = (jnp.arange(k.shape[1])[None, :]
+                 < st.length[:, None]).astype(jnp.float32)
+        return jnp.sum(jnp.abs(k) * valid[..., None, None], axis=(0, 1))
+
+    new = dict(params)
+    new_periods = []
+    for i, kind in enumerate(pattern):
+        pp = params["periods"][i]
+        st = state.period_states[i] if i < len(state.period_states) else None
+        if isinstance(st, B.SalcaCache):
+            sal = jax.vmap(sal_of)(st)          # (n_periods, KV, HD)
+            pp = {**pp, "attn": {**pp["attn"], "calib_salience": sal}}
+        new_periods.append(pp)
+    new["periods"] = tuple(new_periods)
+    new_tail = []
+    for i, kind in enumerate(tail):
+        tp = params["tail"][i]
+        st = state.tail_states[i]
+        if isinstance(st, B.SalcaCache):
+            tp = {**tp, "attn": {**tp["attn"], "calib_salience": sal_of(st)}}
+        new_tail.append(tp)
+    new["tail"] = tuple(new_tail)
+    return new
+
+
 def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int,
                   prefill_len: int | jax.Array = 0) -> LMState:
     """Empty (or cursor-advanced) decode state, used for dry-run specs."""

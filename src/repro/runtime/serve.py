@@ -37,6 +37,23 @@ encoded against that set, so aliasing would corrupt selection) — the
 request falls back to private blocks, keeping outputs bit-identical to an
 unshared run in every case.
 
+The persistent prefix cache (``prefix_cache=True``) makes the radix map a
+real cross-request cache: when a prefix block's last resident owner frees
+it, the engine keeps it mapped under a host-side cache pin (refcount stays
+0; the allocator just never gets the id back) instead of returning it to
+the free list, so a later request with the same prefix admits by reference
+with zero prefill for the shared span — a fully-cached prompt whose
+first-token logits row is retained adopts its blocks via a metadata-only
+``adopt_pages`` call and TTFT collapses to the divergent tail. Eviction is
+LRU-by-last-hit under allocator pressure, deepest blocks first on ties so a
+radix chain never loses an ancestor before its descendants; a cache-pinned
+block is the cheapest thing to reclaim, so admission, growth and CoW drain
+the cold end of the cache before host-spill demotion or preemption ever
+fires. With ``host_spill`` the pinned blocks demote to a host cold tier
+under pressure instead of being evicted outright, promoting back on the
+next radix hit. Greedy outputs stay bit-identical to a cold-cache engine on
+every hit: the retained bytes are exactly what a cold prefill would write.
+
 Sharded page pools (paged mode with a mesh ``ctx``): the physical block
 pool splits across the decode mesh axes — each device owns
 ``num_blocks / n_shards`` blocks, a decode tick runs shard-locally around
@@ -112,6 +129,11 @@ from repro.runtime.monitor import NaNGuard, StepMonitor
 # `_slot_blocks` sentinel for a logical block whose data lives in the host
 # tier (its page-table entry is -1 and its rows sit in the numpy mirror).
 SPILLED = -1
+
+# `_prefix_nodes` sentinel for a persistent-cache entry whose rows were
+# demoted to the host cold tier (`_cold_cache`) under HBM pressure: the
+# radix key stays matchable and promotes back to a fresh block on a hit.
+CACHE_COLD = -2
 
 
 @dataclass
@@ -276,10 +298,20 @@ class ServeStats:
     # Sharded-pool bookkeeping (1 / 0 unless the pool is mesh-sharded):
     shards: int = 1
     peak_shard_blocks_in_use: int = 0   # hottest single shard at peak
-    # Prefix sharing (zero unless prefix_sharing=True):
+    # Prefix sharing (zero unless prefix_sharing=True). `shared_blocks` /
+    # `prefix_hits` count INTRA-FLIGHT sharing only: blocks whose source
+    # still had a resident owner at match time. Cross-request hits served
+    # from the persistent cache are the `cache_*` counters below.
     shared_blocks: int = 0     # blocks admitted by reference instead of copy
     cow_copies: int = 0        # shared blocks privatized on first write
-    prefix_hits: int = 0       # requests that shared ≥ 1 block
+    prefix_hits: int = 0       # requests that shared ≥ 1 resident block
+    # Persistent prefix cache (zero unless prefix_cache=True):
+    cache_hits: int = 0        # requests that adopted ≥ 1 cache-pinned block
+    cache_hit_blocks: int = 0  # pinned blocks adopted (refcount 0 → 1)
+    cache_evictions: int = 0   # pinned/cold entries dropped under pressure
+    cache_pinned_blocks: int = 0   # current pin count (last sample)
+    peak_cache_blocks: int = 0
+    zero_prefill_hits: int = 0 # full-prompt hits admitted with NO prefill
     # Tiered KV memory (zero unless host_spill=True):
     host_spill: bool = False
     hot_blocks: int = 0        # device-resident blocks in use (last sample)
@@ -363,11 +395,20 @@ class ServeStats:
             out["shared_blocks"] = self.shared_blocks
             out["cow_copies"] = self.cow_copies
             out["prefix_hits"] = self.prefix_hits
-            # Effective memory saved: every shared admission avoided one
-            # block allocation; every CoW later paid one back.
-            saved = self.shared_blocks - self.cow_copies
+            # Effective memory saved: every shared/adopted admission avoided
+            # one block allocation; every CoW later paid one back. The
+            # intra-flight vs cross-request split is gross (pre-CoW).
+            saved = self.shared_blocks + self.cache_hit_blocks - self.cow_copies
             out["effective_blocks_saved"] = saved
             out["memory_saved_tokens"] = saved * self.block_size
+            if self.cache_hits or self.cache_evictions or self.peak_cache_blocks:
+                out["cache_hits"] = self.cache_hits
+                out["cache_hit_blocks"] = self.cache_hit_blocks
+                out["cache_saved_tokens"] = self.cache_hit_blocks * self.block_size
+                out["cache_evictions"] = self.cache_evictions
+                out["cache_pinned_blocks"] = self.cache_pinned_blocks
+                out["peak_cache_blocks"] = self.peak_cache_blocks
+                out["zero_prefill_hits"] = self.zero_prefill_hits
             if self.host_spill:
                 out["hot_blocks"] = self.hot_blocks
                 out["cold_blocks"] = self.cold_blocks
@@ -392,6 +433,7 @@ class _InflightPrefill:
     cursor: Any                         # PrefillCursor pytree (device)
     consumed: int = 0                   # prompt tokens prefilled so far
     n_shared: int = 0                   # radix-matched prefix blocks
+    n_cache: int = 0                    # of those, adopted from the pin cache
     shared_ids: list = field(default_factory=list)
     pages: np.ndarray | None = None     # page row mapped so far (-1 beyond)
 
@@ -436,6 +478,7 @@ class ServingEngine:
                  greedy: bool = True, seed: int = 0, paged: bool = False,
                  block_size: int = 32, num_blocks: int | None = None,
                  prefix_sharing: bool = False,
+                 prefix_cache: bool = False,
                  fused_decode: bool | None = None,
                  kv_pool_dtype: str | None = None,
                  host_spill: bool = False, demote_after: int = 4,
@@ -521,6 +564,17 @@ class ServingEngine:
         if prefix_sharing and not paged:
             raise ValueError("prefix_sharing requires paged=True")
         self.prefix_sharing = prefix_sharing
+        if prefix_cache and not prefix_sharing:
+            raise ValueError("prefix_cache requires prefix_sharing=True "
+                             "(the cache retains radix-mapped blocks past "
+                             "their last resident owner)")
+        if prefix_cache and cfg.kv_pool_dtype == "int4":
+            raise ValueError(
+                "prefix_cache does not support int4 pools: the in-place "
+                "append requantizes a whole partial block, so retained "
+                "prefix bytes would diverge from a cold prefill")
+        self.prefix_cache = prefix_cache
+        self._adopt = None
         if paged:
             if self.api.init_paged_state is None:
                 raise ValueError(f"{cfg.name}: paged serving not supported "
@@ -556,11 +610,45 @@ class ServingEngine:
             # physical block holding it + the owner's heavy-channel bytes.
             self._prefix_nodes: dict[bytes, tuple[int, bytes]] = {}
             self._block_keys: dict[int, bytes] = {}  # block → its radix key
+            # Persistent prefix cache (prefix_cache=True): blocks whose last
+            # resident owner released but whose radix entry survives. The
+            # pin is HOST-ONLY — device refcount stays 0 (nothing references
+            # the block), the allocator simply never gets the id back —
+            # block id → last-hit stamp (monotonic `_cache_clock`, drives
+            # LRU eviction under allocator pressure). `_node_depth` records
+            # each registered block's logical index so eviction can order
+            # equal-stamp blocks deepest-first (never orphaning a radix
+            # chain); `_logits_cache` keeps the first-token logits row per
+            # full-prompt key (what makes a full hit admit with ZERO
+            # prefill); `_cold_cache` is the host tier for pinned blocks
+            # demoted under HBM pressure (prefix_cache × host_spill):
+            # radix key → (payload, heavy, depth, stamp), with the node's
+            # block id set to the CACHE_COLD sentinel while demoted.
+            self._cached: dict[int, int] = {}
+            self._cache_clock = 0
+            self._node_depth: dict[int, int] = {}
+            self._logits_cache: dict[bytes, np.ndarray] = {}
+            self._cold_cache: dict[bytes, tuple] = {}
             self._state = self.api.init_paged_state(
                 slots, max_seq, block_size, self.num_blocks)
             self._write = jax.jit(self.api.write_into_pages, donate_argnums=dn)
             self._map_block = jax.jit(self.api.map_block, donate_argnums=dn)
             self._cow_block = jax.jit(self.api.cow_block, donate_argnums=dn)
+            if prefix_cache and self.api.adopt_pages is not None \
+                    and self.api.static_heavy is not None \
+                    and cfg.salca_static_channels \
+                    and self.api.prefill_chunk_unsupported is not None \
+                    and self.api.prefill_chunk_unsupported() is None:
+                # Zero-prefill warm admission. Metadata-only adoption is
+                # sound exactly where chunked prefill is: all-"A" stacks
+                # (no dense per-slot substate that a prefill would have to
+                # rebuild) encoded against the static heavy-channel set the
+                # retained rows carry. Other configs still hit the cache —
+                # they just re-prefill and map the matched blocks by
+                # reference (n_shared), which is the same bytes-saved, not
+                # the same latency.
+                self._adopt = jax.jit(self.api.adopt_pages,
+                                      donate_argnums=(1,) if donate else ())
         else:
             if host_spill:
                 raise ValueError("host_spill requires paged=True (the host "
@@ -580,10 +668,12 @@ class ServingEngine:
                     "host_spill is not supported on a mesh-sharded pool: the "
                     "sharded decode island does not record selection "
                     "histograms (leave the mesh ctx off or spill unsharded)")
-            if prefix_sharing:
-                raise ValueError(
-                    "host_spill cannot combine with prefix_sharing: a "
-                    "demoted block would vanish under the radix map's feet")
+            # prefix_sharing may combine with host_spill: resident
+            # radix-published blocks are excluded from demotion (the map
+            # must keep pointing at live device bytes — see
+            # `_demote_candidates`), and cache-pinned blocks (zero resident
+            # owners) demote through their own cold tier (`_cold_cache`),
+            # promoting back on a radix hit.
             if self.api.read_block is None:
                 raise ValueError(f"{cfg.name}: host spill not supported "
                                  "for this model family")
@@ -997,9 +1087,13 @@ class ServingEngine:
         return out
 
     def _register_blocks(self, req: Request, blocks: list[int],
-                         n_shared: int, heavy: bytes) -> None:
+                         n_shared: int, heavy: bytes,
+                         logits_row: np.ndarray | None = None) -> None:
         """Publish this request's PRIVATE blocks into the radix map so later
-        requests can share them. Shared blocks are already published."""
+        requests can share them. Shared blocks are already published. With
+        the persistent cache on, the first-token logits row is retained
+        under the full-prompt key so an identical later prompt can admit
+        with zero prefill (`_try_adopt`)."""
         full_keys, partial_key = self._request_digests(req)
         keys = full_keys + ([partial_key] if partial_key is not None else [])
         for j in range(n_shared, self._blocks_for(len(req.prompt))):
@@ -1007,25 +1101,52 @@ class ServingEngine:
             if key not in self._prefix_nodes and blocks[j] not in self._block_keys:
                 self._prefix_nodes[key] = (blocks[j], heavy)
                 self._block_keys[blocks[j]] = key
+                self._node_depth[blocks[j]] = j
+        if self.prefix_cache and logits_row is not None and keys \
+                and keys[-1] in self._prefix_nodes:
+            # The row is a pure function of the prompt (prefill is
+            # deterministic), so serving it on a warm hit is bit-exact by
+            # construction; it is dropped whenever its key leaves the map.
+            self._logits_cache[keys[-1]] = np.array(logits_row, copy=True)
+
+    def _prune_node(self, block: int) -> None:
+        """Remove a block's radix registration and every dependent cached
+        artifact (logits row, depth, any cold payload under the same key)."""
+        key = self._block_keys.pop(block, None)
+        if key is not None:
+            self._prefix_nodes.pop(key, None)
+            self._logits_cache.pop(key, None)
+            self._cold_cache.pop(key, None)
+        self._node_depth.pop(block, None)
 
     def _release_blocks(self, slot: int) -> None:
         """Decref every block the slot references; blocks reaching zero
-        return to the free list and leave the radix map. Releasing a slot
-        that holds nothing (double free: overflow finish racing a reset) is
-        a no-op — the free list is never corrupted."""
+        return to the free list and leave the radix map — unless the
+        persistent cache is on and the block is radix-published, in which
+        case the engine retains it under a cache pin (host-only: device
+        refcount stays 0, the allocator never sees the id) so a later
+        same-prefix request can adopt it. Releasing a slot that holds
+        nothing (double free: overflow finish racing a reset) is a no-op —
+        the free list is never corrupted."""
         blocks = self._slot_blocks.pop(slot, None)
         if blocks is None:
             return
-        for b in blocks:
+        stamp = None                # one LRU stamp per release event: the
+        for b in blocks:            # chain's depth order breaks the tie
             if b == SPILLED:
                 continue                    # host-tier entry: no device block
             self._refcount[b] -= 1
             assert self._refcount[b] >= 0, f"block {b} refcount underflow"
             if self._refcount[b] == 0:
-                self._alloc.release(b)      # back to its owner shard's list
-                key = self._block_keys.pop(b, None)
-                if key is not None:
-                    self._prefix_nodes.pop(key, None)
+                if self.prefix_cache and b in self._block_keys:
+                    if stamp is None:
+                        self._cache_clock += 1
+                        stamp = self._cache_clock
+                    self._cached[b] = stamp
+                    self._note_cache_usage()
+                else:
+                    self._alloc.release(b)  # back to its owner shard's list
+                    self._prune_node(b)
         self._slot_pos.pop(slot, None)
         if self.host_spill:
             for key in [k for k in self._spilled if k[0] == slot]:
@@ -1042,6 +1163,143 @@ class ServingEngine:
                                  if k[0] != slot}
             self._pinned_hot = {k for k in self._pinned_hot if k[0] != slot}
         self._note_block_usage()
+
+    # -- persistent prefix cache ---------------------------------------
+
+    def _note_cache_usage(self) -> None:
+        n = len(self._cached)
+        self.stats.cache_pinned_blocks = n
+        self.stats.peak_cache_blocks = max(self.stats.peak_cache_blocks, n)
+
+    def _cache_victim(self, protect=frozenset()) -> int | None:
+        """LRU victim among the cache pins: oldest last-hit stamp first,
+        DEEPEST logical index first on ties. Owners of a child block always
+        own its ancestors, so a parent's last release (= pin stamp) happens
+        at-or-after every child's — this order never reclaims an ancestor
+        while a pinned descendant remains, so a radix chain can't orphan."""
+        cand = [(stamp, -self._node_depth.get(b, 0), b)
+                for b, stamp in self._cached.items() if b not in protect]
+        return min(cand)[2] if cand else None
+
+    def _evict_cache_block(self, protect=frozenset()) -> bool:
+        """Reclaim ONE cache-pinned block outright: prune its radix node
+        (plus logits row) and return the id to the allocator. The block is
+        already fully unmapped (refcount 0) — eviction is pure bookkeeping,
+        which is why the scheduler drains the cache before it ever demotes
+        or preempts. Returns False when nothing is evictable."""
+        b = self._cache_victim(protect)
+        if b is None:
+            return False
+        del self._cached[b]
+        self._prune_node(b)
+        self._alloc.release(b)
+        self.stats.cache_evictions += 1
+        self._note_cache_usage()
+        self._note_block_usage()
+        return True
+
+    def _demote_cache_block(self, protect=frozenset()) -> bool:
+        """Move ONE cache-pinned block's rows to the host cold tier
+        (prefix_cache × host_spill): the radix key stays matchable under the
+        CACHE_COLD sentinel and promotes back on the next hit, so HBM
+        pressure squeezes the cache without forgetting it. Preferred over
+        outright eviction whenever the host tier exists."""
+        b = self._cache_victim(protect)
+        if b is None:
+            return False
+        key = self._block_keys[b]
+        heavy = self._prefix_nodes[key][1]
+        payload = jax.tree_util.tree_map(
+            np.asarray, self._read_block(self._state, jnp.int32(b)))
+        self._cold_cache[key] = (payload, heavy,
+                                 self._node_depth.get(b, 0), self._cached[b])
+        del self._cached[b]
+        del self._block_keys[b]         # the physical id is about to be reused
+        self._node_depth.pop(b, None)
+        self._prefix_nodes[key] = (CACHE_COLD, heavy)
+        self._alloc.release(b)
+        self.stats.demotions += 1
+        self.stats.pcie_bytes += self._block_bytes
+        # Bound the host tier to one pool's worth of entries: beyond that
+        # the LRU-oldest cold entry is dropped outright.
+        if len(self._cold_cache) > self.num_blocks:
+            victim = min(self._cold_cache,
+                         key=lambda k: (self._cold_cache[k][3],
+                                        -self._cold_cache[k][2]))
+            self._prefix_nodes.pop(victim, None)
+            self._logits_cache.pop(victim, None)
+            del self._cold_cache[victim]
+            self.stats.cache_evictions += 1
+        self._note_cache_usage()
+        self._note_block_usage()
+        return True
+
+    def _promote_cached(self, key: bytes,
+                        protect=frozenset()) -> int | None:
+        """Rehydrate one cold cache entry to a device block (radix hit on a
+        demoted prefix): allocate, write the mirrored rows back (bit-exact —
+        storage format both ways) and re-pin hot under its original stamp.
+        A dry allocator first drains OTHER cache pins (`protect` carries the
+        blocks the in-progress match depends on — a hit must never reclaim
+        itself). Returns None when the pool still can't supply a block —
+        callers truncate the match there and the request re-prefills that
+        span (still bit-exact, just colder)."""
+        if key not in self._cold_cache:
+            return None         # LRU-dropped by a reclaim mid-match
+        payload, heavy, depth, stamp = self._cold_cache[key]
+        fresh = self._alloc.alloc(1)
+        if fresh is None:
+            self._reclaim_cache(1, protect=protect)
+            if key not in self._cold_cache:
+                return None     # the squeeze dropped this very entry
+            fresh = self._alloc.alloc(1)
+        if fresh is None:
+            return None
+        b = fresh[0]
+        self._state = self._write_block(self._state, jnp.int32(b),
+                                        jax.device_put(payload))
+        del self._cold_cache[key]
+        self._prefix_nodes[key] = (b, heavy)
+        self._block_keys[b] = key
+        self._node_depth[b] = depth
+        self._cached[b] = stamp         # pinned hot until a hit adopts it
+        self.stats.promotions += 1
+        self.stats.pcie_bytes += self._block_bytes
+        self._note_cache_usage()
+        self._note_block_usage()
+        return b
+
+    def _reclaim_cache(self, need: int, protect=frozenset()) -> None:
+        """Drain the cold (LRU) end of the prefix cache until the allocator
+        can cover `need` blocks, or the cache is dry. A cache-pinned block
+        is the CHEAPEST reclaim — no resident request loses state — so
+        every pressure path (admission, chunk charging, growth, CoW,
+        preemption) calls this before host-spill demotion or the preemption
+        machinery fires. With the host tier available, pinned blocks demote
+        to the cold cache (the entry stays warm across the squeeze) instead
+        of being evicted outright."""
+        while self._alloc.total_free < need:
+            if self.host_spill and self._demote_cache_block(protect):
+                continue
+            if not self._evict_cache_block(protect):
+                return
+
+    def flush_prefix_cache(self) -> int:
+        """Drop every persistent-cache entry (hot pins and cold payloads);
+        returns the number flushed. Resident requests and their radix
+        entries are untouched — this only forgets finished prefixes."""
+        if not self.paged:
+            return 0
+        n = 0
+        while self._evict_cache_block():
+            n += 1
+        for key in list(self._cold_cache):
+            self._prefix_nodes.pop(key, None)
+            self._logits_cache.pop(key, None)
+            del self._cold_cache[key]
+            self.stats.cache_evictions += 1
+            n += 1
+        return n
 
     # -- tiered KV memory: host spill of cold blocks -------------------
 
@@ -1141,6 +1399,12 @@ class ServingEngine:
                 b = held[j]
                 if b == SPILLED or self._refcount[b] != 1:
                     continue
+                if b in self._block_keys:
+                    # Radix-published: the map must keep pointing at live
+                    # device bytes while a resident owner exists. Only the
+                    # cache tier (zero owners) demotes published blocks,
+                    # through `_demote_cache_block`'s cold path.
+                    continue
                 if (slot, j) in self._pinned_hot or self._xfer_blocked((slot, j)):
                     continue            # demote retries exhausted / backing off
                 out.append((-int(self._cold_streak[slot, j]), slot, j))
@@ -1211,32 +1475,58 @@ class ServingEngine:
                 plen = len(req.prompt)
                 need_full = self._blocks_for(plen)
                 shared_ids: list[int] = []
+                n_cache = 0
                 if self.prefix_sharing:
                     cand = self._match_tokens(req)
-                    if need_full - len(cand) > self._alloc.total_free:
+                    # Feasibility counts what pressure could reclaim: every
+                    # pin outside the matched span is evictable, and each
+                    # cold-matched entry costs one block to rehydrate.
+                    cand_blocks = {b for _, b, _ in cand if b >= 0}
+                    n_cold = sum(1 for _, b, _ in cand if b == CACHE_COLD)
+                    reclaim = sum(1 for b in self._cached
+                                  if b not in cand_blocks)
+                    if need_full - len(cand) + n_cold \
+                            > self._alloc.total_free + reclaim:
                         break              # can't cover even if fully gated in
+                    if self._try_adopt(req, cand, t0):
+                        continue           # zero-prefill warm hit admitted
                     self._begin_cycle(req, t0)  # gate prefill: work begins
                     _, state1 = self._ensure_prefill(req)
                     if req._heavy is None:
                         req._heavy = self._heavy_bytes(state1)
                     heavy = req._heavy
                     # Heavy-channel gate: alias only while the owner's sets
-                    # match; the first mismatch truncates the share.
-                    for _, block, owner_heavy in cand:
+                    # match; the first mismatch truncates the share. Cold
+                    # cache entries rehydrate to a fresh block on the way
+                    # (other pins may be squeezed out to make room — the
+                    # match's own blocks are protected).
+                    hot = set(cand_blocks)
+                    for key, block, owner_heavy in cand:
                         if owner_heavy != heavy:
                             break
+                        if block == CACHE_COLD:
+                            block = self._promote_cached(key, protect=hot)
+                            if block is None:
+                                break      # pool too tight to rehydrate
+                            hot.add(block)
                         shared_ids.append(block)
                 need = need_full - len(shared_ids)
+                if need > self._alloc.total_free:
+                    # Cheapest reclaim first: drain the cache's LRU end
+                    # (matched blocks protected — an admission must never
+                    # evict its own hit) before host-spill demotion or the
+                    # head-of-line wait ever triggers.
+                    self._reclaim_cache(need, protect=set(shared_ids))
                 if self.host_spill and need > self._alloc.total_free:
                     # Admission pressure: evict cold blocks of active slots
                     # to the host tier before making the queue wait on the
                     # device pool — the tier exists so admission is bounded
                     # by host memory, not HBM.
                     for _ in range(need - self._alloc.total_free):
-                        cand = self._demote_candidates()
-                        if not cand:
+                        dc = self._demote_candidates()
+                        if not dc:
                             break
-                        self.demote_block(cand[0][1], cand[0][2])
+                        self.demote_block(dc[0][1], dc[0][2])
                 if self.host_spill and need > self._alloc.total_free:
                     # Wave admission: the prompt exceeds the free device
                     # pool even after eviction, so its blocks are written
@@ -1246,6 +1536,10 @@ class ServingEngine:
                         break              # wait for at least one hot block
                     pages = None           # marks the wave path below
                     blocks = []
+                    # Wave admission rewrites the whole prompt privately —
+                    # matched blocks were never increfed, so dropping the
+                    # share here leaks nothing.
+                    shared_ids = []
                 else:
                     fresh = self._alloc_blocks(need)  # least-loaded first
                     if fresh is None:
@@ -1287,7 +1581,10 @@ class ServingEngine:
                             self.demote_block(slot, j, _inject=False)
             elif self.paged:
                 for b in blocks:           # shared: n → n+1; fresh: 0 → 1
+                    if self._cached.pop(b, None) is not None:
+                        n_cache += 1       # pin → resident (cache hit)
                     self._refcount[b] += 1
+                self._note_cache_usage()
                 self._slot_blocks[slot] = list(blocks)
                 self._slot_pos[slot] = len(req.prompt)
                 if self.host_spill:
@@ -1299,13 +1596,80 @@ class ServingEngine:
                                           jnp.int32(n_shared))
                 if self.prefix_sharing:
                     req.shared_blocks = n_shared
-                    self.stats.shared_blocks += n_shared
-                    self.stats.prefix_hits += 1 if n_shared else 0
-                    self._register_blocks(req, blocks, n_shared, req._heavy)
+                    self.stats.shared_blocks += n_shared - n_cache
+                    self.stats.cache_hit_blocks += n_cache
+                    self.stats.prefix_hits += 1 if n_shared - n_cache else 0
+                    self.stats.cache_hits += 1 if n_cache else 0
+                    self._register_blocks(req, blocks, n_shared, req._heavy,
+                                          logits_row)
             else:
                 self._state = self._write(self._state, state1, jnp.int32(slot))
             self._drop_stash(req)       # free the batch=1 device state
             self._activate(req, slot, logits_row)
+
+    def _try_adopt(self, req: Request, cand, t0: float) -> bool:
+        """Zero-prefill warm admission: when the radix match covers the FULL
+        prompt and the first-token logits row for it is retained, install
+        the cached blocks by reference (`adopt_pages` — metadata only, no
+        data movement, no prefill) and activate the slot immediately, so
+        TTFT collapses to the adopt dispatch. Falls back to the normal
+        prefill path (returns False) when any precondition is missing:
+        adoption unsupported for the config (`self._adopt is None`), a
+        partial match, a heavy-set mismatch, a missing logits row, or a
+        cold entry the pool cannot rehydrate. The fallback still maps every
+        matched block by reference — same bytes saved, just re-prefilled."""
+        if self._adopt is None or not cand \
+                or len(cand) < self._blocks_for(len(req.prompt)):
+            return False
+        logits_row = self._logits_cache.get(cand[-1][0])
+        if logits_row is None:
+            return False
+        heavy = self._static_heavy_bytes()
+        if any(owner_heavy != heavy for _, _, owner_heavy in cand):
+            return False
+        blocks: list[int] = []
+        hot = {b for _, b, _ in cand if b >= 0}
+        for key, block, _ in cand:
+            if block == CACHE_COLD:
+                block = self._promote_cached(key, protect=hot)
+                if block is None:
+                    return False    # rehydrated span stays pinned hot; the
+                hot.add(block)      # prefill path picks it up next attempt
+            blocks.append(block)
+        self._queue.popleft()
+        slot = self._free.pop()
+        self._begin_cycle(req, t0)
+        req._heavy = heavy
+        n_cache = 0
+        for b in blocks:
+            if self._cached.pop(b, None) is not None:
+                n_cache += 1        # pin → resident (cross-request hit)
+            self._refcount[b] += 1
+        self._note_cache_usage()
+        plen = len(req.prompt)
+        pages = np.full((self.max_blocks,), -1, np.int32)
+        pages[:len(blocks)] = blocks
+        self._slot_blocks[slot] = list(blocks)
+        self._slot_pos[slot] = plen
+        if self.host_spill:
+            self._hist_snap[slot] = 0
+            self._cold_streak[slot] = 0
+        self._note_block_usage()
+        t1 = time.time()
+        self._state = self._adopt(self.params, self._state, jnp.int32(slot),
+                                  jnp.asarray(pages), jnp.int32(plen))
+        self.stats.prefill_s += time.time() - t1
+        req.shared_blocks = len(blocks)
+        self.stats.shared_blocks += len(blocks) - n_cache
+        self.stats.cache_hit_blocks += n_cache
+        if len(blocks) - n_cache:
+            self.stats.prefix_hits += 1
+        if n_cache:
+            self.stats.cache_hits += 1
+        self.stats.zero_prefill_hits += 1
+        self._drop_stash(req)
+        self._activate(req, slot, logits_row)
+        return True
 
     def _next_token(self, req: Request, logits_row: np.ndarray | None,
                     greedy_tok: int | None = None) -> int:
@@ -1427,6 +1791,14 @@ class ServingEngine:
         gone from the pool; the caller must stop growing it) or no victim
         remains."""
         while not self._alloc.total_free:
+            # Cache pins are cheaper than any victim: drain them first.
+            # This also guarantees termination when a victim's released
+            # blocks land straight back in the pin cache — the next
+            # iteration reclaims them instead of hunting another victim.
+            if self.host_spill and self._demote_cache_block():
+                continue
+            if self._evict_cache_block():
+                continue
             victim = self._pick_victim()
             if victim is None:
                 return False
@@ -1473,20 +1845,37 @@ class ServingEngine:
         if self._inflight is None:
             if not (self._queue and self._free):
                 return
+            if self.prefix_sharing and self._try_adopt(
+                    self._queue[0], self._match_tokens(self._queue[0]),
+                    time.time()):
+                return                  # zero-prefill warm hit admitted
             req = self._queue.popleft()
             self._begin_cycle(req, time.time())
             slot = self._free.pop()
             shared_ids: list[int] = []
+            n_cache = 0
             if self.prefix_sharing:
                 heavy = self._static_heavy_bytes()
                 req._heavy = heavy
-                for _, block, owner_heavy in self._match_tokens(req):
+                cand = self._match_tokens(req)
+                hot = {b for _, b, _ in cand if b >= 0}
+                for key, block, owner_heavy in cand:
                     if owner_heavy != heavy:
                         break           # unreachable with static channels
+                    if block == CACHE_COLD:
+                        block = self._promote_cached(key, protect=hot)
+                        if block is None:
+                            break       # pool too tight to rehydrate
+                        hot.add(block)
+                    if block in self._cached:
+                        del self._cached[block]
+                        n_cache += 1    # pin → resident (cross-request hit)
                     shared_ids.append(block)
+                self._note_cache_usage()
             inf = _InflightPrefill(
                 req, slot, self.api.prefill_begin(len(req.prompt)),
-                n_shared=len(shared_ids), shared_ids=shared_ids,
+                n_shared=len(shared_ids), n_cache=n_cache,
+                shared_ids=shared_ids,
                 pages=np.full((self.max_blocks,), -1, np.int32))
             # Pin the shared prefix NOW; the device mirrors this incref on
             # the first chunk (`prefill_chunk_into_pages` charges all
@@ -1510,6 +1899,11 @@ class ServingEngine:
         held = self._slot_blocks[slot]
         span = self._blocks_for(inf.consumed + c)   # blocks covered after
         fresh_needed = max(span - len(held), 0)     # held ⊇ shared prefix
+        if fresh_needed and self._alloc.total_free < fresh_needed:
+            # Chunk charging drains the cache's LRU end before stalling —
+            # a pin is cheaper than a lost prefill tick (the in-flight
+            # request's own shared prefix is protected from eviction).
+            self._reclaim_cache(fresh_needed, protect=set(inf.shared_ids))
         fresh = self._alloc_blocks(fresh_needed) if fresh_needed else []
         if fresh is None:
             self.stats.chunk_stalls += 1            # pool dry: try next tick
@@ -1539,9 +1933,12 @@ class ServingEngine:
         self._inflight = None
         if self.prefix_sharing:
             req.shared_blocks = inf.n_shared
-            self.stats.shared_blocks += inf.n_shared
-            self.stats.prefix_hits += 1 if inf.n_shared else 0
-            self._register_blocks(req, held, inf.n_shared, req._heavy)
+            self.stats.shared_blocks += inf.n_shared - inf.n_cache
+            self.stats.cache_hit_blocks += inf.n_cache
+            self.stats.prefix_hits += 1 if inf.n_shared - inf.n_cache else 0
+            self.stats.cache_hits += 1 if inf.n_cache else 0
+            self._register_blocks(req, held, inf.n_shared, req._heavy,
+                                  logits_row)
         self._activate(req, slot, logits_row)
 
     def _grow_or_overflow(self) -> None:
@@ -1571,6 +1968,12 @@ class ServingEngine:
                         and held[logical] >= 0 \
                         and self._refcount[held[logical]] <= 1:
                     continue                       # private capacity in place
+                if pos < self.max_seq and not self._alloc.total_free:
+                    # Pressure-relief order: the prefix cache's LRU end is
+                    # the cheapest reclaim (no resident request loses
+                    # state), so growth and CoW drain it BEFORE host-spill
+                    # demotion or preemption ever fires.
+                    self._reclaim_cache(1)
                 if pos < self.max_seq and not self._alloc.total_free \
                         and self.host_spill:
                     # Growth pressure under the host tier: demote the
@@ -1774,10 +2177,36 @@ class ServingEngine:
         for i, pool in enumerate(pools):
             rep.merge(pool.check_invariants(
                 free_blocks=free, host_refcount=self._refcount,
-                allow_holes=self.host_spill), prefix=f"pool[{i}]: ")
+                allow_holes=self.host_spill,
+                cache_pinned=self._cached.keys()), prefix=f"pool[{i}]: ")
         if not pools:
             rep.fail("paged engine with no PagedSalcaCache substates")
             return rep
+        # Persistent prefix cache: a pin is an engine-held reference to a
+        # fully-unmapped, radix-published block; a cold entry is a payload
+        # whose radix node carries the CACHE_COLD sentinel. Both directions
+        # of each correspondence must hold.
+        free_set = set(free)
+        for b in self._cached:
+            if self._refcount[b] != 0:
+                rep.fail(f"cache-pinned block {b} has host refcount "
+                         f"{int(self._refcount[b])} (pins hold zero "
+                         f"resident owners by definition)")
+            if b not in self._block_keys:
+                rep.fail(f"cache-pinned block {b} has no radix registration")
+            if b in free_set:
+                rep.fail(f"cache-pinned block {b} is on the free list")
+        for key, (b, _) in self._prefix_nodes.items():
+            if b == CACHE_COLD:
+                if key not in self._cold_cache:
+                    rep.fail("cold radix node without a cold-cache payload")
+            elif self._block_keys.get(b) != key:
+                rep.fail(f"radix node block {b} not back-registered in "
+                         f"_block_keys")
+        for key in self._cold_cache:
+            node = self._prefix_nodes.get(key)
+            if node is None or node[0] != CACHE_COLD:
+                rep.fail("cold-cache payload without a CACHE_COLD radix node")
         # Host ↔ device page-table agreement, on layer 0 of the first pool
         # (cross-layer/cross-pool lockstep is checked above).
         s, mb = self.slots, self.max_blocks

@@ -69,3 +69,17 @@ def test_solver_respects_target():
         # targets below it get the floor design.
         assert dp.min_retention <= max(target * 1.25, 0.059) + 1e-9
         assert dp.u_pre > 0.9 and dp.u_att >= 0.55
+
+
+def test_cached_prefill_bytes_avoided_scales_with_hits():
+    """The persistent-cache term: every cross-request hit block avoids one
+    block's pool write across all layers — linear in hits, consistent with
+    the pool-block byte model."""
+    kw = dict(d=128, kv_heads=8, block_size=16, layers=24)
+    one = pm.cached_prefill_bytes_avoided(1, **kw)
+    assert one == pm.pool_block_bytes(128, 8, 16, 0.5) * 24
+    assert pm.cached_prefill_bytes_avoided(7, **kw) == pytest.approx(7 * one)
+    assert pm.cached_prefill_bytes_avoided(0, **kw) == 0.0
+    # int4 storage shrinks the avoided bytes with the pool's K/V tier.
+    small = pm.cached_prefill_bytes_avoided(1, **kw, kv_pool_dtype="int4")
+    assert 0 < small < one

@@ -1,0 +1,521 @@
+"""Persistent cross-request prefix cache: pins, LRU eviction, zero prefill.
+
+Covers the acceptance criteria of the persistent-cache PR:
+
+  * pin lifecycle: a finished request's radix-published blocks stay mapped
+    under an engine-held cache pin — never on the free list, device
+    refcount 0, radix entry intact — and a later same-prefix request
+    adopts them with the pin popped back to resident;
+  * zero-prefill warm hits: a full-prompt radix match with a retained
+    first-token logits row admits via `adopt_pages` (metadata only — no
+    prefill call), bit-identical to the cold engine, CoW on a divergent
+    tail included;
+  * LRU eviction: allocator pressure drains the cache's cold end
+    (oldest last-hit stamp, deepest block first) BEFORE preemption fires;
+    eviction prunes the radix node so a post-evict repeat re-prefills;
+  * host-spill interaction: with the host tier on, squeezed pins demote
+    to a cold payload that rehydrates bit-exactly on the next hit;
+  * drain: `flush_prefix_cache` + `check_invariants` leave a full free
+    list, zero refcounts, and no dangling pin/node/payload;
+  * a property suite (hypothesis when available, plus a deterministic
+    fallback) driving random submit/run/flush interleavings through the
+    real engine and auditing the pin invariants after every step.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.runtime.serve import CACHE_COLD, Request, ServingEngine
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+CFG = get_config("qwen3-0.6b").reduced()
+# Static heavy channels: adoption re-derives each layer's set from the
+# weights, so retained rows stay decodable across requests.
+CFG_STATIC = dataclasses.replace(CFG, salca_static_channels=True)
+
+MAX_SEQ = 128
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    return get_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _prompt(rng, n):
+    return rng.integers(0, CFG.vocab_size, n).astype(np.int32)
+
+
+def _engine(model_params, *, num_blocks=20, slots=4, cache=True, **kw):
+    return ServingEngine(CFG_STATIC, model_params, max_seq=MAX_SEQ,
+                         slots=slots, paged=True, block_size=BS,
+                         num_blocks=num_blocks, prefix_sharing=True,
+                         prefix_cache=cache, **kw)
+
+
+def _run_one(eng, prompt, rid=0, max_new=2):
+    r = Request(rid=rid, prompt=prompt.copy(), max_new_tokens=max_new)
+    eng.submit(r)
+    eng.run()
+    return r
+
+
+def _audit(eng):
+    rep = eng.check_invariants()
+    assert rep.ok, rep.violations
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# Pin lifecycle
+# ---------------------------------------------------------------------------
+
+def test_release_pins_instead_of_freeing(model_params, rng):
+    """The last owner's release keeps radix-published blocks mapped under a
+    cache pin: off the free list, device refcount 0, radix entry intact."""
+    eng = _engine(model_params)
+    _run_one(eng, _prompt(rng, 40))             # 3 blocks: 2 full + partial
+    assert len(eng._cached) == 3
+    for b in eng._cached:
+        assert eng._refcount[b] == 0
+        assert b not in eng._free_blocks
+        assert b in eng._block_keys             # still radix-published
+        assert eng._block_keys[b] in eng._prefix_nodes
+    assert eng.stats.cache_pinned_blocks == 3
+    assert eng.stats.peak_cache_blocks == 3
+    _audit(eng)
+
+
+def test_nonpersistent_engine_frees_on_release(model_params, rng):
+    eng = _engine(model_params, cache=False)
+    _run_one(eng, _prompt(rng, 40))
+    assert sorted(eng._free_blocks) == list(range(20))
+    assert not eng._prefix_nodes and not eng._block_keys
+    _audit(eng)
+
+
+def test_warm_hit_pops_pin_and_counts_cache_hit(model_params, rng):
+    """The repeat request adopts the pinned blocks: pins pop back to
+    resident, and the hit is counted as a CACHE hit (cross-request), not an
+    intra-flight prefix hit."""
+    eng = _engine(model_params)
+    p = _prompt(rng, 40)
+    _run_one(eng, p, rid=0)
+    pinned = set(eng._cached)
+    r = _run_one(eng, p, rid=1)
+    assert r.shared_blocks == 3
+    assert eng.stats.cache_hits == 1
+    assert eng.stats.cache_hit_blocks == 3
+    assert eng.stats.prefix_hits == 0           # nothing was co-resident
+    assert eng.stats.shared_blocks == 0
+    assert eng.stats.zero_prefill_hits == 1     # full-prompt match
+    assert set(eng._cached) >= pinned           # re-pinned after finishing
+    _audit(eng)
+
+
+def test_summary_separates_cache_from_intra_flight(model_params, rng):
+    eng = _engine(model_params)
+    p = _prompt(rng, 40)
+    _run_one(eng, p, rid=0)
+    _run_one(eng, p, rid=1)
+    s = eng.stats.summary()
+    assert s["cache_hits"] == 1
+    assert s["cache_saved_tokens"] == 3 * BS
+    assert s["zero_prefill_hits"] == 1
+    assert s["prefix_hits"] == 0
+    # Blocks saved counts both kinds of reuse, minus CoW copy-backs.
+    assert s["effective_blocks_saved"] == 3 - eng.stats.cow_copies
+
+
+# ---------------------------------------------------------------------------
+# Zero-prefill adoption: parity with the cold engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_warm_hits_bit_identical_to_cold_engine(model_params, rng):
+    """Identical prompts replayed sequentially: every output (including the
+    zero-prefill adoptions) matches a fresh cold engine per request."""
+    prompts = [_prompt(rng, 40), _prompt(rng, 33)]
+    trace = [prompts[0], prompts[1], prompts[0], prompts[0], prompts[1]]
+    cold = []
+    for i, p in enumerate(trace):
+        e = _engine(model_params, cache=False)
+        cold.append(_run_one(e, p, rid=i, max_new=4).output)
+    eng = _engine(model_params)
+    warm = [_run_one(eng, p, rid=i, max_new=4).output
+            for i, p in enumerate(trace)]
+    assert warm == cold
+    assert eng.stats.zero_prefill_hits == 3     # every repeat visit
+    _audit(eng)
+
+
+@pytest.mark.slow
+def test_warm_hit_with_divergent_tail_cows(model_params, rng):
+    """Two CO-RESIDENT requests both admitted off the same pinned prefix:
+    the second aliases the first's freshly-adopted blocks (intra-flight),
+    so the first divergent-position write faults into a CoW copy — outputs
+    still match the cold engine and the partial block's retained rows
+    survive for the next hit."""
+    p = _prompt(rng, 40)                        # partial 3rd block: CoW site
+    cold = _run_one(_engine(model_params, cache=False), p, max_new=5).output
+    eng = _engine(model_params)
+    _run_one(eng, p, rid=0, max_new=5)          # registers + pins 3 blocks
+    rb = Request(rid=1, prompt=p.copy(), max_new_tokens=5)
+    rc = Request(rid=2, prompt=p.copy(), max_new_tokens=5)
+    eng.submit(rb)
+    eng.submit(rc)
+    eng.run()                                   # co-resident: tail CoWs
+    assert rb.output == rc.output == cold
+    assert eng.stats.cow_copies >= 1
+    assert eng.stats.cache_hits >= 1            # one popped the pins
+    assert eng.stats.prefix_hits >= 1           # the other aliased resident
+    w3 = _run_one(eng, p, rid=3, max_new=5).output
+    assert w3 == cold                           # retained rows intact
+    _audit(eng)
+
+
+def test_adoption_gated_off_without_static_channels(model_params, rng):
+    """Per-input heavy channels can't validate retained rows against a new
+    request without a prefill, so `_adopt` stays None — hits still map the
+    pinned blocks by reference through the prefill path."""
+    eng = ServingEngine(CFG, model_params, max_seq=MAX_SEQ, slots=4,
+                        paged=True, block_size=BS, num_blocks=20,
+                        prefix_sharing=True, prefix_cache=True)
+    assert eng._adopt is None
+    p = _prompt(rng, 40)
+    cold = _run_one(_engine(model_params, cache=False), p).output
+    _run_one(eng, p, rid=0)
+    r2 = _run_one(eng, p, rid=1)
+    assert r2.output == cold
+    assert eng.stats.zero_prefill_hits == 0
+    assert eng.stats.cache_hits == 1            # reference-mapped, re-prefilled
+    assert eng.stats.cache_hit_blocks == 3
+    _audit(eng)
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction under allocator pressure
+# ---------------------------------------------------------------------------
+
+def test_pressure_evicts_lru_pins_before_waiting(model_params, rng):
+    """A new admission that can't get blocks drains the cache's LRU end:
+    oldest-stamp pins go first, the radix node goes with them."""
+    eng = _engine(model_params, num_blocks=7, slots=2)
+    pa, pb, pc = (_prompt(rng, 40) for _ in range(3))
+    _run_one(eng, pa, rid=0)                    # pins 3 (stamp 1)
+    _run_one(eng, pb, rid=1)                    # pins 3 more (stamp 2)
+    assert len(eng._cached) == 6
+    keys_a = {eng._node_depth[b]: eng._block_keys[b]
+              for b, s in eng._cached.items() if s == 1}
+    _run_one(eng, pc, rid=2)                    # needs 2 more: evicts pa's
+    assert eng.stats.cache_evictions == 2       # exactly the shortfall
+    # Deepest-first within the oldest stamp: pa's blocks 1,2 pruned with
+    # their radix nodes, the depth-0 ancestor survives pinned.
+    assert keys_a[2] not in eng._prefix_nodes
+    assert keys_a[1] not in eng._prefix_nodes
+    assert keys_a[0] in eng._prefix_nodes
+    _audit(eng)
+
+
+def test_hit_after_evict_reprefills_correctly(model_params, rng):
+    """Once evicted, a repeat of the prompt finds no radix entry and
+    re-prefills from scratch — outputs unchanged."""
+    eng = _engine(model_params, num_blocks=7, slots=2)
+    pa = _prompt(rng, 40)
+    first = _run_one(eng, pa, rid=0).output
+    for i in (1, 2, 3):                         # pressure: LRU walks through
+        _run_one(eng, _prompt(rng, 40), rid=i)  # pa's chain shallowest-last
+    hits0 = eng.stats.cache_hits
+    again = _run_one(eng, pa, rid=4)
+    assert again.output == first
+    assert again.shared_blocks == 0             # nothing left to hit
+    assert eng.stats.cache_hits == hits0
+    _audit(eng)
+
+
+def test_lru_order_prefers_oldest_stamp_deepest_block(model_params, rng):
+    """Victim order (stamp asc, depth desc): re-hitting a prefix refreshes
+    its stamp, so the untouched prefix is evicted first."""
+    eng = _engine(model_params, num_blocks=20, slots=2)
+    pa, pb = _prompt(rng, 40), _prompt(rng, 40)
+    _run_one(eng, pa, rid=0)
+    _run_one(eng, pb, rid=1)
+    _run_one(eng, pa, rid=2)                    # refreshes pa's stamps
+    stale = [b for b, s in sorted(eng._cached.items())
+             if eng._block_keys[b] and s == min(eng._cached.values())]
+    victim = eng._cache_victim()
+    assert victim in stale
+    assert eng._node_depth[victim] == max(
+        eng._node_depth[b] for b in stale)      # deepest of the oldest
+    # Draining one at a time never orphans: every surviving pinned block's
+    # ancestors (shallower depths under the same chain) are still present.
+    while eng._evict_cache_block():
+        _audit(eng)
+    assert not eng._cached and not eng._prefix_nodes
+
+
+def test_eviction_runs_before_preemption(model_params, rng):
+    """Decode-time growth pressure drains pins BEFORE the preemption
+    machinery fires: with enough evictable pins, no request is preempted."""
+    eng = _engine(model_params, num_blocks=8, slots=2, preempt=True)
+    _run_one(eng, _prompt(rng, 40), rid=0)      # 3 pins parked in the cache
+    assert len(eng._cached) == 3
+    # Two co-resident growers, 4 lifetime blocks each (40 + 24 stored
+    # tokens = 64): total demand is exactly the pool, so both finish
+    # without preemption IFF the pins drain under pressure.
+    r1 = Request(rid=1, prompt=_prompt(rng, 40), max_new_tokens=25)
+    r2 = Request(rid=2, prompt=_prompt(rng, 40), max_new_tokens=25)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.run()
+    assert r1.stop_reason == "length" and r2.stop_reason == "length"
+    assert eng.stats.preemptions == 0           # pins absorbed the pressure
+    assert eng.stats.cache_evictions >= 1
+    _audit(eng)
+
+
+# ---------------------------------------------------------------------------
+# Host-spill interaction: pinned blocks demote to a cold payload
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_spill_cache_demotes_and_rehydrates_bit_exact(model_params, rng):
+    """prefix_cache × host_spill: pressure demotes pins to the host tier
+    (radix key stays matchable), and the next hit promotes them back with
+    outputs identical to a cold run."""
+    pa, pb = _prompt(rng, 40), _prompt(rng, 40)
+    cold = [_run_one(_engine(model_params, cache=False, num_blocks=4,
+                             slots=2), p).output for p in (pa, pb, pa)]
+    eng = _engine(model_params, num_blocks=4, slots=2, host_spill=True)
+    warm = [_run_one(eng, p, rid=i).output
+            for i, p in enumerate((pa, pb, pa))]
+    assert warm == cold
+    assert eng.stats.demotions >= 2             # squeezed to the cold tier
+    assert eng.stats.promotions >= 1            # rehydrated on the hit
+    assert eng.stats.cache_hits >= 1
+    _audit(eng)
+
+
+def test_spill_prefix_sharing_no_longer_raises(model_params):
+    """The PR lifts the host_spill × prefix_sharing exclusion: construction
+    succeeds and the radix skip keeps published blocks resident."""
+    eng = _engine(model_params, host_spill=True, cache=False)
+    assert eng.host_spill and eng.prefix_sharing
+    eng2 = _engine(model_params, host_spill=True)
+    assert eng2.prefix_cache
+
+
+def test_cold_tier_is_bounded(model_params, rng):
+    """The host tier holds at most one pool's worth of cold entries; beyond
+    that the LRU-oldest entry is dropped (counted as an eviction)."""
+    eng = _engine(model_params, num_blocks=4, slots=2, host_spill=True)
+    for i in range(8):                          # 8 × 3 blocks through 4 slots
+        _run_one(eng, _prompt(rng, 40), rid=i)
+    assert len(eng._cold_cache) <= 4
+    assert len(eng._cached) + len(eng._free_blocks) \
+        + int((eng._refcount > 0).sum()) >= 4
+    _audit(eng)
+
+
+# ---------------------------------------------------------------------------
+# int4 pools are excluded (in-place requant would corrupt retained rows)
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_int4_pool_raises(model_params):
+    with pytest.raises(ValueError, match="int4"):
+        ServingEngine(CFG_STATIC, model_params, max_seq=MAX_SEQ, slots=2,
+                      paged=True, block_size=BS, num_blocks=8,
+                      prefix_sharing=True, prefix_cache=True,
+                      kv_pool_dtype="int4")
+
+
+def test_prefix_cache_requires_prefix_sharing(model_params):
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        ServingEngine(CFG_STATIC, model_params, max_seq=MAX_SEQ, slots=2,
+                      paged=True, block_size=BS, num_blocks=8,
+                      prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# Flush + drain: zero leaks
+# ---------------------------------------------------------------------------
+
+def test_flush_returns_pool_to_full(model_params, rng):
+    eng = _engine(model_params)
+    for i in range(3):
+        _run_one(eng, _prompt(rng, 40), rid=i)
+    n = eng.flush_prefix_cache()
+    assert n == 9                               # 3 requests × 3 blocks
+    assert not eng._cached and not eng._prefix_nodes
+    assert not eng._logits_cache and not eng._cold_cache
+    assert sorted(eng._free_blocks) == list(range(20))
+    assert (eng._refcount == 0).all()
+    _audit(eng)
+
+
+def test_invariants_catch_pin_corruption(model_params, rng):
+    """The audit actually bites: a pin colliding with the free list or a
+    mapped block is reported, not silently passed."""
+    eng = _engine(model_params)
+    _run_one(eng, _prompt(rng, 40))
+    b = next(iter(eng._cached))
+    eng._alloc.release(b)                       # corrupt: pinned AND free
+    rep = eng.check_invariants()
+    assert not rep.ok
+    assert any("pinned" in v for v in rep.violations)
+    eng._alloc.take(b)                          # restore
+    _audit(eng)
+
+
+def test_chunked_prefill_engine_supports_cache(model_params, rng):
+    """Continuous-batching admission path: pins, warm hits and adoption
+    work identically through `_advance_prefill`."""
+    eng = _engine(model_params, prefill_chunk=16)
+    p = _prompt(rng, 40)
+    cold = _run_one(_engine(model_params, cache=False, prefill_chunk=16),
+                    p).output
+    r1 = _run_one(eng, p, rid=0)
+    r2 = _run_one(eng, p, rid=1)
+    assert r1.output == cold and r2.output == cold
+    assert eng.stats.cache_hits == 1
+    assert eng.stats.zero_prefill_hits == 1
+    _audit(eng)
+
+
+# ---------------------------------------------------------------------------
+# Calibration-based static heavy channels
+# ---------------------------------------------------------------------------
+
+def test_calib_salience_overrides_weight_mass(rng):
+    """`static_heavy_idx` prefers an installed ``calib_salience`` leaf over
+    the weight-derived Σ|W_k| mass; without the leaf the default holds."""
+    import jax.numpy as jnp
+
+    from repro.models.blocks import salca_params_for, static_heavy_idx
+
+    sp = salca_params_for(CFG_STATIC, MAX_SEQ)
+    hd = CFG_STATIC.resolved_head_dim
+    kv = CFG_STATIC.num_kv_heads
+    wk = jnp.asarray(rng.normal(size=(CFG_STATIC.d_model, kv, hd)),
+                     jnp.float32)
+    attn = {"wk": wk}
+    base = static_heavy_idx(attn, CFG_STATIC, sp, 1)
+    r = sp.r(hd)
+    # Salience concentrated on the LAST r channels: the calibrated set must
+    # follow it exactly, regardless of the weights.
+    sal = np.zeros((kv, hd), np.float32)
+    sal[:, -r:] = 1.0 + np.arange(r)
+    calibrated = static_heavy_idx({**attn, "calib_salience": jnp.asarray(sal)},
+                                  CFG_STATIC, sp, 1)
+    np.testing.assert_array_equal(np.asarray(calibrated[0]),
+                                  np.broadcast_to(np.arange(hd - r, hd), (kv, r)))
+    assert base.shape == calibrated.shape
+    assert not np.array_equal(np.asarray(base), np.asarray(calibrated))
+
+
+def test_calibrate_returns_new_params_and_changes_sets(model_params, rng):
+    """`api.calibrate` installs per-layer salience without mutating the
+    input tree; the calibrated static sets stay valid heavy-idx tensors."""
+    api = get_model(CFG_STATIC)
+    tokens = np.stack([_prompt(rng, 32), _prompt(rng, 32)])
+    calibrated = api.calibrate(model_params, tokens)
+    base = api.static_heavy(model_params, MAX_SEQ)
+    cal = api.static_heavy(calibrated, MAX_SEQ)
+    for grp in ("periods", "tail"):
+        for pp in model_params[grp]:
+            assert "calib_salience" not in pp.get("attn", {})
+    assert len(base) == len(cal)
+    for a, b in zip(base, cal):
+        assert a.shape == b.shape
+        bb = np.asarray(b)
+        assert (np.diff(bb, axis=-1) > 0).all()     # sorted, unique
+        assert bb.min() >= 0 and bb.max() < CFG_STATIC.resolved_head_dim
+
+
+@pytest.mark.slow
+def test_calibrated_engine_warm_hits_stay_bit_identical(model_params, rng):
+    """The persistent cache composes with calibrated sets: warm hits on a
+    calibrated engine match its own cold runs exactly."""
+    api = get_model(CFG_STATIC)
+    calibrated = api.calibrate(model_params,
+                               np.stack([_prompt(rng, 32)]))
+    p = _prompt(rng, 40)
+    cold = _run_one(ServingEngine(CFG_STATIC, calibrated, max_seq=MAX_SEQ,
+                                  slots=4, paged=True, block_size=BS,
+                                  num_blocks=20, prefix_sharing=True),
+                    p).output
+    eng = ServingEngine(CFG_STATIC, calibrated, max_seq=MAX_SEQ, slots=4,
+                        paged=True, block_size=BS, num_blocks=20,
+                        prefix_sharing=True, prefix_cache=True)
+    w1 = _run_one(eng, p, rid=0).output
+    w2 = _run_one(eng, p, rid=1).output
+    assert w1 == w2 == cold
+    assert eng.stats.zero_prefill_hits == 1
+    _audit(eng)
+
+
+# ---------------------------------------------------------------------------
+# Property suite: random visit traces through the real engine
+# ---------------------------------------------------------------------------
+
+PROMPT_POOL_LENS = (24, 33, 40, 47)
+
+
+def _trace_engine(model_params, ops, seed):
+    """Interpret (op, arg) pairs: submit-and-run one of 4 fixed prompts,
+    flush, or audit. After every op the pin invariants must hold; at the
+    end, flush + drain must leave the pool whole."""
+    rng = np.random.default_rng(seed)
+    prompts = [_prompt(rng, n) for n in PROMPT_POOL_LENS]
+    eng = _engine(model_params, num_blocks=10, slots=2)
+    rid = 0
+    for kind, a in ops:
+        kind %= 8
+        if kind < 6:                            # mostly: serve a request
+            _run_one(eng, prompts[a % len(prompts)], rid=rid)
+            rid += 1
+        elif kind == 6:
+            eng.flush_prefix_cache()
+        else:
+            pass                                # audit-only step
+        rep = eng.check_invariants()
+        assert rep.ok, rep.violations
+        for b in eng._cached:
+            assert eng._refcount[b] == 0 and b not in eng._free_blocks
+    eng.flush_prefix_cache()
+    rep = eng.check_invariants()
+    assert rep.ok, rep.violations
+    assert sorted(eng._free_blocks) == list(range(10))
+    assert (eng._refcount == 0).all()
+    assert not eng._cached and not eng._prefix_nodes
+
+
+@pytest.mark.slow
+def test_visit_traces_preserve_invariants_deterministic(model_params):
+    master = np.random.default_rng(13)
+    for _ in range(3):
+        ops = [tuple(master.integers(0, 64, 2).tolist()) for _ in range(8)]
+        _trace_engine(model_params, ops, int(master.integers(2**31)))
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=20, derandomize=True, deadline=None)
+    @given(ops=hst.lists(hst.tuples(hst.integers(0, 63), hst.integers(0, 63)),
+                         min_size=1, max_size=6),
+           seed=hst.integers(0, 3))
+    def test_visit_traces_preserve_invariants_hypothesis(model_params, ops,
+                                                         seed):
+        """Random submit/flush interleavings: pins never leak, never alias
+        the free list, and the pool drains whole."""
+        _trace_engine(model_params, ops, seed)

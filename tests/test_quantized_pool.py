@@ -284,9 +284,13 @@ def test_spill_engine_validation(model_params):
     with pytest.raises(ValueError):              # precision knob names the pool
         ServingEngine(CFG, model_params, max_seq=MAX_SEQ, slots=1,
                       kv_pool_dtype="fp16")
-    with pytest.raises(ValueError):              # radix map vs vanishing blocks
-        ServingEngine(CFG, model_params, max_seq=MAX_SEQ, slots=1, paged=True,
-                      block_size=BS, prefix_sharing=True, host_spill=True)
+    # host_spill × prefix_sharing is SUPPORTED since the persistent-cache
+    # PR: radix-published blocks are skipped by demotion while resident and
+    # may demote to the cache's host tier once unowned.
+    eng = ServingEngine(CFG, model_params, max_seq=MAX_SEQ, slots=1,
+                        paged=True, block_size=BS, prefix_sharing=True,
+                        host_spill=True)
+    assert eng.prefix_sharing and eng.host_spill
     with pytest.raises(ValueError):              # cursor block must stay hot
         ServingEngine(CFG, model_params, max_seq=MAX_SEQ, slots=1, paged=True,
                       block_size=BS, host_spill=True, spill_keep_recent=0)
